@@ -1,0 +1,77 @@
+"""Shared benchmark harness: timing, CSV output, resampler sweeps.
+
+CPU timing caveat (DESIGN.md §6.3): this container has no TPU, so absolute
+times are CPU wall-times of the jitted pure-JAX implementations.  The
+paper's *orderings* (Megopolis vs Metropolis vs C1/C2 trends across N, y,
+partition size) reproduce; the absolute GPU speedups do not transfer to a
+CPU and are additionally modelled analytically in transactions_bench.py.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OUT_DIR = os.environ.get("BENCH_OUT", os.path.join(os.path.dirname(__file__), "out"))
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall seconds of ``fn(*args)`` post-jit-warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def write_csv(name: str, rows: list[dict]) -> str:
+    path = os.path.join(ensure_out(), name)
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_table(rows: list[dict], cols: Iterable[str] | None = None):
+    if not rows:
+        return
+    cols = list(cols or rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def offsprings_for(resampler_fn, key, weights, runs: int, **kwargs) -> jnp.ndarray:
+    """int32[runs, N] offspring matrix over ``runs`` Monte Carlo resamples."""
+    n = weights.shape[0]
+
+    @jax.jit
+    def one(k):
+        anc = resampler_fn(k, weights, **kwargs)
+        return jnp.bincount(anc, length=n)
+
+    keys = jax.random.split(key, runs)
+    return jax.lax.map(one, keys)

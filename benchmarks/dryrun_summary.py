@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown from the sweep
+records (reads the incremental JSONL so partial sweeps render too).
+
+    python -m benchmarks.dryrun_summary --in experiments/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.hlo import HBM_BW, PEAK_FLOPS
+from repro.launch.memmodel import traffic_serve_bytes, traffic_train_bytes
+
+
+def load(path: str) -> list[dict]:
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(rows.values())
+
+
+def adjusted_terms(r: dict) -> dict:
+    """Fusion-aware memory term (DESIGN.md §6.6) computed post-hoc: the
+    recorded 'bytes accessed' is pre-fusion op-I/O (~30x HBM traffic)."""
+    arch = get_arch(r["arch"])
+    shape = SHAPES[r["shape"]]
+    multi = r["mesh"].startswith("2x")
+    dp = 32 if multi else 16
+    micro = max(1, min(16, shape.global_batch // dp)) if shape.kind == "train" else 1
+    if shape.kind == "train":
+        adj_bytes = traffic_train_bytes(arch.model, global_batch=shape.global_batch,
+                                        seq=shape.seq_len, micro=micro, dp=dp, tp=16)
+    else:
+        adj_bytes = traffic_serve_bytes(arch.model, batch=shape.global_batch,
+                                        seq=shape.seq_len, dp=dp, tp=16,
+                                        kind=shape.kind)
+    ro = r["roofline"]
+    t_mem_adj = adj_bytes / HBM_BW
+    t_step_adj = max(ro["t_compute_s"], t_mem_adj, ro["t_collective_s"])
+    terms = {"compute": ro["t_compute_s"], "memory": t_mem_adj,
+             "collective": ro["t_collective_s"]}
+    frac = (ro["model_flops"] / (r["chips"] * PEAK_FLOPS * t_step_adj)
+            if ro.get("model_flops") and t_step_adj else 0.0)
+    return {"t_mem_adj_s": t_mem_adj, "bottleneck_adj": max(terms, key=terms.get),
+            "roofline_frac_adj": frac}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="experiments/dryrun.jsonl")
+    args = ap.parse_args(argv)
+    rows = load(args.inp)
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    print(f"records: {len(rows)} ({len(ok)} ok, {len(fail)} failed)\n")
+
+    print("| arch | shape | mesh | kind | peak GiB/dev (backend) | TPU-proj GiB | "
+          "t_comp ms | t_mem ms (raw) | t_mem ms (adj) | t_coll ms | bottleneck(adj) "
+          "| useful | frac (raw) | frac (adj) |")
+    print("|" + "---|" * 14)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ro = r["roofline"]
+        adj = adjusted_terms(r)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+              f"| {r['bytes_per_device']['peak_estimate']/2**30:.1f} "
+              f"| {r['hbm_projected']['total']/2**30:.1f} "
+              f"| {ro['t_compute_s']*1e3:.2f} | {ro['t_memory_s']*1e3:.2f} "
+              f"| {adj['t_mem_adj_s']*1e3:.2f} "
+              f"| {ro['t_collective_s']*1e3:.2f} | {adj['bottleneck_adj']} "
+              f"| {ro['useful_flops_ratio']:.3f} | {ro['roofline_fraction']:.4f} "
+              f"| {adj['roofline_frac_adj']:.4f} |")
+    if fail:
+        print("\nfailed cells:")
+        for r in fail:
+            print(f"  {r['arch']} x {r['shape']} [{r['mesh']}]: {r.get('error','')[:100]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 10 (Appendix A): same protocol as Fig. 6 with Gamma(alpha, 1)
+weight sequences, alpha in {0.5, 2, 3, 10, 50}."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import print_table
+from benchmarks.fig6_quality_speed import run
+from repro.core.iterations import select_iterations
+from repro.core.weightgen import gamma_weights
+
+
+def _b_for_alpha(alpha: float) -> int:
+    # estimate eq. (3) B from one large sample of the gamma family
+    w = gamma_weights(jax.random.PRNGKey(0), 1 << 14, alpha)
+    return int(select_iterations(w, 0.01))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run(full=args.full, weight_gen=gamma_weights,
+               grid=(0.5, 2.0, 3.0, 10.0, 50.0), param_name="alpha",
+               csv_name="fig10.csv", b_for=_b_for_alpha)
+    print_table([r for r in rows if r["n"] == max(x["n"] for x in rows)])
+
+
+if __name__ == "__main__":
+    main()

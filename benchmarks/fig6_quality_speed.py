@@ -1,0 +1,82 @@
+"""Paper Fig. 6: MSE/N, bias contribution, execution time and speedup vs
+Megopolis for {Megopolis, Metropolis, C1-PS128, C1-PS2048, C2-PS128,
+C2-PS2048} on Gaussian-likelihood weights (eq. 12), y in {0..4}.
+
+CI scale by default (N up to 2^16, K=32); ``--full`` restores the paper's
+2^22 / K=256 regime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
+from repro.core import get_resampler
+from repro.core.iterations import gaussian_weight_iterations
+from repro.core.metrics import bias_variance
+from repro.core.weightgen import gaussian_weights
+
+ALGOS = {
+    "megopolis": ("megopolis", {}),
+    "metropolis": ("metropolis", {}),
+    "c1_ps128": ("metropolis_c1", {"partition_size_bytes": 128}),
+    "c1_ps2048": ("metropolis_c1", {"partition_size_bytes": 2048}),
+    "c2_ps128": ("metropolis_c2", {"partition_size_bytes": 128}),
+    "c2_ps2048": ("metropolis_c2", {"partition_size_bytes": 2048}),
+}
+
+
+def run(full: bool = False, weight_gen=gaussian_weights, grid=(0.0, 1.0, 2.0, 3.0, 4.0),
+        param_name: str = "y", csv_name: str = "fig6.csv", b_for=None):
+    ns = [2**e for e in ((14, 18, 22) if full else (10, 12, 14))]
+    runs = 256 if full else 16
+    seqs = 4 if full else 1
+    b_for = b_for or (lambda p: gaussian_weight_iterations(p, 0.01))
+
+    rows = []
+    for n in ns:
+        for p in grid:
+            b = int(b_for(p))
+            for name, (reg, kw) in ALGOS.items():
+                fn = get_resampler(reg)
+                mse_acc, bias_acc = 0.0, 0.0
+                for s in range(seqs):
+                    kw_w = jax.random.fold_in(jax.random.PRNGKey(17), int(p * 100) + s)
+                    w = weight_gen(kw_w, n, p)
+                    off = offsprings_for(fn, jax.random.fold_in(kw_w, 1), w,
+                                         runs, num_iters=b, **kw)
+                    var, bias_sq, total = bias_variance(off, w)
+                    mse_acc += float(total) / n
+                    bias_acc += float(bias_sq / jnp.maximum(total, 1e-30))
+                jit_fn = jax.jit(functools.partial(fn, num_iters=b, **kw))
+                w = weight_gen(jax.random.PRNGKey(3), n, p)
+                t = time_fn(lambda k: jit_fn(k, w), jax.random.PRNGKey(5),
+                            warmup=1, repeats=3)
+                rows.append({
+                    "n": n, param_name: p, "B": b, "algo": name,
+                    "mse_over_n": mse_acc / seqs,
+                    "bias_contrib": bias_acc / seqs,
+                    "time_s": t,
+                })
+    # speedup columns (relative to megopolis at same (n, p))
+    base = {(r["n"], r[param_name]): r["time_s"] for r in rows if r["algo"] == "megopolis"}
+    for r in rows:
+        r["speedup_vs_megopolis"] = base[(r["n"], r[param_name])] / r["time_s"]
+    write_csv(csv_name, rows)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run(full=args.full)
+    print_table([r for r in rows if r["n"] == max(x["n"] for x in rows)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel micro-benchmark: Pallas Megopolis (interpret mode on CPU) vs the
+bit-exact jnp oracle across sizes; validates exact equality and times the
+jitted oracle (interpret-mode timing is not a TPU number — the dry-run
+roofline covers performance, DESIGN.md §6.3)."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, time_fn, write_csv
+from repro.core.weightgen import gaussian_weights
+from repro.kernels.common import TILE
+from repro.kernels.megopolis.ops import megopolis_tpu
+from repro.kernels.megopolis.ref import megopolis_ref
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="*", default=[4096, 16384, 65536])
+    ap.add_argument("--iters", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for n in args.sizes:
+        key = jax.random.PRNGKey(n)
+        w = gaussian_weights(jax.random.fold_in(key, 9), n, 2.0)
+        anc_k = megopolis_tpu(key, w, args.iters, interpret=True)
+        # oracle: same offsets/seed derivation as the ops wrapper
+        from repro.kernels.common import key_to_seed
+        key_off, key_seed = jax.random.split(key)
+        offsets = jax.random.randint(key_off, (args.iters,), 0, n, dtype=jnp.int32)
+        seed = key_to_seed(key_seed).reshape(1)
+        anc_r = megopolis_ref(w, offsets, seed, num_iters=args.iters)
+        exact = bool(jnp.all(anc_k == anc_r))
+        t_ref = time_fn(
+            jax.jit(lambda w_, o_, s_: megopolis_ref(w_, o_, s_, num_iters=args.iters)),
+            w, offsets, seed)
+        rows.append({"n": n, "B": args.iters, "kernel_matches_ref": exact,
+                     "ref_time_s": t_ref, "tile": TILE})
+        assert exact, f"kernel/ref mismatch at n={n}"
+    write_csv("kernel_bench.csv", rows)
+    print_table(rows)
+
+
+if __name__ == "__main__":
+    main()

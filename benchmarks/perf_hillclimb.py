@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] += (" --xla_llvm_disable_expensive_passes=true"
+                            " --xla_backend_optimization_level=0")
+
+"""§Perf hillclimb driver: lower+compile VARIANTS of a cell and report the
+three roofline terms, so each hypothesis -> change -> measure iteration is
+one invocation.
+
+    python -m benchmarks.perf_hillclimb --cell qwen3-0.6b:decode_32k \
+        --variant fp8_kv --variant baseline
+
+Variants are config/plan transforms registered below; results append to
+experiments/perf_iterations.jsonl.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def _variants():
+    import jax.numpy as jnp
+
+    def baseline(arch, plan_kw):
+        return arch, plan_kw
+
+    def fp8_kv(arch, plan_kw):
+        m = dataclasses.replace(arch.model, cache_dtype=jnp.float8_e4m3fn)
+        return dataclasses.replace(arch, model=m), plan_kw
+
+    def micro(n):
+        def f(arch, plan_kw):
+            return dataclasses.replace(arch, microbatches=n), plan_kw
+        f.__name__ = f"micro{n}"
+        return f
+
+    def seg(n):  # distributed-resampler segment size (resampler cell only)
+        def f(arch, plan_kw):
+            plan_kw["segment"] = n
+            return arch, plan_kw
+        f.__name__ = f"segment{n}"
+        return f
+
+    def sched(mode):
+        def f(arch, plan_kw):
+            plan_kw["schedule"] = mode
+            return arch, plan_kw
+        f.__name__ = f"sched_{mode}"
+        return f
+
+    out = {f.__name__: f for f in (baseline, fp8_kv)}
+    for n in (1, 2, 4, 8, 16, 32):
+        out[f"micro{n}"] = micro(n)
+    for n in (32, 1024, 4096):
+        out[f"segment{n}"] = seg(n)
+    for m in ("static", "dynamic"):
+        out[f"sched_{m}"] = sched(m)
+    return out
+
+
+def run_cell_variant(cell: str, variant: str):
+    import jax
+
+    from repro.configs import SHAPES, get_arch
+    from repro.launch import hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_decode_plan, make_prefill_plan, make_train_plan
+
+    arch_name, shape_name = cell.split(":")
+    mesh = make_production_mesh()
+    plan_kw = {}
+    arch, plan_kw = _variants()[variant](get_arch(arch_name), plan_kw)
+    shape = SHAPES[shape_name]
+    maker = {"train": make_train_plan, "prefill": make_prefill_plan,
+             "decode": make_decode_plan}[shape.kind]
+    t0 = time.time()
+    plan = maker(arch, shape, mesh)
+    compiled = plan.lower().compile()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    roof = hlo.analyze(compiled, chips=mesh.devices.size, trips=plan.microbatches,
+                       model_flops=mult * arch.model.num_active_params() * tokens)
+    mem = compiled.memory_analysis()
+    rec = {
+        "cell": cell, "variant": variant, "compile_s": round(time.time() - t0, 1),
+        "peak_gib": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+        **{k: v for k, v in roof.row().items()},
+    }
+    return rec
+
+
+def run_resampler_variant(variant: str, *, n_total=16 << 20, num_iters=32):
+    """The paper's own technique at chip level: lower the distributed
+    Megopolis resample step on the 16x16 mesh and report its terms."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import make_distributed_resampler
+    from repro.launch import hlo
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    plan_kw = {"segment": 1024, "schedule": "static"}
+    _, plan_kw = _variants()[variant](None, plan_kw) if variant != "baseline" else (None, plan_kw)
+    fn = make_distributed_resampler(mesh, axis_name="data", num_iters=num_iters,
+                                    segment=plan_kw.get("segment", 1024),
+                                    schedule=plan_kw.get("schedule", "static"))
+    w = jax.ShapeDtypeStruct((n_total,), jnp.float32,
+                             sharding=NamedSharding(mesh, P("data")))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    t0 = time.time()
+    import jax.random as jr
+    key = jr.PRNGKey(0)  # concrete key (tiny)
+    compiled = fn.lower(key, w).compile()
+    roof = hlo.analyze(compiled, chips=mesh.devices.size, trips=1,
+                       model_flops=float(3 * n_total * num_iters))  # cmp+mul+sel per pair
+    rec = {"cell": f"dist_megopolis_N{n_total}_B{num_iters}", "variant": variant,
+           "compile_s": round(time.time() - t0, 1), **roof.row()}
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape, or 'resampler'")
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--out", default="experiments/perf_iterations.jsonl")
+    args = ap.parse_args(argv)
+    for v in args.variant or ["baseline"]:
+        if args.cell == "resampler":
+            rec = run_resampler_variant(v)
+        else:
+            rec = run_cell_variant(args.cell, v)
+        print(json.dumps(rec, indent=1))
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

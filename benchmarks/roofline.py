@@ -1,0 +1,67 @@
+"""§Roofline: render the three-term roofline table from dry-run JSON.
+
+The dry-run (launch/dryrun.py --all --both-meshes --out <json>) records
+per-cell cost/memory/collective analysis; this module formats the §Roofline
+table for EXPERIMENTS.md and ranks cells by bottleneck for the §Perf
+hillclimb selection.
+
+    python -m benchmarks.roofline --in experiments/dryrun.json [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import print_table, write_csv
+
+
+def rows_from(records: list[dict]) -> list[dict]:
+    rows = []
+    for r in records:
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "mesh": r.get("mesh"),
+                         "bottleneck": "FAILED", "error": r.get("error", "")[:60]})
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "kind": r["kind"],
+            "GiB/dev": round(r["bytes_per_device"]["peak_estimate"] / 2**30, 2),
+            "t_comp_ms": round(roof["t_compute_s"] * 1e3, 2),
+            "t_mem_ms": round(roof["t_memory_s"] * 1e3, 2),
+            "t_coll_ms": round(roof["t_collective_s"] * 1e3, 2),
+            "bottleneck": roof["bottleneck"],
+            "useful_ratio": round(roof["useful_flops_ratio"], 3),
+            "roofline_frac": round(roof["roofline_fraction"], 4),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="experiments/dryrun.json")
+    ap.add_argument("--md", action="store_true", help="emit a markdown table")
+    args = ap.parse_args(argv)
+    with open(args.inp) as f:
+        records = json.load(f)
+    rows = rows_from(records)
+    write_csv("roofline.csv", rows)
+    if args.md:
+        cols = list(rows[0].keys())
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "|".join("---" for _ in cols) + "|")
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    else:
+        print_table(rows)
+    ok = [r for r in rows if r["bottleneck"] != "FAILED" and r["shape"] == "train_4k"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"] or 1)
+        coll = max(ok, key=lambda r: r["t_coll_ms"])
+        print(f"\nhillclimb candidates: worst-fraction={worst['arch']}x{worst['shape']}, "
+              f"most-collective-bound={coll['arch']}x{coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip NAME ...]
+
+CI scale by default (~minutes on CPU); ``--full`` restores paper sizes.
+The dry-run / roofline pipeline is separate (launch/dryrun.py) because it
+re-initialises jax with 512 virtual devices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("transactions", "benchmarks.transactions_bench", []),
+    ("kernel", "benchmarks.kernel_bench", []),
+    ("fig6", "benchmarks.fig6_quality_speed", []),
+    ("fig7", "benchmarks.fig7_partition_sweep", []),
+    ("fig8", "benchmarks.fig8_prefix_sum", []),
+    ("fig10", "benchmarks.fig10_gamma", []),
+    ("table2", "benchmarks.table2_e2e_pf", []),
+    ("smc", "benchmarks.smc_decode_bench", ["--particles", "32", "--new-tokens", "8",
+                                            "--archs", "qwen3-0.6b"]),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument("--only", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    failures = []
+    for name, module, extra in SUITES:
+        if name in args.skip or (args.only and name not in args.only):
+            continue
+        print(f"\n======== {name} ({module}) ========")
+        t0 = time.time()
+        argv_m = list(extra) + (["--full"] if args.full and name not in ("transactions", "kernel", "smc") else [])
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(argv_m)
+            print(f"[{name}] OK in {time.time()-t0:.1f}s")
+        except SystemExit as e:
+            if e.code not in (0, None):
+                failures.append(name)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        sys.exit(1)
+    print("\nall benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

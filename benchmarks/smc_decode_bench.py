@@ -1,0 +1,38 @@
+"""SMC particle-decoding benchmark (the paper's technique as a serving
+feature, DESIGN.md §5): tokens/s and resample overhead across resamplers
+and particle counts on a smoke-scale arch; also contrasts the
+ancestor-gather cost of attention-cache vs SSM-state archs."""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import print_table, write_csv
+from repro.launch.serve import serve_once
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=["qwen3-0.6b", "mamba2-1.3b"])
+    ap.add_argument("--particles", type=int, nargs="*", default=[32, 128])
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--resamplers", nargs="*",
+                    default=["megopolis", "metropolis", "improved_systematic"])
+    args = ap.parse_args(argv)
+
+    rows = []
+    for arch in args.archs:
+        for n in args.particles:
+            for res in args.resamplers:
+                out = serve_once(arch, smoke=True, num_particles=n,
+                                 new_tokens=args.new_tokens, resampler=res)
+                rows.append({"arch": arch, "particles": n, "resampler": res,
+                             "tok_per_s": out["tok_per_s"],
+                             "num_resamples": out["num_resamples"],
+                             "decode_s": out["decode_s"]})
+    write_csv("smc_decode.csv", rows)
+    print_table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper §7 (Fig. 9 + Table 2): end-to-end SIR particle filter on the UNGM
+nonlinear system (eqs. 22-23) — mean RMSE, resample ratio, and the
+RMSE-vs-resample-ratio budget model across B.
+
+Fig. 9: B sweep for {Megopolis, Metropolis, C1-PS128, C2-PS128}.
+Table 2: B in {16, 32, 64} + the unbiased multinomial/systematic baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table, write_csv
+from repro.pf.filter import ParticleFilter, run_filter_timed, simulate
+from repro.pf.metrics import resample_ratio, rmse
+from repro.pf.models import ungm
+
+FIG9_ALGOS = {
+    "megopolis": (),
+    "metropolis": (),
+    "c1_ps128": (("partition_size_bytes", 128),),
+    "c2_ps128": (("partition_size_bytes", 128),),
+}
+_REG = {"c1_ps128": "metropolis_c1", "c2_ps128": "metropolis_c2"}
+
+
+def evaluate(algo: str, b: int, *, particles: int, steps: int, mc_runs: int,
+             kwargs=()) -> dict:
+    model = ungm()
+    errs, ratios = [], []
+    for run_i in range(mc_runs):
+        key = jax.random.PRNGKey(run_i)
+        k_sim, k_flt = jax.random.split(key)
+        xs, zs = simulate(k_sim, model, steps)
+        kw = dict(kwargs)
+        pf = ParticleFilter(model, particles, resampler=_REG.get(algo, algo),
+                            num_iters=b, resampler_kwargs=tuple(kw.items()))
+        ests, times = run_filter_timed(k_flt, pf, zs)
+        errs.append(rmse(np.asarray(ests)[None], np.asarray(xs)))
+        ratios.append(resample_ratio(times))
+    return {"algo": algo, "B": b, "rmse": float(np.mean(errs)),
+            "resample_ratio": float(np.mean(ratios))}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    particles = 1 << (20 if args.full else 13)
+    steps = 100 if args.full else 25
+    mc = 4 if not args.full else 16
+
+    # Fig. 9: B sweep
+    b_values = (5, 10, 20, 30) if not args.full else (5, 7, 10, 15, 20, 25, 30, 40)
+    fig9 = []
+    for b in b_values:
+        for algo, kw in FIG9_ALGOS.items():
+            fig9.append(evaluate(algo, b, particles=particles, steps=steps,
+                                 mc_runs=mc, kwargs=kw))
+    write_csv("fig9.csv", fig9)
+    print("== Fig. 9 (B sweep) ==")
+    print_table(fig9)
+
+    # Table 2: fixed B + unbiased baselines
+    table2 = []
+    for algo in ("multinomial", "improved_systematic"):
+        table2.append(evaluate(algo, 0, particles=particles, steps=steps, mc_runs=mc))
+    for b in (16, 32, 64):
+        for algo, kw in FIG9_ALGOS.items():
+            table2.append(evaluate(algo, b, particles=particles, steps=steps,
+                                   mc_runs=mc, kwargs=kw))
+    write_csv("table2.csv", table2)
+    print("\n== Table 2 ==")
+    print_table(table2)
+
+
+if __name__ == "__main__":
+    main()

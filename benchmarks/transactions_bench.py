@@ -1,0 +1,54 @@
+"""Paper Figs. 1-4 arithmetic: memory transactions per warp-iteration for
+each algorithm's comparison-index stream — the paper's speed argument,
+counted exactly.  Also evaluates the TPU-granularity variant (512-byte
+vector rows / 4096-byte VMEM tiles) used by the kernel adaptation."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import print_table, write_csv
+from repro.core.transactions import index_streams, transactions_per_group
+
+CASES = [
+    ("megopolis", {}),
+    ("metropolis", {}),
+    ("metropolis_c1", {"partition_size_bytes": 128}),
+    ("metropolis_c1", {"partition_size_bytes": 2048}),
+    ("metropolis_c2", {"partition_size_bytes": 128}),
+    ("metropolis_c2", {"partition_size_bytes": 2048}),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 16)
+    ap.add_argument("--iters", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for gran_name, group, seg in (("gpu_warp32_seg32B", 32, 32),
+                                  ("tpu_row128_seg512B", 128, 512)):
+        for name, params in CASES:
+            per_group = []
+            for ix in index_streams(name, 7, args.n, args.iters, **params):
+                per_group.append(transactions_per_group(
+                    ix, group=group, segment_bytes=seg))
+            t = np.concatenate(per_group)
+            label = name + (f"_ps{params['partition_size_bytes']}" if params else "")
+            rows.append({"granularity": gran_name, "algo": label,
+                         "mean_tx_per_group": float(t.mean()),
+                         "max_tx_per_group": int(t.max())})
+    write_csv("transactions.csv", rows)
+    print_table(rows)
+    gpu = {r["algo"]: r for r in rows if r["granularity"].startswith("gpu")}
+    assert gpu["megopolis"]["max_tx_per_group"] <= 4 + 1, "paper: Megopolis <= 4 + alignment"
+    print(f"\nMegopolis mean {gpu['megopolis']['mean_tx_per_group']:.2f} tx/warp "
+          f"vs Metropolis {gpu['metropolis']['mean_tx_per_group']:.2f} "
+          f"(paper: 4 vs up to 32)")
+
+
+if __name__ == "__main__":
+    main()

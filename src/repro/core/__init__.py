@@ -1,0 +1,24 @@
+# Core — the paper's primary contribution: memory-coalesced resampling.
+#
+# ``resamplers`` hosts every algorithm from the paper (Megopolis, Metropolis,
+# C1, C2) plus the prefix-sum baselines it compares against (multinomial,
+# improved systematic) and the classical extras (stratified, residual,
+# rejection).  ``distributed`` lifts Megopolis' coalescing contract to the
+# chip level with shard_map + ppermute.  ``transactions`` is the paper's
+# memory-transaction cost model (Figs. 1-4) evaluated analytically.
+
+from repro.core.resamplers import (  # noqa: F401
+    get_resampler,
+    list_resamplers,
+    megopolis,
+    metropolis,
+    metropolis_c1,
+    metropolis_c2,
+    multinomial,
+    systematic,
+    improved_systematic,
+    stratified,
+    residual,
+    rejection,
+)
+from repro.core.iterations import select_iterations  # noqa: F401

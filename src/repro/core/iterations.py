@@ -1,0 +1,42 @@
+"""Iteration-count selection for Metropolis-family resamplers (paper eq. 3).
+
+    B = ceil( log(eps) / log(1 - E(w) / max(w)) )
+
+The paper notes computing E(w) (a sum) and max(w) (a reduction) exactly is
+what Metropolis-family methods try to avoid at runtime; practitioners use a
+subsample estimate or a fixed application prior (their end-to-end benchmark
+uses the average of runtime-computed values, ~30).  Both modes live here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def select_iterations(weights: jnp.ndarray, epsilon: float = 0.01) -> jnp.ndarray:
+    """Exact eq. (3).  Returns an int32 scalar (traced-safe)."""
+    mean_w = jnp.mean(weights)
+    max_w = jnp.max(weights)
+    ratio = jnp.clip(mean_w / jnp.maximum(max_w, jnp.finfo(weights.dtype).tiny), 1e-12, 1 - 1e-7)
+    b = jnp.ceil(jnp.log(epsilon) / jnp.log1p(-ratio))
+    return jnp.maximum(b, 1).astype(jnp.int32)
+
+
+def select_iterations_subsample(
+    key: jax.Array, weights: jnp.ndarray, epsilon: float = 0.01, sample: int = 4096
+) -> jnp.ndarray:
+    """Eq. (3) from a uniform subsample — the production-mode estimator."""
+    n = weights.shape[0]
+    take = min(sample, n)
+    idx = jax.random.randint(key, (take,), 0, n)
+    return select_iterations(weights[idx], epsilon)
+
+
+def gaussian_weight_iterations(y: float, epsilon: float = 0.01) -> int:
+    """Closed form for the paper's eq. (12) weight family (§6.3):
+    max(w) = 1/sqrt(2*pi), E(w) = exp(-y^2/4)/sqrt(4*pi)."""
+    import math
+
+    ratio = math.exp(-(y**2) / 4.0) / math.sqrt(2.0)
+    return max(1, math.ceil(math.log(epsilon) / math.log(1.0 - ratio)))

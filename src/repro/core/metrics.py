@@ -1,0 +1,51 @@
+"""Resampling quality metrics (paper §5.1, eqs. 14-21).
+
+All metrics operate on offspring vectors ``o_k[i]`` = number of offspring of
+particle ``i`` in Monte Carlo run ``k`` (derived from ancestors with
+``offspring_counts``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def offspring_counts(ancestors: jnp.ndarray, n: int) -> jnp.ndarray:
+    """o[i] = #{j : ancestors[j] == i}."""
+    return jnp.bincount(ancestors, length=n)
+
+
+def expected_offspring(weights: jnp.ndarray) -> jnp.ndarray:
+    """N * w_i / sum(w) (the target of eq. 14)."""
+    n = weights.shape[0]
+    return n * weights / jnp.sum(weights)
+
+
+def squared_error(offspring: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """SE(o_k), eq. (14)."""
+    return jnp.sum((offspring - expected_offspring(weights)) ** 2)
+
+
+def mse(offsprings: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """MSE over K runs, eq. (15).  ``offsprings``: int[K, N]."""
+    target = expected_offspring(weights)
+    return jnp.mean(jnp.sum((offsprings - target) ** 2, axis=-1))
+
+
+def bias_variance(offsprings: jnp.ndarray, weights: jnp.ndarray):
+    """Decomposition eqs. (16)-(20): returns (var, bias_sq, mse).
+
+    ``offsprings``: int[K, N] over K Monte Carlo runs of one weight vector.
+    """
+    k = offsprings.shape[0]
+    target = expected_offspring(weights)
+    o_hat = jnp.mean(offsprings.astype(jnp.float32), axis=0)  # eq. 19
+    var = jnp.sum(jnp.sum((offsprings - o_hat) ** 2, axis=0) / (k - 1))  # eqs. 17/20
+    bias_sq = jnp.sum((o_hat - target) ** 2)  # eq. 18
+    return var, bias_sq, var + bias_sq  # eq. 16
+
+
+def bias_contribution(offsprings: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """||Bias||^2 / MSE, eq. (21)."""
+    var, bias_sq, total = bias_variance(offsprings, weights)
+    return bias_sq / jnp.maximum(total, 1e-30)

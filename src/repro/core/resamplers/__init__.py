@@ -1,0 +1,48 @@
+"""Resampling algorithms (the paper's Algorithms 2-5, 7, 8 + extras).
+
+Every resampler shares one signature::
+
+    ancestors = resampler(key, weights, **kwargs)   # int32[N]
+
+``ancestors[i]`` is the index of the particle replacing particle ``i``
+(the paper's ancestor formulation).  Offspring counts are
+``jnp.bincount(ancestors, length=N)``.  Weights need NOT be normalised for
+the Metropolis family (only ratios are used) nor for the prefix-sum family
+(the running total is used as the upper edge).
+"""
+
+from repro.core.resamplers.megopolis import megopolis
+from repro.core.resamplers.metropolis import metropolis, metropolis_c1, metropolis_c2
+from repro.core.resamplers.prefix_sum import (
+    multinomial,
+    systematic,
+    improved_systematic,
+    stratified,
+    residual,
+)
+from repro.core.resamplers.rejection import rejection
+
+_REGISTRY = {
+    "megopolis": megopolis,
+    "metropolis": metropolis,
+    "metropolis_c1": metropolis_c1,
+    "metropolis_c2": metropolis_c2,
+    "multinomial": multinomial,
+    "systematic": systematic,
+    "improved_systematic": improved_systematic,
+    "stratified": stratified,
+    "residual": residual,
+    "rejection": rejection,
+}
+
+
+def get_resampler(name: str):
+    """Look up a resampler by name; raises KeyError with choices on miss."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown resampler {name!r}; choices: {sorted(_REGISTRY)}") from None
+
+
+def list_resamplers():
+    return sorted(_REGISTRY)

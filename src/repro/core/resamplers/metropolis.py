@@ -1,0 +1,98 @@
+"""Metropolis resampling and its C1/C2 variants (paper Algorithms 2-4).
+
+These are the paper's baselines.  ``metropolis`` draws a fresh random
+comparison index per (particle, iteration) — the random memory access
+pattern of Fig. 2.  C1/C2 (Dülger et al.) constrain the index to a
+warp-shared random partition of ``partition_size`` weights, the paper's
+Fig. 3, trading a tuning parameter + quality for locality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WARP = 32  # threads per warp in the paper's cost model.
+
+
+def metropolis(key: jax.Array, weights: jnp.ndarray, num_iters: int) -> jnp.ndarray:
+    """Paper Algorithm 2; returns int32 ancestors."""
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+
+    def body(b, k):
+        kb = jax.random.fold_in(key, b)
+        kj, ku = jax.random.split(kb)
+        j = jax.random.randint(kj, (n,), 0, n, dtype=jnp.int32)
+        u = jax.random.uniform(ku, (n,), weights.dtype)
+        accept = u * weights[k] <= weights[j]
+        return jnp.where(accept, j, k)
+
+    return jax.lax.fori_loop(0, num_iters, body, i)
+
+
+def _partition_geometry(n: int, partition_size_bytes: int, dtype_bytes: int = 4):
+    """Paper's N_part / N_w (Algs. 3-4 lines 1-2)."""
+    n_w = max(1, partition_size_bytes // dtype_bytes)  # weights per partition
+    n_part = max(1, (n * dtype_bytes) // partition_size_bytes)
+    return n_part, n_w
+
+
+def metropolis_c1(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    partition_size_bytes: int = 128,
+    warp: int = WARP,
+) -> jnp.ndarray:
+    """Paper Algorithm 3: one shared partition per warp for ALL iterations."""
+    n = weights.shape[0]
+    n_part, n_w = _partition_geometry(n, partition_size_bytes)
+    i = jnp.arange(n, dtype=jnp.int32)
+    i_warp = i // warp
+    n_warps = (n + warp - 1) // warp
+    kp, kloop = jax.random.split(key)
+    # line 6: p ~ U{0, N_part-1} shared by the warp, chosen once.
+    p_warp = jax.random.randint(kp, (n_warps,), 0, n_part, dtype=jnp.int32)
+    p = p_warp[i_warp]
+
+    def body(b, k):
+        kb = jax.random.fold_in(kloop, b)
+        kj, ku = jax.random.split(kb)
+        j = p * n_w + jax.random.randint(kj, (n,), 0, n_w, dtype=jnp.int32)
+        j = jnp.minimum(j, n - 1)  # guard the ragged tail partition
+        u = jax.random.uniform(ku, (n,), weights.dtype)
+        accept = u * weights[k] <= weights[j]
+        return jnp.where(accept, j, k)
+
+    return jax.lax.fori_loop(0, num_iters, body, i)
+
+
+def metropolis_c2(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    partition_size_bytes: int = 128,
+    warp: int = WARP,
+) -> jnp.ndarray:
+    """Paper Algorithm 4: a fresh warp-shared partition EVERY iteration."""
+    n = weights.shape[0]
+    n_part, n_w = _partition_geometry(n, partition_size_bytes)
+    i = jnp.arange(n, dtype=jnp.int32)
+    i_warp = i // warp
+    n_warps = (n + warp - 1) // warp
+
+    def body(b, k):
+        kb = jax.random.fold_in(key, b)
+        kp, kj, ku = jax.random.split(kb, 3)
+        p_warp = jax.random.randint(kp, (n_warps,), 0, n_part, dtype=jnp.int32)
+        p = p_warp[i_warp]
+        j = p * n_w + jax.random.randint(kj, (n,), 0, n_w, dtype=jnp.int32)
+        j = jnp.minimum(j, n - 1)
+        u = jax.random.uniform(ku, (n,), weights.dtype)
+        accept = u * weights[k] <= weights[j]
+        return jnp.where(accept, j, k)
+
+    return jax.lax.fori_loop(0, num_iters, body, i)

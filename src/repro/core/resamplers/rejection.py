@@ -1,0 +1,49 @@
+"""Rejection resampling (Murray): unbiased, needs sup(w), variable time.
+
+Included because the paper positions Metropolis/Megopolis against it (§1):
+rejection is unbiased but its per-particle iteration count is a geometric
+random variable — divergent control flow on SIMD hardware.  We cap the loop
+at ``max_iters`` (exceeding it keeps the last proposal) and report the cap
+so callers can validate it is never the binding constraint in benchmarks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rejection(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int = 0,
+    *,
+    max_iters: int = 1024,
+) -> jnp.ndarray:
+    """Returns int32 ancestors.  ``num_iters`` ignored (API uniformity)."""
+    del num_iters
+    n = weights.shape[0]
+    w_max = jnp.max(weights)
+    i = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        _, done, t = state
+        return (~jnp.all(done)) & (t < max_iters)
+
+    key_init, key_loop = jax.random.split(key)
+
+    def body(state):
+        k, done, t = state
+        kt = jax.random.fold_in(key_loop, t)
+        kj, ku = jax.random.split(kt)
+        j = jax.random.randint(kj, (n,), 0, n, dtype=jnp.int32)
+        u = jax.random.uniform(ku, (n,), weights.dtype)
+        accept = (~done) & (u * w_max <= weights[j])
+        k = jnp.where(accept, j, k)
+        return k, done | accept, t + 1
+
+    # Initial proposal: particle i proposes itself (accept w.p. w_i / w_max).
+    u0 = jax.random.uniform(key_init, (n,), weights.dtype)
+    done0 = u0 * w_max <= weights[i]
+    k, _, _ = jax.lax.while_loop(cond, body, (i, done0, jnp.int32(0)))
+    return k

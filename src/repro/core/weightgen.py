@@ -1,0 +1,27 @@
+"""Weight-sequence generators for the paper's experimental regime (§5).
+
+Method 1 (Murray et al., paper eq. 12): Gaussian-likelihood weights
+``w = exp(-(x - y)^2 / 2) / sqrt(2*pi)`` with ``x ~ N(0,1)``; increasing
+``y`` concentrates weight on few particles (simulated degeneracy).
+
+Method 2 (Dülger et al., paper eq. 13): Gamma(alpha, beta=1) samples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GAUSSIAN_Y_GRID = (0.0, 1.0, 2.0, 3.0, 4.0)
+GAMMA_ALPHA_GRID = (0.5, 2.0, 3.0, 10.0, 50.0)
+
+
+def gaussian_weights(key: jax.Array, n: int, y: float, dtype=jnp.float32) -> jnp.ndarray:
+    x = jax.random.normal(key, (n,), dtype)
+    return jnp.exp(-0.5 * (x - y) ** 2) / jnp.sqrt(2.0 * jnp.pi).astype(dtype)
+
+
+def gamma_weights(
+    key: jax.Array, n: int, alpha: float, beta: float = 1.0, dtype=jnp.float32
+) -> jnp.ndarray:
+    return jax.random.gamma(key, alpha, (n,), dtype) / beta

@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLMStream, batch_specs  # noqa: F401

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  megopolis/   — the paper's contribution with tile-coalesced access
+  metropolis/  — the random-access strawman (VMEM-resident baseline)
+  prefix_sum/  — sequential-grid block scan (for multinomial/systematic)
+
+Each package ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle, bit-exact vs the kernel).
+"""
+
+from repro.kernels.megopolis.ops import megopolis_tpu  # noqa: F401
+from repro.kernels.metropolis.ops import metropolis_tpu  # noqa: F401
+from repro.kernels.prefix_sum.ops import prefix_sum_tpu  # noqa: F401

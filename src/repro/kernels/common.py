@@ -1,0 +1,93 @@
+"""Shared kernel utilities: counter-based hash RNG + tile flat-roll.
+
+Both are defined ONCE here and imported by the Pallas kernel bodies *and*
+the ``ref.py`` oracles so kernel-vs-ref comparisons are bit-exact.
+
+RNG rationale (DESIGN.md §2): the paper pays coalesced loads/stores for
+CURAND XORWOW state.  A counter-based hash (murmur3 finalizer over
+``(seed, lane, iteration)``) is stateless — zero memory traffic — and is
+TPU-friendly (integer mul/xor/shift on the VPU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# NOTE: all scalar constants below are *numpy* scalars so they inline as
+# jaxpr literals — Pallas kernel bodies may not close over device constants.
+_GOLDEN = np.uint32(0x9E3779B9)
+_LANE = 128
+_SUBLANES = 8
+TILE = _SUBLANES * _LANE  # 1024 particles per (8,128) f32 VMEM tile
+
+
+def murmur3_fmix(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer; full-avalanche integer hash."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def hash_bits(seed, lane_index, iteration) -> jnp.ndarray:
+    """uint32 stream indexed by (seed, lane, iteration) — order-free."""
+    if isinstance(iteration, (int, np.integer)):
+        # wrap in Python ints to avoid numpy overflow RuntimeWarnings
+        inc = np.uint32((int(iteration) * int(_GOLDEN)) & 0xFFFFFFFF)
+    else:
+        inc = jnp.asarray(iteration).astype(jnp.uint32) * _GOLDEN
+    if isinstance(seed, (int, np.integer)) and isinstance(inc, np.uint32):
+        s = np.uint32((int(seed) + int(inc)) & 0xFFFFFFFF)
+    else:
+        s = _as_u32(seed) + inc
+    return murmur3_fmix(murmur3_fmix(s) ^ (lane_index.astype(jnp.uint32) * _GOLDEN))
+
+
+def _as_u32(x):
+    if isinstance(x, (int, np.integer)):
+        return np.uint32(x)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def hash_uniform(seed, lane_index, iteration, dtype=jnp.float32) -> jnp.ndarray:
+    """U[0,1) with 24 bits of mantissa entropy."""
+    bits = hash_bits(seed, lane_index, iteration)
+    return (bits >> np.uint32(8)).astype(dtype) * (1.0 / (1 << 24))
+
+
+def hash_randint(seed, lane_index, iteration, bound) -> jnp.ndarray:
+    """uint32 in [0, bound) via modulo (bias < 2^-20 for bound <= 2^12)."""
+    return (hash_bits(seed, lane_index, iteration) % _as_u32(bound)).astype(jnp.int32)
+
+
+def flat_roll(x: jnp.ndarray, shift) -> jnp.ndarray:
+    """Roll a (rows, 128) tile by ``shift`` in FLAT row-major order:
+    ``out.flat[p] = x.flat[(p + shift) % size]``.
+
+    Decomposed into two row-rolls + two lane-rolls + a lane-mask select so
+    every constituent op is a register-level vector rotate (the in-VMEM
+    analogue of the paper's intra-segment wrap, Alg. 5 line 10).
+    """
+    rows, lanes = x.shape
+    shift = jnp.asarray(shift) % (rows * lanes)
+    a = shift // lanes
+    b = shift % lanes
+    hi = jnp.roll(x, -a, axis=0)  # rows shifted by floor(shift/lanes)
+    lo = jnp.roll(x, -(a + 1), axis=0)  # .. and one further for wrapped lanes
+    hi = jnp.roll(hi, -b, axis=1)
+    lo = jnp.roll(lo, -b, axis=1)
+    col = lax.broadcasted_iota(jnp.int32, (rows, lanes), 1)
+    return jnp.where(col < (lanes - b).astype(jnp.int32), hi, lo)
+
+
+def key_to_seed(key) -> jnp.ndarray:
+    """Derive a uint32 seed from a JAX PRNG key (stable, documented)."""
+    import jax
+
+    data = jax.random.key_data(key).astype(jnp.uint32)
+    return murmur3_fmix(data[..., 0] ^ (data[..., 1] * _GOLDEN))

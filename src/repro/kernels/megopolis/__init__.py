@@ -1,0 +1,2 @@
+from repro.kernels.megopolis.ops import megopolis_tpu  # noqa: F401
+from repro.kernels.megopolis.ref import megopolis_ref  # noqa: F401

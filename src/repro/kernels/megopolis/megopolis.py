@@ -1,0 +1,107 @@
+"""Megopolis resampling — Pallas TPU kernel (the paper's Alg. 5, TPU-native).
+
+Memory-access contract (DESIGN.md §2):
+
+  * particle weights live in HBM as ``f32[R, 128]`` (R = N/128 rows);
+  * the coalescing segment is one (8, 128) f32 VMEM tile (SEG = 1024
+    particles, the TPU analogue of the paper's 32-thread warp segment);
+  * grid = (num_tiles, B), iteration axis innermost.  For grid step
+    (t, b) the *comparison* block index is computed from a scalar-prefetched
+    offset table: ``(t + o[b] // SEG) mod num_tiles`` — so every load the
+    kernel ever issues is a whole, aligned, contiguous tile (the paper's
+    Fig. 4b "wrapped sequential" pattern, 0 wasted words);
+  * the intra-segment wrap ``(i + o[b]) mod SEG`` is a register-level flat
+    roll of the tile — no extra memory traffic;
+  * per-(particle, iteration) uniforms come from a stateless counter hash
+    (no CURAND state loads/stores — beyond-paper win, see EXPERIMENTS §Perf);
+  * the current ancestor's weight ``w[k]`` is carried by VALUE in a VMEM
+    scratch accumulator (never re-fetched), exactly like the register-carried
+    ``w_k`` in the CUDA original.
+
+Validated in ``interpret=True`` mode bit-exactly against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import TILE, flat_roll, hash_uniform
+
+SUBLANES = 8
+LANES = 128
+SEG = TILE  # 1024 particles = one (8,128) f32 tile
+
+
+def _kernel(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
+    """Grid step (t, b): one accept/reject sweep of tile t at iteration b."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    o = offsets_ref[b]
+    seed = seed_ref[0]
+
+    row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
+    col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+    lane = row * LANES + col  # position p within the tile
+    i_global = t * SEG + lane  # particle index (Alg. 5 line 5)
+
+    @pl.when(b == 0)
+    def _init():
+        k_ref[...] = i_global  # k <- i           (Alg. 5 line 6)
+        wk_ref[...] = w_own_ref[...]  # w[k] by value (register carry)
+
+    n_total = pl.num_programs(0) * SEG
+    # j = i_aligned + o_aligned + (i + o) mod SEG   (Alg. 5 lines 7-11)
+    # block fetch already applied i_aligned + o_aligned; flat-roll applies
+    # the intra-segment wrap.
+    w_j = flat_roll(w_cmp_ref[...], o % SEG)
+    o_aligned = o - (o % SEG)
+    j_global = (t * SEG + o_aligned + (i_global + o) % SEG) % n_total
+
+    u = hash_uniform(seed, i_global, b, dtype=w_j.dtype)
+    accept = u * wk_ref[...] <= w_j  # u <= w[j]/w[k]  (line 13)
+    k_ref[...] = jnp.where(accept, j_global, k_ref[...])
+    wk_ref[...] = jnp.where(accept, w_j, wk_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas(
+    weights2d: jnp.ndarray,
+    offsets: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call. ``weights2d``: f32[R, 128] with R % 8 == 0;
+    ``offsets``: int32[B]; ``seed``: uint32[1].  Returns int32[R, 128]."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    def _cmp_index(t, b, offs, seed):
+        # aligned block chosen by the shared offset (wraps mod num_tiles)
+        return (t + offs[b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # offsets + seed live in SMEM, prefetched
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            # own tile: block index constant in b -> fetched once per t
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
+            pl.BlockSpec((SUBLANES, LANES), _cmp_index),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(offsets, seed, weights2d, weights2d)

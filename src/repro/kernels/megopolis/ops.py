@@ -1,0 +1,43 @@
+"""Public jit'd wrapper for the Megopolis TPU kernel.
+
+Accepts the same ``(key, weights, num_iters)`` signature as the reference
+resamplers in ``repro.core``.  Alignment contract: ``N % 1024 == 0`` (one
+f32 VMEM tile); production particle counts are powers of two well above
+this (the paper sweeps 2^6..2^22), and the wrapper raises a clear error
+otherwise rather than silently padding (padding would perturb the
+uniform-offset distribution over [0, N)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import TILE, key_to_seed
+from repro.kernels.megopolis.megopolis import LANES, megopolis_pallas
+
+
+def megopolis_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Resample with the Pallas Megopolis kernel; returns int32[N] ancestors.
+
+    ``interpret=True`` (default here) runs the kernel body on CPU for
+    validation; pass ``interpret=False`` on real TPU hardware.
+    """
+    n = weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu requires N % {TILE} == 0 (one f32 VMEM tile); got N={n}. "
+            "Use repro.core.megopolis for unaligned N."
+        )
+    key_off, key_seed = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
+    seed = key_to_seed(key_seed).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    k2 = megopolis_pallas(w2, offsets, seed, num_iters=num_iters, interpret=interpret)
+    return k2.reshape(n)

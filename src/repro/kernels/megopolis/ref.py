@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Megopolis Pallas kernel — bit-exact.
+
+Mirrors the kernel's arithmetic (same hash RNG, same SEG=1024 index map,
+same value-carried ``w[k]``) without any Pallas machinery.  The *quality*
+of this variant (MSE/bias) is separately validated against the
+``jax.random``-based ``repro.core.megopolis`` in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.resamplers.megopolis import megopolis_indices
+from repro.kernels.common import TILE, hash_uniform
+
+SEG = TILE  # 1024 — must match the kernel
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def megopolis_ref(
+    weights: jnp.ndarray,
+    offsets: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+) -> jnp.ndarray:
+    """int32[N] ancestors; must equal the kernel output exactly."""
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    seed = jnp.asarray(seed).reshape(-1)[0]
+
+    def body(b, state):
+        k, wk = state
+        j = megopolis_indices(i, offsets[b], SEG, n).astype(jnp.int32)
+        w_j = weights[j]
+        u = hash_uniform(seed, i, b, dtype=weights.dtype)
+        accept = u * wk <= w_j
+        return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
+
+    k, _ = jax.lax.fori_loop(0, num_iters, body, (i, weights))
+    return k

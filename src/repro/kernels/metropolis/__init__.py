@@ -1,0 +1,2 @@
+from repro.kernels.metropolis.ops import metropolis_tpu  # noqa: F401
+from repro.kernels.metropolis.ref import metropolis_ref  # noqa: F401

@@ -1,0 +1,84 @@
+"""Metropolis resampling — Pallas TPU kernel (the paper's Alg. 2 strawman).
+
+A faithful port of Metropolis needs a random per-(particle, iteration)
+gather over the FULL weight array: the uncoalesced pattern of the paper's
+Fig. 2.  On TPU the only way to honour those semantics is to keep the whole
+weight array VMEM-resident and gather in-register, which caps N at the VMEM
+budget (~1M f32 = 4 MB comfortably).  That cap is itself the finding: the
+random-access algorithm does not scale on TPU, while Megopolis streams
+aligned tiles from HBM at any N.  The benchmark suite reports this next to
+the transaction-model numbers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import hash_bits, hash_uniform
+
+SUBLANES = 8
+LANES = 128
+SEG = SUBLANES * LANES
+
+
+def _kernel(seed_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    seed = seed_ref[0]
+
+    row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
+    col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+    i_global = t * SEG + row * LANES + col
+
+    @pl.when(b == 0)
+    def _init():
+        k_ref[...] = i_global
+        wk_ref[...] = w_own_ref[...]
+
+    n_total = w_full_ref.shape[0] * LANES
+    # Alg. 2 line 5: j ~ U{0, N-1} per (particle, iteration) — random gather.
+    j = (hash_bits(seed, i_global, b) % jnp.uint32(n_total)).astype(jnp.int32)
+    w_flat = w_full_ref[...].reshape(n_total)
+    w_j = jnp.take(w_flat, j.reshape(-1), axis=0).reshape(SUBLANES, LANES)
+
+    u = hash_uniform(seed, i_global + n_total, b, dtype=w_j.dtype)
+    accept = u * wk_ref[...] <= w_j
+    k_ref[...] = jnp.where(accept, j, k_ref[...])
+    wk_ref[...] = jnp.where(accept, w_j, wk_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas(
+    weights2d: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            # whole weight array resident (the uncoalesced strawman's cost)
+            pl.BlockSpec((rows, LANES), lambda t, b, seed: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(seed, weights2d, weights2d)

@@ -1,0 +1,34 @@
+"""Public wrapper for the Metropolis TPU kernel (VMEM-resident strawman)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import TILE, key_to_seed
+from repro.kernels.metropolis.metropolis import LANES, metropolis_pallas
+
+# Weights must stay VMEM-resident for the random gather; cap N (DESIGN.md §2).
+MAX_VMEM_PARTICLES = 1 << 20
+
+
+def metropolis_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n = weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(f"metropolis_tpu requires N % {TILE} == 0; got {n}")
+    if n > MAX_VMEM_PARTICLES:
+        raise ValueError(
+            f"metropolis_tpu random-gather kernel caps N at {MAX_VMEM_PARTICLES} "
+            "(whole weight array must be VMEM-resident) — the scaling wall the "
+            "paper's coalescing removes. Use megopolis_tpu."
+        )
+    seed = key_to_seed(key).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    k2 = metropolis_pallas(w2, seed, num_iters=num_iters, interpret=interpret)
+    return k2.reshape(n)

@@ -1,0 +1,33 @@
+"""Pure-jnp bit-exact oracle for the Metropolis Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import hash_bits, hash_uniform
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def metropolis_ref(
+    weights: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+) -> jnp.ndarray:
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    seed = jnp.asarray(seed).reshape(-1)[0]
+
+    def body(b, state):
+        k, wk = state
+        j = (hash_bits(seed, i, b) % jnp.uint32(n)).astype(jnp.int32)
+        w_j = weights[j]
+        u = hash_uniform(seed, i + n, b, dtype=weights.dtype)
+        accept = u * wk <= w_j
+        return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
+
+    k, _ = jax.lax.fori_loop(0, num_iters, body, (i, weights))
+    return k

@@ -1,0 +1,2 @@
+from repro.kernels.prefix_sum.ops import prefix_sum_tpu  # noqa: F401
+from repro.kernels.prefix_sum.ref import prefix_sum_ref  # noqa: F401

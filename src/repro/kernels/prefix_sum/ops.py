@@ -1,0 +1,16 @@
+"""Public wrapper: 1-D inclusive prefix sum via the block-scan kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import TILE
+from repro.kernels.prefix_sum.prefix_sum import LANES, prefix_sum_pallas
+
+
+def prefix_sum_tpu(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    n = x.shape[0]
+    if n % TILE != 0:
+        raise ValueError(f"prefix_sum_tpu requires N % {TILE} == 0; got {n}")
+    y2 = prefix_sum_pallas(x.reshape(n // LANES, LANES), interpret=interpret)
+    return y2.reshape(n)

@@ -1,0 +1,53 @@
+"""Inclusive prefix sum — Pallas TPU kernel (block scan + sequential carry).
+
+Backs the prefix-sum resamplers (multinomial Alg. 7, systematic Alg. 8)
+the paper compares against in §6.5.  The TPU grid is sequential, so the
+cross-block carry is a single SMEM scalar threaded through grid steps —
+no second pass, no atomics (contrast the GPU's Blelloch two-phase scan).
+
+The f32 numerical-instability story the paper tells (§1) is reproducible
+with this kernel: summing 2^22 weights in f32 loses ~2-3 digits vs f64,
+which is what inflates multinomial/systematic bias at large N (Fig. 8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUBLANES = 8
+LANES = 128
+SEG = SUBLANES * LANES
+
+
+def _kernel(x_ref, y_ref, carry_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[0] = jnp.zeros((), x_ref.dtype)
+
+    flat = x_ref[...].reshape(SEG)
+    local = jnp.cumsum(flat)
+    y_ref[...] = (local + carry_ref[0]).reshape(SUBLANES, LANES)
+    carry_ref[0] = carry_ref[0] + local[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_sum_pallas(x2d: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    rows, lanes = x2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+    return pl.pallas_call(
+        _kernel,
+        grid=(num_tiles,),
+        in_specs=[pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x2d.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), x2d.dtype)],
+        interpret=interpret,
+    )(x2d)

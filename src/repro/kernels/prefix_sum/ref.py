@@ -1,0 +1,9 @@
+"""Oracle for the prefix-sum kernel: plain jnp.cumsum."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def prefix_sum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(x)

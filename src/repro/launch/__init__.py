@@ -1,0 +1,4 @@
+# Launch layer: production meshes, dry-run compiler, train/serve drivers.
+# NOTE: importing this package must NOT touch jax device state (mesh
+# construction is behind functions) — dryrun.py sets XLA_FLAGS before any
+# jax import and only works if nothing initialised devices earlier.

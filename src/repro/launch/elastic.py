@@ -1,0 +1,51 @@
+"""Elastic re-meshing: restore a checkpoint onto a DIFFERENT topology.
+
+Resharding is a pure function of (checkpoint, new mesh): the manifest
+stores logical shapes only; ``reshard_state`` re-derives PartitionSpecs for
+the new mesh from the same config and ``jax.device_put``s each restored
+host array.  Combined with the hash-based data stream (whose shard slices
+are position-independent, data/synthetic.py) an elastic restart needs no
+coordination beyond agreeing on the new mesh.
+
+    state, step = elastic_restore(ckpt_dir, cfg, new_mesh)
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import restore_checkpoint
+from repro.launch.sharding import fsdp_axes, model_pspecs
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw_init, opt_state_pspecs
+
+
+def state_pspecs(cfg: ModelConfig, mesh, *, fsdp: bool = True, zero1: bool = True,
+                 moment_dtype=np.float32):
+    pspecs = model_pspecs(cfg, mesh, fsdp=fsdp)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    axes, size = fsdp_axes(mesh) if "data" in mesh.axis_names else (None, 1)
+    opt = opt_state_pspecs(pspecs, shapes, data_axis=axes or "data",
+                           data_size=size, zero1=zero1)
+    return {"params": pspecs, "opt": opt}
+
+
+def reshard_state(host_state, cfg: ModelConfig, mesh, **kw):
+    """Place restored host arrays onto ``mesh`` with freshly derived specs."""
+    specs = state_pspecs(cfg, mesh, **kw)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, host_state, specs,
+                        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))
+
+
+def elastic_restore(ckpt_dir: str, cfg: ModelConfig, mesh, *, template, **kw):
+    """Restore the latest checkpoint and reshard it for ``mesh``.
+    Returns (sharded_state, next_step)."""
+    host, manifest = restore_checkpoint(ckpt_dir, template=template)
+    state = reshard_state(host, cfg, mesh, **kw)
+    return state, int(manifest["extra"].get("next_step", manifest["step"]))

@@ -1,0 +1,198 @@
+"""Compiled-HLO analysis: collective byte accounting + roofline terms.
+
+Semantics verified empirically on this jax/XLA build (see DESIGN.md §6):
+
+  * ``compiled.cost_analysis()`` reports the PER-DEVICE program cost under
+    SPMD (flops of a 2M^3 matmul sharded 8-ways comes back as 2M^3/8);
+  * collective ops in ``compiled.as_text()`` carry the RESULT type but not
+    inline operand types (``%ar = f32[1024,1024]{1,0} all-reduce(%dot)``),
+    so operand bytes are derived from the result type + group size:
+        all-reduce / all-to-all / collective-permute: operand = result
+        all-gather:      operand = result / group     (gather dim grows)
+        reduce-scatter:  operand = result * group     (scatter dim shrinks)
+
+Two byte totals are kept:
+  * ``operand`` — the assignment-literal "sum of operand sizes";
+  * ``wire``    — per-chip link traffic under ring algorithms
+    (all-reduce 2x(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g of
+    the full payload, permute 1x) — used for the roofline collective term.
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (fixed by the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_RESULT_RE = re.compile(
+    r"=\s+(\(?[a-z0-9_\[\]{},\s]*?\)?)\s+("
+    + "|".join(_COLLECTIVES)
+    + r")(-start)?\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
+
+
+def _shape_list_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+def collective_bytes(hlo_text: str, *, default_group: int = 1) -> Dict[str, dict]:
+    """Per-opcode {operand, wire, count} byte totals for one chip's program."""
+    out = {k: {"operand": 0.0, "wire": 0.0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _RESULT_RE.search(line)
+        if not m:
+            continue
+        result_bytes = _shape_list_bytes(m.group(1))
+        op = m.group(2)
+        is_start = m.group(3) == "-start"
+        if is_start and op in ("all-gather", "collective-permute", "all-reduce"):
+            # -start results are (operand, result[, ...]) tuples; the true
+            # output is the largest-or-equal entry — take result as half for
+            # ag (operand+output) conservatively handled below.
+            shapes = [_shape_list_bytes(s) for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", m.group(1))]
+            if op == "all-gather" and len(shapes) >= 2:
+                result_bytes = max(shapes)
+            elif shapes:
+                result_bytes = shapes[-1]
+        g = _group_size(line, default_group)
+        if op == "all-gather":
+            operand = result_bytes / g
+            wire = result_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            operand = result_bytes * g
+            wire = operand * (g - 1) / g
+        elif op == "all-reduce":
+            operand = result_bytes
+            wire = 2.0 * result_bytes * (g - 1) / g
+        elif op == "all-to-all":
+            operand = result_bytes
+            wire = result_bytes * (g - 1) / g
+        else:  # collective-permute
+            operand = result_bytes
+            wire = result_bytes
+        out[op]["operand"] += operand
+        out[op]["wire"] += wire
+        out[op]["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled cell.  All inputs are PER-CHIP
+    (cost_analysis semantics verified above); times are seconds per step."""
+
+    flops: float  # per-chip HLO FLOPs
+    hbm_bytes: float  # per-chip HLO bytes accessed
+    coll_wire_bytes: float  # per-chip ICI traffic (ring model)
+    coll_operand_bytes: float  # assignment-literal operand sum
+    chips: int
+    trips: int = 1  # scan-trip multiplier (microbatch loop bodies count once)
+    model_flops: float = 0.0  # global 6*N*D useful-work reference
+    coll_detail: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.trips * self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.trips * self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # v5e 2D torus: collectives stream over ~3 usable link-pairs per
+        # chip for ring schedules on one axis; keep 1 link (worst case,
+        # conservative) — noted in EXPERIMENTS.md.
+        return self.trips * self.coll_wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs — remat/redundancy waste detector."""
+        total = self.trips * self.flops * self.chips
+        return (self.model_flops / total) if (self.model_flops and total) else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Optimistic perfect-overlap bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful FLOPs over chip-seconds at peak under the step_time bound
+        (the MFU-style number §Perf hillclimbs)."""
+        if not self.model_flops:
+            return 0.0
+        t = self.step_time
+        return self.model_flops / (self.chips * PEAK_FLOPS * t) if t else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops_per_chip": self.trips * self.flops,
+            "hbm_bytes_per_chip": self.trips * self.hbm_bytes,
+            "coll_wire_bytes_per_chip": self.trips * self.coll_wire_bytes,
+            "coll_operand_bytes_per_chip": self.trips * self.coll_operand_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_ratio,
+            "step_time_s": self.step_time,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, *, chips: int, trips: int = 1, model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    detail = collective_bytes(compiled.as_text())
+    wire = sum(v["wire"] for v in detail.values())
+    operand = sum(v["operand"] for v in detail.values())
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_wire_bytes=wire,
+                    coll_operand_bytes=operand, chips=chips, trips=trips,
+                    model_flops=model_flops, coll_detail=detail)

@@ -1,0 +1,162 @@
+"""Analytic TPU-projected HBM model per cell.
+
+``memory_analysis()`` on the XLA *CPU* backend is scheduler-pessimistic:
+its list scheduler is memory-oblivious, so (a) rematerialisation does not
+reduce reported liveness (measured: a 16-layer checkpointed MLP chain
+reports MORE temp with remat than without — DESIGN.md §6.6) and (b) every
+layer's backward residuals count as simultaneously live.  On the TPU
+backend the memory-aware scheduler honours remat; this module projects the
+per-chip HBM a TPU run needs, from first principles, and the dry-run
+reports BOTH numbers.
+
+Model (train):
+    params(f32)/shards + compute-copy bf16 (dense: /tp; experts stay 2-D
+    sharded) + moments + grad accumulator + L x per-layer activation
+    checkpoint (one microbatch) + transient working set (largest layer's
+    fwd+bwd live buffers, ~4x the biggest score/ffn block).
+Decode/prefill: params + caches + transients.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig
+
+
+def _layer_transient_train(cfg: ModelConfig, rows: int, seq: int, tp: int) -> float:
+    """Peak transient bytes of ONE layer's fwd+bwd (f32 scores dominate)."""
+    heads_loc = max(1, cfg.num_heads // tp)
+    if cfg.window > 0:
+        kspan = min(seq, 2 * cfg.window)
+        qspan = min(seq, max(cfg.window, 128))
+    else:
+        kspan = seq
+        qspan = min(seq, cfg.q_chunk)
+    scores = rows * heads_loc * qspan * kspan * 4.0  # f32 scores
+    probs = scores  # f32 probs
+    ffn = rows * seq * max(cfg.ff_dense, cfg.d_ff) // tp * 4.0
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        chunk = cfg.ssm_chunk
+        nchunks = max(1, seq // max(chunk, 1))
+        h_loc = max(1, (d_inner // max(cfg.ssm_head_dim, 1)) // tp)
+        ssd = rows * h_loc * nchunks * chunk * chunk * 4.0  # decay blocks
+        ffn = max(ffn, ssd)
+    return 4.0 * max(scores + probs, ffn)
+
+
+def projected_train_bytes(cfg: ModelConfig, *, global_batch: int, seq: int,
+                          micro: int, dp: int, tp: int,
+                          moment_bytes: int = 4) -> dict:
+    n = cfg.num_params()
+    n_dense = n - _expert_params(cfg)
+    shards = dp * tp
+    rows = max(1, global_batch // micro // dp)
+    out = {
+        "params_f32": 4.0 * n / shards,
+        "compute_bf16": 2.0 * n_dense / tp + (2.0 * _expert_params(cfg) / shards),
+        "moments": 2.0 * moment_bytes * n / shards,
+        "grad_accum_f32": 4.0 * n / shards,
+        "act_checkpoints": cfg.num_layers * rows * seq * cfg.d_model * 2.0,
+        "transient": _layer_transient_train(cfg, rows, seq, tp),
+        "logits_chunk": rows * min(cfg.loss_chunk, seq) * cfg.vocab_size // tp * 4.0 * 2,
+    }
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def _expert_params(cfg: ModelConfig) -> int:
+    if not cfg.is_moe:
+        return 0
+    n_moe_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+    return n_moe_layers * cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+
+
+def traffic_train_bytes(cfg: ModelConfig, *, global_batch: int, seq: int,
+                        micro: int, dp: int, tp: int) -> float:
+    """Fusion-aware per-chip HBM TRAFFIC per train step (bytes moved, not
+    op-I/O).  cost_analysis' "bytes accessed" counts every HLO op's
+    operands+results as if nothing fused — a ~30x overcount on this CPU
+    backend; this model counts what a fused TPU program actually moves:
+
+      weights  : read fwd + read bwd + grad write  (3 passes) per microbatch
+      activs   : ~6 passes of the (rows, S, D) residual stream per layer
+      scores   : ~4 passes of the f32 score block (banded for SWA)
+      logits   : 3 passes of the (rows, chunk, V/tp) f32 chunk per seq chunk
+      states   : optimizer read+write (f32 params + 2 moments)
+    """
+    n = cfg.num_params()
+    n_exp = _expert_params(cfg)
+    n_dense = n - n_exp
+    rows = max(1, global_batch // micro // dp)
+    l = cfg.num_layers
+    weights = 3.0 * (2.0 * n_dense / tp + 2.0 * n_exp / (dp * tp))
+    act = 6.0 * l * rows * seq * cfg.d_model * 2.0
+    heads_loc = max(1, cfg.num_heads // tp)
+    kspan = min(seq, 2 * cfg.window) if cfg.window else seq
+    scores = 4.0 * l * rows * heads_loc * seq * kspan * 4.0
+    logits = 3.0 * rows * seq * cfg.vocab_size / tp * 4.0
+    opt = (4.0 + 2 * 4.0) * 2.0 * n / (dp * tp)  # r+w of f32 params + moments
+    return micro * (weights + act + scores + logits) + opt
+
+
+def traffic_serve_bytes(cfg: ModelConfig, *, batch: int, seq: int, dp: int,
+                        tp: int, kind: str) -> float:
+    """Fusion-aware per-chip HBM traffic for one prefill or decode step."""
+    rows = max(1, batch // dp)
+    l = cfg.num_layers
+    n_active = cfg.num_active_params()
+    cdt = 1.0  # cache dtype bytes handled by cfg.cache_dtype? default bf16=2
+    cache_bytes = 0.0
+    for i, k in enumerate(cfg.layer_kinds):
+        if k == "mamba":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            hloc = max(1, (d_inner // max(cfg.ssm_head_dim, 1)) // tp)
+            cache_bytes += rows * hloc * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+        else:
+            ring = seq if (k != "swa" or cfg.window == 0) else min(seq, cfg.window)
+            kv_shard = tp if (cfg.num_kv_heads % tp == 0 or cfg.head_dim % tp == 0) else 1
+            cache_bytes += 2.0 * rows * ring * cfg.num_kv_heads * cfg.head_dim * 2.0 / kv_shard
+    if kind == "decode":
+        weights = 2.0 * n_active / tp  # every active weight read once/token
+        return weights + cache_bytes  # full cache read + O(1) write
+    # prefill: fwd-only train-like traffic
+    heads_loc = max(1, cfg.num_heads // tp)
+    kspan = min(seq, 2 * cfg.window) if cfg.window else seq
+    return (2.0 * (cfg.num_params() - _expert_params(cfg)) / tp
+            + 2.0 * _expert_params(cfg) / (dp * tp)
+            + 3.0 * l * rows * seq * cfg.d_model * 2.0
+            + 2.0 * l * rows * heads_loc * seq * kspan * 4.0
+            + cache_bytes)
+
+
+def projected_serve_bytes(cfg: ModelConfig, *, batch: int, seq: int, dp: int,
+                          tp: int, fsdp: bool, kind: str) -> dict:
+    n = cfg.num_params()
+    param_shards = (dp * tp) if fsdp else tp
+    # caches: per layer KV (ring for swa) or SSM state; sharded over
+    # min(batch, dp) * kv-shardable tp factor
+    kv_bytes = 0.0
+    for i, k in enumerate(cfg.layer_kinds):
+        if k == "mamba":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            kv_bytes += batch * (d_inner * cfg.ssm_state * 4.0 + 3 * 4 * d_inner * 2.0)
+        else:
+            ring = seq if (k != "swa" or cfg.window == 0) else min(seq, cfg.window)
+            kv_bytes += 2.0 * batch * ring * cfg.num_kv_heads * cfg.head_dim * 2.0
+    cache_shards = dp * (tp if (cfg.num_kv_heads % tp == 0 or cfg.head_dim % tp == 0) else 1)
+    rows = max(1, batch // dp)
+    if kind == "prefill":
+        trans = _layer_transient_train(cfg, rows, seq, tp) / 4.0
+    else:
+        heads_loc = max(1, cfg.num_heads // tp)
+        trans = 4.0 * rows * heads_loc * seq * 4.0  # decode scores f32 (q=1)
+    out = {
+        "compute_bf16": 2.0 * n / param_shards,
+        "caches": kv_bytes / cache_shards,
+        "transient": trans,
+    }
+    out["total"] = float(sum(out.values()))
+    return out

@@ -1,0 +1,65 @@
+"""Sharding assembly: param FSDP transform + per-cell state shardings.
+
+``param_pspecs`` (models/transformer.py) gives the Megatron TP layout.
+``fsdp_pspecs`` then shards each tensor's FIRST free divisible dim over the
+``data`` axis (2-D sharding, MaxText-style ``fsdp``), which is what lets a
+400B-param arch fit 16 GB/chip HBM at 256 chips: params split over all 256
+chips instead of 16.  XLA SPMD inserts the per-layer all-gather
+automatically; with remat the re-gather in the backward pass is the
+standard FSDP traffic pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, init_params, param_pspecs
+
+
+def _with_fsdp(spec: P, shape, fsdp_axis: str, fsdp_size: int) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if len(shape) < 2:  # keep small vectors (norms, biases) replicated
+        return P(*parts)
+    for d, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and dim % fsdp_size == 0 and dim >= fsdp_size:
+            parts[d] = fsdp_axis
+            return P(*parts)
+    return P(*parts)
+
+
+def fsdp_pspecs(pspec_tree, shape_tree, *, fsdp_axis: str = "data", fsdp_size: int = 16):
+    return jax.tree.map(
+        lambda s, sh: _with_fsdp(s, sh.shape, fsdp_axis, fsdp_size),
+        pspec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def fsdp_axes(mesh):
+    """FSDP shards over every non-'model' axis — hierarchical across pods
+    on the multi-pod mesh (2x the param/optimizer shards; what lets the
+    400B arch fit 16 GiB chips at 2 pods, EXPERIMENTS.md §Dry-run)."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return (axes if len(axes) > 1 else axes[0]), size
+
+
+def model_pspecs(cfg: ModelConfig, mesh, *, fsdp: bool = True):
+    """Final param PartitionSpec tree for ``mesh`` (TP + optional FSDP)."""
+    specs = param_pspecs(cfg)
+    if fsdp and "data" in mesh.axis_names:
+        shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        axes, size = fsdp_axes(mesh)
+        specs = fsdp_pspecs(specs, shapes, fsdp_axis=axes, fsdp_size=size)
+    return specs
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )

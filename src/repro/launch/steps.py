@@ -1,0 +1,318 @@
+"""Per-cell step builders: (arch x shape x mesh) -> jitted fn + input specs.
+
+Every dry-run cell, benchmark and driver goes through ``plan_cell`` so the
+shardings, microbatching and input ShapeDtypeStructs are defined in exactly
+one place.
+
+Cell kinds:
+  * ``train``   — ``train_step(state, batch)``: microbatch-scanned grads
+                  (memory), AdamW(+ZeRO-1), donated state.
+  * ``prefill`` — ``prefill_step(params, inputs)``: full-seq forward that
+                  returns last-token logits + populated decode caches.
+  * ``decode``  — ``serve_step(params, caches, tokens, pos)``: one new token
+                  against a ``seq_len``-deep cache (the assigned decode_32k /
+                  long_500k cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeSpec, SHAPES, get_arch
+from repro.launch.mesh import batch_axes, dp_degree
+from repro.launch.sharding import fsdp_axes, model_pspecs, named
+from repro.models import (
+    ModelConfig,
+    cache_pspecs,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    decode_step,
+)
+from repro.models import partitioning
+from repro.models.mamba2 import mamba_dims
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_pspecs
+
+# Decode keeps params TP-only while they fit (FSDP all-gather per token is
+# pure overhead); archs whose bf16 params exceed this per-chip budget at
+# TP16 get 2-D sharding even at decode.
+DECODE_FSDP_BYTES = 8 << 30
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: ArchSpec
+    shape: ShapeSpec
+    mesh: Any
+    kind: str
+    fn: Callable  # jitted, ready to .lower(*specs)
+    in_specs: tuple  # ShapeDtypeStructs (sharded) for .lower()
+    microbatches: int = 1
+    notes: str = ""
+
+    def lower(self):
+        return self.fn.lower(*self.in_specs)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _token_specs(cfg: ModelConfig, mesh, rows: int, seq: int, row_spec):
+    if cfg.embeds_input:
+        return _sds((rows, seq, cfg.d_model), cfg.dtype, mesh, P(*row_spec, None, None))
+    return _sds((rows, seq), jnp.int32, mesh, P(*row_spec, None))
+
+
+def _rules_for(cfg: ModelConfig, mesh, kind: str, *, batch_shardable: bool = True,
+               context_parallel: bool = False) -> dict:
+    """Logical-axis map for one cell (see models/partitioning.py).
+
+    Head/TP divisibility decides attention strategy:
+      * num_heads % tp == 0   -> Megatron head sharding;
+      * otherwise             -> sequence-TP for train/prefill (q_seq over
+                                 'model'), head_dim sharding for decode.
+    KV heads shard over 'model' only when they divide tp (else Megatron-GQA
+    replication; danube replicates the cache entirely — 120 head_dim).
+    """
+    tp = int(mesh.shape["model"])
+    baxes = batch_axes(mesh)
+    heads_div = cfg.num_heads % tp == 0
+    kv_div = cfg.num_kv_heads % tp == 0
+    hd_div = cfg.head_dim % tp == 0
+    d_inner, ssm_heads, _ = mamba_dims(cfg)
+    r = dict(
+        batch=baxes if batch_shardable else None,
+        seq=None,
+        embed=None,
+        vocab="model",
+        attn_out="model" if heads_div else None,
+        d_inner="model" if d_inner % tp == 0 else None,
+        ssm_heads="model" if (cfg.ssm_head_dim and ssm_heads % tp == 0) else None,
+    )
+    if kind == "decode":
+        r.update(
+            heads="model" if (heads_div and kv_div) else None,
+            kv_heads="model" if kv_div else None,
+            head_dim="model" if (not kv_div and hd_div) else None,
+            q_seq=None,
+            kv_seq="data" if context_parallel else None,
+        )
+    else:
+        r.update(
+            heads="model" if heads_div else None,
+            q_seq=None if heads_div else "model",
+            kv_heads="model" if kv_div else None,
+            head_dim=None,
+            kv_seq=None,
+        )
+    return r
+
+
+def _params_specs(cfg: ModelConfig, mesh, *, fsdp: bool):
+    pspecs = model_pspecs(cfg, mesh, fsdp=fsdp)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = jax.tree.map(
+        lambda sh, sp: _sds(sh.shape, sh.dtype, mesh, sp),
+        shapes,
+        pspecs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    return specs, pspecs
+
+
+# ------------------------------------------------------------------ train
+def make_train_plan(arch: ArchSpec, shape: ShapeSpec, mesh) -> CellPlan:
+    cfg = arch.model
+    dp = dp_degree(mesh)
+    baxes = batch_axes(mesh)
+    baxes_t = baxes if isinstance(baxes, tuple) else (baxes,)
+    gb = shape.global_batch
+    # microbatches: arch ask, bounded so each microbatch still spans DP
+    micro = min(arch.microbatches, max(1, gb // dp))
+    rows = gb // micro
+    assert rows * micro == gb and rows % dp == 0, (gb, micro, dp)
+
+    param_specs, pspecs = _params_specs(cfg, mesh, fsdp=True)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    f_axes, f_size = fsdp_axes(mesh)
+    opt_pspecs = opt_state_pspecs(
+        pspecs, shapes, data_axis=f_axes, data_size=f_size, zero1=True
+    )
+    moment_dtype = jnp.dtype(arch.moment_dtype)
+    opt_shapes = jax.eval_shape(functools.partial(adamw_init, moment_dtype=moment_dtype), shapes)
+    opt_specs = jax.tree.map(
+        lambda sh, sp: _sds(sh.shape, sh.dtype, mesh, sp),
+        opt_shapes,
+        opt_pspecs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    state_specs = {"params": param_specs, "opt": opt_specs}
+
+    # batch arrives pre-split: (micro, rows, S) — axis 1 sharded over DP
+    if cfg.embeds_input:
+        inp = _sds((micro, rows, shape.seq_len, cfg.d_model), cfg.dtype, mesh,
+                   P(None, baxes, None, None))
+    else:
+        inp = _sds((micro, rows, shape.seq_len), jnp.int32, mesh, P(None, baxes, None))
+    tgt = _sds((micro, rows, shape.seq_len), jnp.int32, mesh, P(None, baxes, None))
+    batch_specs = {"inputs": inp, "targets": tgt}
+
+    opt_cfg = AdamWConfig(moment_dtype=arch.moment_dtype)
+    rules_kw = _rules_for(cfg, mesh, "train")
+
+    def train_step(state, batch):
+        with partitioning.rules(mesh, **rules_kw):
+            return _train_step_body(state, batch)
+
+    def _train_step_body(state, batch):
+        params = state["params"]
+        # Weights-stationary compute copy: cast the f32 master params to the
+        # compute dtype ONCE, on their sharded layout, before any use.  The
+        # FSDP all-gather then moves bf16 (half the wire bytes) and happens
+        # once per STEP, not once per layer use — the gathered compute
+        # weights resident per chip are 2N/tp bytes, which fits every dense
+        # arch (expert weights never gather at all: moe_sharded contracts
+        # them 2-D-sharded with activation psums instead).
+        params_c = jax.tree.map(
+            lambda w: w.astype(cfg.dtype) if w.ndim >= 2 else w, params)
+
+        def loss_of(p, mb):
+            return loss_fn(p, cfg, mb)
+
+        if micro == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = jax.value_and_grad(loss_of)(params_c, mb)
+        else:
+            def body(carry, mb):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params_c, mb)
+                return (l_acc + l, jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), batch)
+            inv = 1.0 / micro
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(jax.tree.map(lambda s: s.sharding, state_specs),
+                      jax.tree.map(lambda s: s.sharding, batch_specs)),
+        out_shardings=(jax.tree.map(lambda s: s.sharding, state_specs), None),
+        donate_argnums=(0,),
+    )
+    return CellPlan(arch, shape, mesh, "train", fn, (state_specs, batch_specs),
+                    microbatches=micro,
+                    notes=f"micro={micro} rows/micro={rows} fsdp=on zero1=on "
+                          f"moments={arch.moment_dtype}")
+
+
+# ---------------------------------------------------------------- prefill
+def make_prefill_plan(arch: ArchSpec, shape: ShapeSpec, mesh) -> CellPlan:
+    cfg = arch.model
+    baxes = batch_axes(mesh)
+    param_specs, _ = _params_specs(cfg, mesh, fsdp=_decode_needs_fsdp(cfg, mesh))
+    # baxes may itself be a tuple (('pod','data')) — it is ONE dim entry
+    inp = _token_specs(cfg, mesh, shape.global_batch, shape.seq_len, (baxes,))
+
+    rules_kw = _rules_for(cfg, mesh, "prefill")
+
+    def prefill_step(params, inputs):
+        with partitioning.rules(mesh, **rules_kw):
+            logits, caches = prefill(params, cfg, inputs, shape.seq_len)
+            return logits, caches
+
+    cspecs = cache_pspecs(cfg, batch_axis=baxes, model_axis_size=int(mesh.shape["model"]))
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(jax.tree.map(lambda s: s.sharding, param_specs),
+                      inp.sharding),
+        out_shardings=(NamedSharding(mesh, P(baxes, "model")), named(mesh, cspecs)),
+    )
+    return CellPlan(arch, shape, mesh, "prefill", fn, (param_specs, inp))
+
+
+# ----------------------------------------------------------------- decode
+def _decode_needs_fsdp(cfg: ModelConfig, mesh) -> bool:
+    n_bytes = 2 * cfg.num_params()  # bf16
+    return n_bytes / int(mesh.shape["model"]) > DECODE_FSDP_BYTES
+
+
+def make_decode_plan(arch: ArchSpec, shape: ShapeSpec, mesh) -> CellPlan:
+    cfg = arch.model
+    dp = dp_degree(mesh)
+    baxes = batch_axes(mesh)
+    b = shape.global_batch
+    fsdp = _decode_needs_fsdp(cfg, mesh)
+    param_specs, _ = _params_specs(cfg, mesh, fsdp=fsdp)
+
+    if b % dp == 0 and b >= dp:
+        batch_axis, seq_axis = baxes, None  # decode_32k: shard the batch
+    else:
+        batch_axis, seq_axis = None, "data"  # long_500k (B=1): context parallel
+
+    cspecs = cache_pspecs(cfg, batch_axis=batch_axis, seq_axis=seq_axis,
+                          model_axis_size=int(mesh.shape["model"]))
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len))
+    cache_sds = jax.tree.map(
+        lambda sh, sp: _sds(sh.shape, sh.dtype, mesh, sp),
+        cache_shapes,
+        cspecs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    tok = _token_specs(cfg, mesh, b, 1, (batch_axis,))
+    pos = _sds((), jnp.int32, mesh, P())
+
+    rules_kw = _rules_for(cfg, mesh, "decode",
+                          batch_shardable=seq_axis is None,
+                          context_parallel=seq_axis is not None)
+
+    def serve_step(params, caches, tokens, pos):
+        with partitioning.rules(mesh, **rules_kw):
+            logits, caches = decode_step(params, cfg, tokens, caches, pos)
+            # greedy argmax keeps the cell self-contained; samplers live in smc/
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, logits, caches
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            jax.tree.map(lambda s: s.sharding, param_specs),
+            jax.tree.map(lambda s: s.sharding, cache_sds),
+            tok.sharding,
+            pos.sharding,
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(batch_axis)),
+            NamedSharding(mesh, P(batch_axis, "model")),
+            jax.tree.map(lambda s: s.sharding, cache_sds),
+        ),
+        donate_argnums=(1,),
+    )
+    return CellPlan(arch, shape, mesh, "decode", fn,
+                    (param_specs, cache_sds, tok, pos),
+                    notes=f"fsdp={'on' if fsdp else 'off'} "
+                          f"cache={'batch' if seq_axis is None else 'seq(context-parallel)'}-sharded")
+
+
+def plan_cell(arch_name: str, shape_name: str, mesh) -> CellPlan:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_train_plan(arch, shape, mesh)
+    if shape.kind == "prefill":
+        return make_prefill_plan(arch, shape, mesh)
+    return make_decode_plan(arch, shape, mesh)

@@ -1,0 +1,11 @@
+from repro.models.transformer import (  # noqa: F401
+    ModelConfig,
+    init_params,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    param_pspecs,
+    cache_pspecs,
+)

@@ -1,0 +1,153 @@
+"""GQA attention: training/prefill (q-chunked, exact) + cached decode.
+
+Supports RoPE, qk-norm (Qwen3/Chameleon), sliding windows (Gemma3 local
+layers, H2O-Danube, Llama4 chunked-local), and grouped KV heads.  The
+query-chunked formulation keeps the per-layer score temp at
+``B * H * chunk * S`` (exact softmax per chunk — chunking over q only needs
+no running rescale) and unrolls as a python loop so the dry-run's
+``cost_analysis`` counts every FLOP (DESIGN.md §6.4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_linear, init_rmsnorm, linear, rmsnorm
+from repro.models.partitioning import logical
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 6)
+    hd = cfg.head_dim
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.num_heads * hd),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.num_kv_heads * hd),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.num_kv_heads * hd),
+        "wo": init_linear(ks[3], cfg.num_heads * hd, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = linear(p["wq"], x, x.dtype).reshape(b, s, cfg.num_heads, hd)
+    k = linear(p["wk"], x, x.dtype).reshape(b, s, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], x, x.dtype).reshape(b, s, cfg.num_kv_heads, hd)
+    # logical constraints (launch/steps.py rules): "heads" -> 'model' when
+    # num_heads % tp == 0, else None + "q_seq" -> 'model' (sequence-TP
+    # attention, e.g. llama4's 40 heads on 16-way TP); "kv_heads" -> 'model'
+    # only when kv heads divide tp (else replicated, Megatron-GQA style).
+    q = logical(q, "batch", "q_seq", "heads", "head_dim")
+    k = logical(k, "batch", None, "kv_heads", "head_dim")
+    v = logical(v, "batch", None, "kv_heads", "head_dim")
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_mask(q_pos, k_pos, window: int):
+    """(..., q, k) additive mask: causal + optional sliding window."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        causal &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(causal, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q (b,qs,Hq,hd), k/v (b,ks,Hkv,hd), mask (qs,ks) additive f32.
+
+    KV heads are expanded to the full head count before the einsums: the
+    flat-head layout keeps every contraction GSPMD-shardable (the grouped
+    (Hkv, g) reshape does NOT factor when Hq is tp-sharded but Hkv < tp,
+    and GSPMD silently replicates).  FLOPs are identical; the expansion is
+    a broadcast the compiler fuses.
+    """
+    b, qs, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = logical(k, "batch", "kv_seq", "heads", "head_dim")
+    v = logical(v, "batch", "kv_seq", "heads", "head_dim")
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32)
+    scores = scores * (hd**-0.5) + mask
+    scores = logical(scores, "batch", "heads", "q_seq", "kv_seq")
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(dtype), v)
+    return out.reshape(b, qs, hq * hd)
+
+
+def attention(p, cfg, x, positions, *, window: int = 0, q_chunk: int = 4096):
+    """Exact causal (optionally windowed) attention; returns (out, (k, v)).
+
+    Sliding-window layers are BANDED: each q chunk only sees the k range
+    ``[chunk_lo - window + 1, chunk_hi)`` — compute and score-buffer size
+    drop from O(S^2) to O(S * window), which is what makes gemma3's 62-layer
+    5:1-SWA stack fit and is counted as real FLOP savings in §Roofline.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    k_pos = positions[0] if positions.ndim == 2 else positions  # (s,)
+
+    if window > 0:
+        # banded chunks: cap the chunk at >= 4096 so a 62-layer SWA stack
+        # doesn't unroll into thousands of attention blocks (compile cost);
+        # the k-span per chunk stays O(chunk + window) — still sub-quadratic
+        q_chunk = min(q_chunk, max(window, 4096))
+    chunks = []
+    n_chunks = max(1, (s + q_chunk - 1) // q_chunk)
+    for ci in range(n_chunks):
+        lo = ci * q_chunk
+        hi = min(s, lo + q_chunk)
+        klo = max(0, lo - window + 1) if window > 0 else 0
+        mask = _scores_mask(k_pos[lo:hi], k_pos[klo:hi], window)
+        chunks.append(_sdpa(q[:, lo:hi], k[:, klo:hi], v[:, klo:hi], mask, x.dtype))
+    out = jnp.concatenate(chunks, axis=1) if len(chunks) > 1 else chunks[0]
+    out = logical(out, "batch", "q_seq", "attn_out")
+    return linear(p["wo"], out, x.dtype), (k, v)
+
+
+def decode_attention(p, cfg, x, cache_kv, pos, *, window: int = 0):
+    """One-token decode: x (b,1,D), ring cache k/v (b,L,Hkv,hd), pos scalar.
+
+    The cache is a ring of length ``L``: position ``p`` lives in slot
+    ``p % L`` (for full-attention layers L = max_seq so the ring is the
+    plain cache; for sliding-window layers L = window so memory stays
+    O(window) even at 500k context).  Slot ``j`` therefore holds absolute
+    position ``pos - ((pos - j) mod L)`` — masked when negative or outside
+    the window.  Returns (out (b,1,D), updated cache).
+    """
+    b = x.shape[0]
+    k_cache, v_cache = cache_kv
+    ring = k_cache.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    slot = jnp.mod(pos, ring)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0)
+    )
+    k_cache = logical(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_cache = logical(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    j = jnp.arange(ring, dtype=jnp.int32)
+    k_pos = pos - jnp.mod(pos - j, ring)  # absolute position held by slot j
+    valid = k_pos >= 0
+    if window > 0:
+        valid &= (pos - k_pos) < window
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, L)
+    out = _sdpa(q, k_cache.astype(x.dtype), v_cache.astype(x.dtype), mask, x.dtype)
+    return linear(p["wo"], out, x.dtype), (k_cache, v_cache)

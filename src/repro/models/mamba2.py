@@ -1,0 +1,222 @@
+"""Mamba2 / SSD (state-space duality) block — chunked train + recurrent decode.
+
+Follows the ``ssd_minimal`` formulation of the Mamba2 paper (arXiv:2405.21060):
+intra-chunk quadratic attention-like einsums + inter-chunk state recurrence.
+The recurrence runs as ``lax.associative_scan`` (log-depth, fully unrolled in
+HLO so the dry-run's cost_analysis counts it — DESIGN.md §6.4).
+
+Block layout (G=1 state group), with SEPARATE input projections so each
+lands on a clean tensor-parallel partition (z/x/dt sharded over heads on the
+``model`` axis; the small B/C state projections replicated):
+
+    z  = x W_z   (d_inner, gate)        x_in = x W_x  (d_inner)
+    B  = x W_b   (N)                    C    = x W_c  (N)
+    dt = x W_dt  (heads)
+    causal depthwise conv (width 4) on x_in / B / C separately
+    SSD over heads with per-head decay A; gated RMSNorm; out_proj
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, init_rmsnorm, linear, rmsnorm
+from repro.models.partitioning import logical
+
+CONV_WIDTH = 4
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, heads, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "in_z": init_linear(ks[0], d, d_inner),
+        "in_x": init_linear(ks[1], d, d_inner),
+        "in_b": init_linear(ks[2], d, n),
+        "in_c": init_linear(ks[3], d, n),
+        "in_dt": init_linear(ks[4], d, heads),
+        "conv_x": {"w": jax.random.normal(ks[5], (CONV_WIDTH, d_inner), jnp.float32) * 0.2,
+                   "b": jnp.zeros((d_inner,), jnp.float32)},
+        "conv_b": {"w": jax.random.normal(ks[6], (CONV_WIDTH, n), jnp.float32) * 0.2,
+                   "b": jnp.zeros((n,), jnp.float32)},
+        "conv_c": {"w": jax.random.normal(ks[7], (CONV_WIDTH, n), jnp.float32) * 0.2,
+                   "b": jnp.zeros((n,), jnp.float32)},
+        "a_log": jnp.log(jnp.linspace(1.0, float(heads), heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": init_linear(ks[8], d_inner, d),
+    }
+
+
+def _segsum(x):
+    """(..., l) -> (..., l, l) lower-tri cumulative segment sums."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _ssd_chunked(x, log_da, b_ssm, c_ssm, chunk: int):
+    """x (b,s,h,p) pre-scaled by dt; log_da (b,s,h); b/c (b,s,n).
+    Returns y (b,s,h,p) f32 and final state (b,h,p,n) f32."""
+    bsz, s, h, p = x.shape
+    n = b_ssm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xc = x.reshape(bsz, c, chunk, h, p)
+    ac = log_da.reshape(bsz, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    bc = b_ssm.reshape(bsz, c, chunk, n)
+    cc = c_ssm.reshape(bsz, c, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # (b,h,c,l)
+
+    # 1. intra-chunk (diagonal blocks)
+    decay = jnp.exp(_segsum(ac))  # (b,h,c,l,l)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, decay, xc, preferred_element_type=jnp.float32
+    )
+
+    # 2. per-chunk input -> end-of-chunk state
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (b,h,c,l)
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn", bc, decay_states, xc, preferred_element_type=jnp.float32
+    )
+
+    # 3. inter-chunk recurrence H_{c+1} = H_c * exp(sum a_c) + states_c
+    #    (associative scan -> log-depth, fully unrolled HLO)
+    chunk_decay = jnp.exp(a_cum[..., -1]).transpose(0, 2, 1)  # (b,c,h)
+
+    def combine(lhs, rhs):
+        a1, s1 = lhs
+        a2, s2 = rhs
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    _, s_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, states.astype(jnp.float32)), axis=1
+    )
+    final_state = s_scan[:, -1]  # (b,h,p,n)
+    h_prev = jnp.concatenate([jnp.zeros_like(s_scan[:, :1]), s_scan[:, :-1]], axis=1)
+
+    # 4. carried state -> output contribution
+    state_decay_out = jnp.exp(a_cum)  # (b,h,c,l)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", cc, h_prev, state_decay_out, preferred_element_type=jnp.float32
+    )
+
+    return (y_diag + y_off).reshape(bsz, s, h, p), final_state
+
+
+def _causal_conv(seq, conv_p):
+    """Depthwise causal conv, width CONV_WIDTH.  seq (b,s,c)."""
+    w, b = conv_p["w"], conv_p["b"]
+    pad = jnp.pad(seq, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1]] * w[i][None, None, :].astype(seq.dtype)
+        for i in range(CONV_WIDTH)
+    )
+    return jax.nn.silu(out + b.astype(seq.dtype))
+
+
+def mamba_block(p, cfg, x, *, chunk: int = 256):
+    """Training/prefill forward.  x (b,s,D) -> (y (b,s,D), cache)."""
+    bsz, s, _ = x.shape
+    d_inner, heads, n = mamba_dims(cfg)
+    z = logical(linear(p["in_z"], x, x.dtype), "batch", "seq", "d_inner")
+    xin_raw = logical(linear(p["in_x"], x, x.dtype), "batch", "seq", "d_inner")
+    b_raw = logical(linear(p["in_b"], x, x.dtype), "batch", "seq", None)
+    c_raw = logical(linear(p["in_c"], x, x.dtype), "batch", "seq", None)
+    dt = logical(linear(p["in_dt"], x, jnp.float32), "batch", "seq", "ssm_heads")
+
+    xin = _causal_conv(xin_raw, p["conv_x"])
+    b_ssm = _causal_conv(b_raw, p["conv_b"])
+    c_ssm = _causal_conv(c_raw, p["conv_c"])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (b,s,h)
+    a = -jnp.exp(p["a_log"])  # (h,)
+    log_da = dt * a
+    xh = xin.reshape(bsz, s, heads, cfg.ssm_head_dim)
+    xh = logical(xh, "batch", "seq", "ssm_heads", None)
+    x_scaled = xh.astype(jnp.float32) * dt[..., None]
+
+    # pad seq to a chunk multiple with identity steps (decay exp(0)=1, zero
+    # input) — state- and output-exact, then slice back
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x_scaled, log_da = zpad(x_scaled), zpad(log_da)
+        b_pad, c_pad = zpad(b_ssm.astype(jnp.float32)), zpad(c_ssm.astype(jnp.float32))
+    else:
+        b_pad, c_pad = b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+    y, final_state = _ssd_chunked(x_scaled, log_da, b_pad, c_pad, chunk)
+    y = y[:, :s]
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = logical(y.reshape(bsz, s, d_inner).astype(x.dtype), "batch", "seq", "d_inner")
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    take = CONV_WIDTH - 1
+    cache = {
+        "conv_x": xin_raw[:, -take:, :].astype(x.dtype),
+        "conv_b": b_raw[:, -take:, :].astype(x.dtype),
+        "conv_c": c_raw[:, -take:, :].astype(x.dtype),
+        "ssm": final_state,
+    }
+    return linear(p["out_proj"], y, x.dtype), cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    d_inner, heads, n = mamba_dims(cfg)
+    take = CONV_WIDTH - 1
+    return {
+        "conv_x": jnp.zeros((batch, take, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, take, n), dtype),
+        "conv_c": jnp.zeros((batch, take, n), dtype),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def _conv_step(window, conv_p):
+    """window (b,W,c) -> conv output at the last position (b,c)."""
+    w = conv_p["w"].astype(window.dtype)
+    return jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + conv_p["b"].astype(window.dtype))
+
+
+def mamba_decode_step(p, cfg, x, cache):
+    """One-token decode.  x (b,1,D) -> (y (b,1,D), cache')."""
+    bsz = x.shape[0]
+    d_inner, heads, n = mamba_dims(cfg)
+    z = linear(p["in_z"], x, x.dtype)
+    xin_raw = linear(p["in_x"], x, x.dtype)
+    b_raw = linear(p["in_b"], x, x.dtype)
+    c_raw = linear(p["in_c"], x, x.dtype)
+    dt = linear(p["in_dt"], x, jnp.float32)
+
+    win_x = jnp.concatenate([cache["conv_x"], xin_raw], axis=1)
+    win_b = jnp.concatenate([cache["conv_b"], b_raw], axis=1)
+    win_c = jnp.concatenate([cache["conv_c"], c_raw], axis=1)
+    xin = _conv_step(win_x, p["conv_x"])
+    b_ssm = _conv_step(win_b, p["conv_b"])
+    c_ssm = _conv_step(win_c, p["conv_c"])
+
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"])  # (b,h)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (b,h)
+    xh = xin.reshape(bsz, heads, cfg.ssm_head_dim).astype(jnp.float32)
+    bx = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], b_ssm.astype(jnp.float32))
+    ssm = cache["ssm"] * da[..., None, None] + bx
+    y = jnp.einsum("bhpn,bn->bhp", ssm, c_ssm.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    cache = {"conv_x": win_x[:, 1:], "conv_b": win_b[:, 1:], "conv_c": win_c[:, 1:], "ssm": ssm}
+    return linear(p["out_proj"], y, x.dtype), cache

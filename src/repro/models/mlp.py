@@ -1,0 +1,38 @@
+"""Feed-forward variants: SwiGLU (llama/qwen/dbrx), GeGLU (gemma),
+squared-ReLU (nemotron), GELU (musicgen/chameleon-style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+GATED = {"swiglu", "geglu"}
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": init_linear(ks[0], d_model, d_ff),
+        "w_out": init_linear(ks[1], d_ff, d_model),
+    }
+    if mlp_type in GATED:
+        p["w_gate"] = init_linear(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp(p, x, mlp_type: str):
+    h = linear(p["w_in"], x, x.dtype)
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(linear(p["w_gate"], x, x.dtype)) * h
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(linear(p["w_gate"], x, x.dtype)) * h
+    elif mlp_type == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type}")
+    return linear(p["w_out"], h, x.dtype)

@@ -1,0 +1,231 @@
+"""Mixture-of-Experts: sort-based top-k dispatch (MegaBlocks-lite).
+
+Dispatch avoids the GShard dense one-hot einsum (whose FLOPs scale with
+``T * E * C`` and would swamp the roofline accounting) in favour of
+sort + bounded-capacity scatter/gather:
+
+  1. router logits -> top-k (expert, gate) per token;
+  2. flatten (T*k) assignments, argsort by expert id;
+  3. position-within-expert via exclusive counts; drop beyond capacity
+     ``C = ceil(T * k / E) * capacity_factor`` (standard token dropping);
+  4. scatter tokens into an (E, C, D) buffer, grouped-GEMM both MLP
+     matmuls as ``(E,C,D) x (E,D,F)`` einsums, gather back weighted by the
+     gate.
+
+With experts sharded over the ``model`` axis this lowers to an all-to-all
+of the (E, C, D) buffer (expert parallelism).  DBRX (16e top-4) and
+Llama4-Maverick (128e top-1 + shared expert) both route through here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import partitioning
+from repro.models.layers import init_linear, linear
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_moe(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": init_linear(ks[0], d, e),
+        "w1": {"w": jax.random.normal(ks[1], (e, d, f), jnp.float32) * (d**-0.5)},
+        "w3": {"w": jax.random.normal(ks[3], (e, d, f), jnp.float32) * (d**-0.5)},
+        "w2": {"w": jax.random.normal(ks[2], (e, f, d), jnp.float32) * (f**-0.5)},
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(
+            jax.random.fold_in(key, 7), d, cfg.d_ff * cfg.num_shared_experts, cfg.mlp_type
+        )
+    return p
+
+
+def moe(p, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (B, S, D).  Token-dropping top-k routing.
+
+    Under a partitioning-rules context with a tensor-parallel axis that
+    divides num_experts, dispatch runs through ``moe_sharded`` (shard_map
+    expert parallelism); otherwise the single-device sort-based path below.
+    """
+    if partitioning.tp_size() > 1 and cfg.num_experts % partitioning.tp_size() == 0:
+        return moe_sharded(p, cfg, x, capacity_factor=capacity_factor)
+    return _moe_local(p, cfg, x, capacity_factor=capacity_factor)
+
+
+def _moe_local(p, cfg, x, *, capacity_factor: float = 1.25):
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    x2 = x.reshape(t, d)
+
+    logits = linear(p["router"], x2, jnp.float32)  # (T, E) in f32
+    gates, eids = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+
+    flat_e = eids.reshape(t * k)  # expert of assignment a
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gates.reshape(t * k)
+
+    order = jnp.argsort(flat_e)  # group assignments by expert
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    gate_sorted = flat_gate[order]
+
+    counts = jnp.bincount(flat_e, length=e)  # tokens per expert
+    starts = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]  # slot in expert
+
+    # decode-sized batches (few tokens) dispatch DROPLESS: capacity-based
+    # token dropping is a throughput/memory trade for training-scale T, but
+    # at decode it makes cached serving diverge from the full forward
+    capacity = (t * k if t <= 256
+                else int(max(1, (t * k + e - 1) // e) * capacity_factor))
+    keep = pos < capacity
+
+    # scatter into (E, C, D); dropped tokens contribute nothing
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    safe_pos = jnp.where(keep, pos, 0)
+    buf = buf.at[e_sorted, safe_pos].add(
+        jnp.where(keep[:, None], x2[tok_sorted], 0).astype(x.dtype)
+    )
+
+    # grouped GEMMs (expert-parallel under pjit: E sharded over 'model')
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"]["w"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"]["w"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"]["w"].astype(x.dtype))
+
+    # gather back + weighted combine over the k assignments
+    y_tok = y[e_sorted, safe_pos] * jnp.where(keep, gate_sorted, 0)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(y_tok)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(p["shared"], x2, cfg.mlp_type)
+    return out.reshape(b, s, d)
+
+
+def moe_sharded(p, cfg, x, *, capacity_factor: float = 1.25):
+    """Expert-parallel MoE dispatch, shard_map over ('model', 'data').
+
+    Design (DESIGN.md §5): activations are replicated across 'model' (the
+    TP invariant at block entry), experts are sharded across 'model'.  Each
+    shard routes the SAME local-DP tokens, keeps only the assignments that
+    land on ITS experts, grouped-GEMMs them, and the combine is one
+    ``psum`` over 'model' — byte-identical to the all-reduce a dense TP MLP
+    needs, so expert parallelism costs no extra collective class (no
+    all-to-all on the ICI).  Token dropping per expert matches the local
+    path: capacity = ceil(t*k/E)*factor.
+
+    Expert weights are additionally sharded over 'data' on their d/f dim
+    (2-D expert sharding) and are contracted SHARDED: the grouped GEMMs run
+    on the local d- (resp. f-) slice and the partial products psum over
+    'data'.  Unlike FSDP weight-gathering this never materialises a full
+    expert tensor (132 GiB-arch fits 16 GiB chips) and the wire cost scales
+    with the per-microbatch activations, not the weights.
+
+    GSPMD cannot shard the sort-based dispatch (data-dependent scatter
+    destinations force replication — measured 64 GiB/chip buffers on dbrx);
+    shard_map states the locality explicitly.
+    """
+    st = partitioning._current()
+    mesh, bax = st["mesh"], st["map"].get("batch")
+    e, k = cfg.num_experts, cfg.top_k
+    tp = int(mesh.shape["model"])
+    e_loc = e // tp
+    d_model, d_ff = cfg.d_model, cfg.d_ff
+    # FSDP dim of the expert weights spans every non-'model' axis
+    # (hierarchical pod+data on the multi-pod mesh)
+    f_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp = 1
+    for a in f_axes:
+        dp *= int(mesh.shape[a])
+    f_axes = f_axes if len(f_axes) > 1 else (f_axes[0] if f_axes else None)
+    shard2d = dp > 1 and d_model % dp == 0 and d_ff % dp == 0
+    w_spec = P("model", f_axes, None) if shard2d else P("model", None, None)
+
+    def local(router_w, w1, w3, w2, x_loc):
+        b, s, d = x_loc.shape
+        t = b * s
+        x2 = x_loc.reshape(t, d)
+        logits = (x2.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (t, E)
+        gates, eids = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(gates, axis=-1).astype(x_loc.dtype)
+
+        my_lo = jax.lax.axis_index("model").astype(jnp.int32) * e_loc
+        flat_e = eids.reshape(t * k).astype(jnp.int32)
+        flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+        flat_gate = gates.reshape(t * k)
+        mine = (flat_e >= my_lo) & (flat_e < my_lo + e_loc)
+        local_e = jnp.where(mine, flat_e - my_lo, e_loc)  # e_loc = drop bucket
+
+        order = jnp.argsort(local_e)
+        e_sorted = local_e[order]
+        tok_sorted = flat_tok[order]
+        gate_sorted = flat_gate[order]
+        counts = jnp.bincount(local_e, length=e_loc + 1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+
+        capacity = (t * k if t <= 256  # dropless at decode (see _moe_local)
+                    else int(max(1, -(-t * k // e)) * capacity_factor))
+        keep = (pos < capacity) & (e_sorted < e_loc)
+        safe_e = jnp.minimum(e_sorted, e_loc - 1)
+        safe_pos = jnp.where(keep, pos, 0)
+
+        buf = jnp.zeros((e_loc, capacity, d), x_loc.dtype)
+        buf = buf.at[safe_e, safe_pos].add(
+            jnp.where(keep[:, None], x2[tok_sorted], 0).astype(x_loc.dtype)
+        )
+        if shard2d:
+            # 2-D contraction: slice the FULL-d token buffer down to this
+            # fsdp-shard's d-slice, partial-GEMM against the local weight
+            # slice, reduce-scatter the partial products so each shard lands
+            # exactly the f-slice its w2 slice needs (half the wire of an
+            # all-reduce), then psum the final d-space product.
+            d_loc = d_model // dp
+            di = jax.lax.axis_index(f_axes) * d_loc
+            buf_d = jax.lax.dynamic_slice_in_dim(buf, di, d_loc, axis=2)
+            h = jax.lax.psum_scatter(
+                jnp.einsum("ecd,edf->ecf", buf_d, w1), f_axes,
+                scatter_dimension=2, tiled=True)
+            g = jax.lax.psum_scatter(
+                jnp.einsum("ecd,edf->ecf", buf_d, w3), f_axes,
+                scatter_dimension=2, tiled=True)
+            y = jax.lax.psum(jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w2), f_axes)
+        else:
+            h = jnp.einsum("ecd,edf->ecf", buf, w1)
+            g = jnp.einsum("ecd,edf->ecf", buf, w3)
+            y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w2)
+        y_tok = y[safe_e, safe_pos] * jnp.where(keep, gate_sorted, 0)[:, None]
+        out = jnp.zeros((t, d), x_loc.dtype).at[tok_sorted].add(y_tok)
+        out = jax.lax.psum(out, "model")  # the TP-MLP all-reduce equivalent
+        return out.reshape(b, s, d)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), w_spec, w_spec, w_spec, P(bax, None, None)),
+        out_specs=P(bax, None, None),
+        check_vma=False,
+    )
+    # cast to compute dtype BEFORE the shard_map boundary (sharded cast)
+    out = fn(p["router"]["w"], p["w1"]["w"].astype(x.dtype),
+             p["w3"]["w"].astype(x.dtype), p["w2"]["w"].astype(x.dtype), x)
+    if cfg.num_shared_experts:
+        b, s, d = x.shape
+        out = out + mlp(p["shared"], x.reshape(b * s, d), cfg.mlp_type).reshape(b, s, d)
+    return out
+
+
+def aux_load_balance_loss(p, cfg, x):
+    """Switch-style auxiliary loss (f_i * P_i * E); optional in training."""
+    b, s, d = x.shape
+    logits = linear(p["router"], x.reshape(-1, d), jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(logits, axis=-1)
+    f = jnp.bincount(top1, length=cfg.num_experts) / logits.shape[0]
+    return cfg.num_experts * jnp.sum(f * jnp.mean(probs, axis=0))

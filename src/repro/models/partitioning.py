@@ -1,0 +1,72 @@
+"""Logical-axis activation partitioning (MaxText-style rules).
+
+GSPMD propagates weight shardings into activations, but propagation gives
+up at reshapes whose sharded dim doesn't factor (GQA kv-proj flat dim ->
+(kv_heads, head_dim)) and at conflicting uses — and then silently
+REPLICATES, which is how a 0.6B model ends up with 174 GiB/device attention
+buffers (global-batch scores).  The production answer is explicit logical
+axes on activations:
+
+    x = logical(x, "batch", "seq", "embed")
+
+``rules`` maps logical names to mesh axes for the current step function;
+they are installed by the step builders (launch/steps.py) INSIDE the traced
+function, so the same model code lowers correctly for any mesh/topology.
+Outside any rules context ``logical`` is the identity — single-device tests
+and the pure-algorithm library never pay for it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[dict]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def rules(mesh, **name_to_axis):
+    """Install logical-axis rules.  ``name_to_axis`` values are mesh axis
+    names, tuples of axis names, or None (replicated)."""
+    prev = _current()
+    _STATE.rules = {"mesh": mesh, "map": dict(name_to_axis)}
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def axis_for(name: Optional[str]):
+    st = _current()
+    if st is None or name is None:
+        return None
+    return st["map"].get(name)
+
+
+def logical(x, *names):
+    """Constrain ``x`` to the sharding implied by logical axis ``names``
+    (one per dim; None = replicated).  No-op outside a rules context."""
+    st = _current()
+    if st is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    spec = P(*[st["map"].get(n) for n in names])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(st["mesh"], spec))
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel ('model') axis under the current rules
+    (1 outside a context — keeps head-sharding decisions trivially true)."""
+    st = _current()
+    if st is None:
+        return 1
+    mesh = st["mesh"]
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1

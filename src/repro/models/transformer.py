@@ -1,0 +1,426 @@
+"""Unified decoder LM covering all 10 assigned architectures.
+
+One ``ModelConfig`` + a per-layer ``layer_pattern`` of block kinds:
+
+  * ``attn``        — global GQA attention block (+ MLP or MoE)
+  * ``swa``         — sliding-window attention block (+ MLP or MoE)
+  * ``mamba``       — Mamba2/SSD mixer block (no MLP; the SSM is the mixer)
+  * ``shared_attn`` — Zamba2-style block whose attention+MLP params are
+                      SHARED across all such layers (stored once)
+
+Pre-norm residual wiring throughout.  Layers run as an unrolled python loop
+(cost_analysis honesty, DESIGN.md §6.4) with optional per-layer remat for
+training.  ``param_pspecs`` emits the Megatron-style TP sharding tree used
+by the dry-run and launchers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import attention, decode_attention, init_attention
+from repro.models.layers import embed, init_embedding, init_linear, init_rmsnorm, linear, rmsnorm
+from repro.models.mamba2 import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_block,
+    mamba_decode_step,
+)
+from repro.models.mlp import GATED, init_mlp, mlp
+from repro.models.moe import init_moe, moe
+from repro.models.partitioning import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    mlp_type: str = "swiglu"
+    qk_norm: bool = False
+    layer_pattern: Tuple[str, ...] = ("attn",)  # cycled over num_layers
+    window: int = 0  # sliding window for "swa" layers
+    # MoE (applies to attn/swa layers when num_experts > 0)
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_layer_period: int = 1  # MoE every k-th layer (llama4: 2); dense between
+    d_ff_dense: int = 0  # FFN width of the NON-MoE layers (0 -> d_ff)
+    # SSM (mamba layers)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # misc
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # decode KV/conv cache storage dtype (None -> dtype).  fp8 (e4m3) halves
+    # the decode memory-roofline term; K/V magnitudes are O(1) post-norm so
+    # no scale bookkeeping is needed (§Perf hillclimb option).
+    cache_dtype: Any = None
+    remat: bool = True
+    loss_chunk: int = 1024
+    q_chunk: int = 4096
+    embeds_input: bool = False  # modality-frontend stub (musicgen)
+    long_context_ok: bool = False  # eligible for long_500k (sub-quadratic)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        pat = self.layer_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def is_moe_layer(self, i: int) -> bool:
+        """Interleaved MoE: layer ``i`` routes through experts when the MoE
+        period hits (llama4-style alternation); period 1 = every layer."""
+        return self.is_moe and (i % self.moe_layer_period == self.moe_layer_period - 1)
+
+    @property
+    def ff_dense(self) -> int:
+        return self.d_ff_dense or self.d_ff
+
+    def num_params(self) -> int:
+        """Total parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        return sum(int(x.size) for x in jax.tree.leaves(_shapes_only(self)))
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: top_k of num_experts + shared)."""
+        if not self.is_moe:
+            return self.num_params()
+        total = 0
+        for leaf_path, x in _named_shapes(self):
+            if "/w1/" in leaf_path or "/w2/" in leaf_path or "/w3/" in leaf_path:
+                total += int(x.size * self.top_k / self.num_experts)
+            else:
+                total += int(x.size)
+        return total
+
+
+def _shapes_only(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def _named_shapes(cfg: ModelConfig):
+    shapes = _shapes_only(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path, simple=True, separator="/"), leaf
+
+
+# --------------------------------------------------------------------- init
+def _init_block(key, cfg: ModelConfig, kind: str, layer_idx: int = -1):
+    if kind == "mamba":
+        return {"norm": init_rmsnorm(cfg.d_model), "mamba": init_mamba(key, cfg)}
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "norm2": init_rmsnorm(cfg.d_model),
+    }
+    if layer_idx >= 0 and cfg.is_moe_layer(layer_idx):
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.ff_dense, cfg.mlp_type)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: dict = {"final_norm": init_rmsnorm(cfg.d_model)}
+    if not cfg.embeds_input:
+        params["embed"] = init_embedding(keys[-1], cfg.vocab_size, cfg.d_model)
+    params["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.vocab_size)
+    kinds = cfg.layer_kinds
+    layers = []
+    for i, kind in enumerate(kinds):
+        if kind == "shared_attn":
+            layers.append({})  # params live in params["shared"]
+        else:
+            layers.append(_init_block(keys[i], cfg, kind, i))
+    params["layers"] = layers
+    if "shared_attn" in kinds:
+        params["shared"] = _init_block(keys[-3], cfg, "attn")
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _block_forward(p, cfg: ModelConfig, kind: str, x, positions):
+    if kind == "mamba":
+        h, _ = mamba_block(p["mamba"], cfg, rmsnorm(p["norm"], x, cfg.norm_eps),
+                           chunk=cfg.ssm_chunk)
+        return x + h
+    window = cfg.window if kind == "swa" else 0
+    a, _ = attention(p["attn"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps), positions,
+                     window=window, q_chunk=cfg.q_chunk)
+    x = x + a
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if "moe" in p:
+        return x + moe(p["moe"], cfg, h)
+    return x + mlp(p["mlp"], h, cfg.mlp_type)
+
+
+def forward(params, cfg: ModelConfig, inputs, positions=None):
+    """Trunk + final norm.  ``inputs``: int tokens (B,S) or embeds (B,S,D).
+    Returns hidden states (B,S,D) in cfg.dtype."""
+    if cfg.embeds_input:
+        x = inputs.astype(cfg.dtype)
+    else:
+        x = embed(params["embed"], inputs, cfg.dtype)
+    x = logical(x, "batch", "seq", "embed")
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    kinds = cfg.layer_kinds
+    for i, kind in enumerate(kinds):
+        p = params["shared"] if kind == "shared_attn" else params["layers"][i]
+
+        def run(p_, x_):
+            return logical(_block_forward(p_, cfg, kind, x_, positions),
+                           "batch", "seq", "embed")
+
+        if cfg.remat:
+            run = jax.checkpoint(run)
+        x = run(p, x)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ModelConfig, h):
+    return linear(params["lm_head"], h, cfg.dtype)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Chunked-vocab cross entropy.  batch: {"inputs", "targets"(B,S)}.
+    Sequence-chunked so the (chunk, V) logits temp stays bounded."""
+    h = forward(params, cfg, batch["inputs"])
+    b, s, _ = h.shape
+    targets = batch["targets"]
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    total = jnp.zeros((), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min(s, (ci + 1) * chunk)
+        logits = logits_fn(params, cfg, h[:, lo:hi]).astype(jnp.float32)
+        logits = logical(logits, "batch", "seq", "vocab")
+        tgt = targets[:, lo:hi]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt >= 0).astype(jnp.float32)
+        total = total + jnp.sum((lse - true) * mask)
+        count = count + jnp.sum(mask)
+    return total / jnp.maximum(count, 1.0)
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Per-layer decode caches.  Window layers get O(window) rings."""
+    caches = []
+    hd = cfg.head_dim
+    cdt = cfg.cache_dtype or cfg.dtype
+    for kind in cfg.layer_kinds:
+        if kind == "mamba":
+            # SSM/conv states stay in compute dtype (recurrence precision)
+            caches.append(init_mamba_cache(cfg, batch, cfg.dtype))
+        else:
+            ring = max_seq if (kind != "swa" or cfg.window == 0) else min(max_seq, cfg.window)
+            kv = (
+                jnp.zeros((batch, ring, cfg.num_kv_heads, hd), cdt),
+                jnp.zeros((batch, ring, cfg.num_kv_heads, hd), cdt),
+            )
+            caches.append({"kv": kv})
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, inputs, max_seq: int):
+    """Full-sequence forward that also populates decode caches.
+    Returns (logits_last (B,V), caches)."""
+    if cfg.embeds_input:
+        x = inputs.astype(cfg.dtype)
+    else:
+        x = embed(params["embed"], inputs, cfg.dtype)
+    x = logical(x, "batch", "seq", "embed")
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    caches = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        p = params["shared"] if kind == "shared_attn" else params["layers"][i]
+        if kind == "mamba":
+            h, cache = mamba_block(p["mamba"], cfg, rmsnorm(p["norm"], x, cfg.norm_eps),
+                                   chunk=cfg.ssm_chunk)
+            x = x + h
+            caches.append(cache)
+        else:
+            window = cfg.window if kind == "swa" else 0
+            a, (k, v) = attention(p["attn"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                  positions, window=window, q_chunk=cfg.q_chunk)
+            x = x + a
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            x = x + (moe(p["moe"], cfg, h2) if "moe" in p else mlp(p["mlp"], h2, cfg.mlp_type))
+            ring = max_seq if (kind != "swa" or cfg.window == 0) else min(max_seq, cfg.window)
+            caches.append({"kv": _ring_from_prefill(k, v, ring, max_seq, cfg)})
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, h[:, -1]), caches
+
+
+def _ring_from_prefill(k, v, ring: int, max_seq: int, cfg: ModelConfig):
+    """Place prefill K/V (positions 0..s-1) into a ring cache of length
+    ``ring`` padded out to serve up to ``max_seq`` total positions."""
+    b, s = k.shape[0], k.shape[1]
+    cdt = cfg.cache_dtype or cfg.dtype
+    kc = jnp.zeros((b, ring, cfg.num_kv_heads, cfg.head_dim), cdt)
+    vc = jnp.zeros_like(kc)
+    take = min(s, ring)
+    pos = jnp.arange(s - take, s, dtype=jnp.int32)
+    slots = jnp.mod(pos, ring)
+    kc = kc.at[:, slots].set(k[:, -take:].astype(cdt))
+    vc = vc.at[:, slots].set(v[:, -take:].astype(cdt))
+    return kc, vc
+
+
+def decode_step(params, cfg: ModelConfig, inputs, caches, pos):
+    """One decode step.  ``inputs``: int tokens (B,1) or embeds (B,1,D);
+    ``pos``: scalar int32 (current position).  Returns (logits (B,V), caches')."""
+    if cfg.embeds_input:
+        x = inputs.astype(cfg.dtype)
+    else:
+        x = embed(params["embed"], inputs, cfg.dtype)
+    x = logical(x, "batch", "seq", "embed")
+
+    new_caches = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        p = params["shared"] if kind == "shared_attn" else params["layers"][i]
+        if kind == "mamba":
+            h, cache = mamba_decode_step(
+                p["mamba"], cfg, rmsnorm(p["norm"], x, cfg.norm_eps), caches[i]
+            )
+            x = x + h
+            new_caches.append(cache)
+        else:
+            window = cfg.window if kind == "swa" else 0
+            a, kv = decode_attention(p["attn"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                     caches[i]["kv"], pos, window=window)
+            x = x + a
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            x = x + (moe(p["moe"], cfg, h2) if "moe" in p else mlp(p["mlp"], h2, cfg.mlp_type))
+            new_caches.append({"kv": kv})
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, h[:, -1]), new_caches
+
+
+# ----------------------------------------------------------------- sharding
+def _block_pspecs(cfg: ModelConfig, kind: str, layer_idx: int = -1):
+    if kind == "mamba":
+        return {
+            "norm": {"scale": P()},
+            "mamba": {
+                "in_z": {"w": P(None, "model")},
+                "in_x": {"w": P(None, "model")},
+                "in_b": {"w": P(None, None)},
+                "in_c": {"w": P(None, None)},
+                "in_dt": {"w": P(None, "model")},
+                "conv_x": {"w": P(None, "model"), "b": P("model")},
+                "conv_b": {"w": P(None, None), "b": P()},
+                "conv_c": {"w": P(None, None), "b": P()},
+                "a_log": P("model"),
+                "d_skip": P("model"),
+                "dt_bias": P("model"),
+                "norm": {"scale": P("model")},
+                "out_proj": {"w": P("model", None)},
+            },
+        }
+    attn = {
+        "wq": {"w": P(None, "model")},
+        "wk": {"w": P(None, "model")},
+        "wv": {"w": P(None, "model")},
+        "wo": {"w": P("model", None)},
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = {"scale": P()}
+        attn["k_norm"] = {"scale": P()}
+    p = {"norm1": {"scale": P()}, "attn": attn, "norm2": {"scale": P()}}
+    if layer_idx >= 0 and cfg.is_moe_layer(layer_idx):
+        m = {
+            "router": {"w": P(None, None)},
+            "w1": {"w": P("model", None, None)},
+            "w3": {"w": P("model", None, None)},
+            "w2": {"w": P("model", None, None)},
+        }
+        if cfg.num_shared_experts:
+            m["shared"] = _mlp_pspecs(cfg)
+        p["moe"] = m
+    else:
+        p["mlp"] = _mlp_pspecs(cfg)
+    return p
+
+
+def _mlp_pspecs(cfg: ModelConfig):
+    p = {"w_in": {"w": P(None, "model")}, "w_out": {"w": P("model", None)}}
+    if cfg.mlp_type in GATED:
+        p["w_gate"] = {"w": P(None, "model")}
+    return p
+
+
+def param_pspecs(cfg: ModelConfig):
+    """PartitionSpec tree matching ``init_params`` (Megatron-style TP)."""
+    specs: dict = {"final_norm": {"scale": P()}}
+    if not cfg.embeds_input:
+        specs["embed"] = {"table": P("model", None)}
+    specs["lm_head"] = {"w": P(None, "model")}
+    kinds = cfg.layer_kinds
+    specs["layers"] = [
+        ({} if kind == "shared_attn" else _block_pspecs(cfg, kind, i))
+        for i, kind in enumerate(kinds)
+    ]
+    if "shared_attn" in kinds:
+        specs["shared"] = _block_pspecs(cfg, "attn")
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, *, batch_axis, seq_axis=None, model_axis_size: int = 16):
+    """PartitionSpec tree matching ``init_cache``.
+
+    ``batch_axis``: mesh axis (or tuple) for the batch dim — decode_32k.
+    ``seq_axis``: mesh axis for the KV sequence dim — long_500k (batch=1).
+    KV shards over 'model' on the heads axis when divisible (Zamba2's 32 kv
+    heads), else on head_dim (GQA archs with 8 kv heads < 16-way TP).
+    """
+    if cfg.num_kv_heads % model_axis_size == 0:
+        kv_spec = P(batch_axis, seq_axis, "model", None)
+    elif cfg.head_dim % model_axis_size == 0:
+        kv_spec = P(batch_axis, seq_axis, None, "model")
+    else:  # e.g. danube: kv=8, head_dim=120 — neither 16-divisible
+        kv_spec = P(batch_axis, seq_axis, None, None)
+    specs = []
+    for kind in cfg.layer_kinds:
+        if kind == "mamba":
+            specs.append(
+                {
+                    "conv_x": P(batch_axis, None, "model"),
+                    "conv_b": P(batch_axis, None, None),
+                    "conv_c": P(batch_axis, None, None),
+                    "ssm": P(batch_axis, "model", None, None),
+                }
+            )
+        else:
+            specs.append({"kv": (kv_spec, kv_spec)})
+    return specs

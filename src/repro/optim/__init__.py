@@ -1,0 +1,15 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    clip_by_global_norm,
+    opt_state_pspecs,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionConfig,
+    compress_init,
+    compress_and_correct,
+)
+from repro.optim.accumulation import microbatch_grads  # noqa: F401

@@ -1,0 +1,42 @@
+"""Gradient accumulation over microbatches (memory-bound large-batch runs).
+
+``lax.scan`` over the microbatch axis so the lowered HLO carries ONE loss/
+grad body regardless of accumulation depth — peak activation memory is one
+microbatch, and the dry-run's cost_analysis stays honest (the while-loop
+body FLOPs are multiplied by the trip count in our roofline accounting, see
+benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatch_grads(loss_fn, params, batch, num_microbatches: int):
+    """Mean loss/grads of ``loss_fn(params, micro_batch)`` over microbatches.
+
+    ``batch`` leaves are split on axis 0 into ``num_microbatches`` equal
+    slices.  Returns ``(loss, grads)`` matching a full-batch call.
+    """
+    if num_microbatches <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        loss, grads = grad_fn(params, mb)
+        grads_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), micro)
+    inv = 1.0 / num_microbatches
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)

@@ -1,0 +1,3 @@
+from repro.pf.filter import ParticleFilter, StateSpaceModel, run_filter  # noqa: F401
+from repro.pf.models import ungm  # noqa: F401
+from repro.pf.metrics import rmse, resample_ratio  # noqa: F401

@@ -1,0 +1,49 @@
+"""Benchmark state-space models.
+
+``ungm`` is the univariate nonlinear growth model of the paper's §7
+(eqs. 22-23; Gordon/Kitagawa/Arulampalam standard):
+
+    x_t = x_{t-1}/2 + 25 x_{t-1} / (1 + x_{t-1}^2) + 8 cos(1.2 t) + v,
+    z_t = x_t^2 / 20 + n,            v ~ N(0, 10),  n ~ N(0, 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pf.filter import StateSpaceModel
+
+_SIGMA_V2 = 10.0  # process-noise variance (paper: sigma_v^2 = 10)
+_SIGMA_N2 = 1.0  # measurement-noise variance (paper: sigma_n^2 = 1)
+
+
+def _transition(key, x, t):
+    v = jax.random.normal(key, x.shape, x.dtype) * jnp.sqrt(_SIGMA_V2)
+    return x / 2.0 + 25.0 * x / (1.0 + x**2) + 8.0 * jnp.cos(1.2 * t) + v
+
+
+def _observe(key, x, t):
+    n = jax.random.normal(key, x.shape, x.dtype) * jnp.sqrt(_SIGMA_N2)
+    return x**2 / 20.0 + n
+
+
+def _likelihood(z, x, t):
+    # p(z | x) up to a constant; normalisation is irrelevant to resampling
+    # (the Metropolis family explicitly tolerates unnormalised weights).
+    resid = z - x**2 / 20.0
+    return jnp.exp(-0.5 * resid**2 / _SIGMA_N2)
+
+
+def _init(key, n):
+    return jax.random.normal(key, (n,)) * jnp.sqrt(_SIGMA_V2)
+
+
+def ungm() -> StateSpaceModel:
+    return StateSpaceModel(
+        transition=_transition,
+        observe=_observe,
+        likelihood=_likelihood,
+        init=_init,
+        name="ungm",
+    )

@@ -1,0 +1,1 @@
+from repro.smc.decode import SMCDecodeConfig, smc_decode, ess  # noqa: F401

@@ -1,0 +1,129 @@
+"""SMC / particle LM decoding — the paper's resampler as a serving feature.
+
+This is the §Arch-applicability integration point (DESIGN.md §5): particles
+are concurrent decode hypotheses on the batch axis; weights come from the
+proposal/target likelihood ratio (or a user twist function); resampling
+prunes/duplicates hypotheses.  Resampling itself is ANY registered
+algorithm from the paper — Megopolis by default — running over the
+particle axis, followed by an ancestor gather of every KV/SSM cache leaf.
+
+The paper's algorithmic properties carry over directly:
+  * weights need NOT be normalised (Metropolis-family uses only ratios) —
+    we keep log-weights and shift-by-max for the ratio computation;
+  * resampling is ESS-triggered (the SMC standard) — the Resample-Ratio
+    economics of paper §7 apply per decode step;
+  * the ancestor-gather cost model differs by family: O(layers*seq*kv) for
+    attention caches vs O(layers*d_inner*state) for SSM archs — zamba2 and
+    mamba2 resample orders of magnitude cheaper at long context (measured
+    in benchmarks/smc_decode_bench.py).
+
+Fully jittable: ``lax.scan`` over steps, ``lax.cond`` around the resample.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_resampler
+from repro.models import ModelConfig, decode_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SMCDecodeConfig:
+    num_particles: int
+    max_new_tokens: int
+    resampler: str = "megopolis"
+    num_iters: int = 16  # B (paper eq. 3; fixed application prior, §7)
+    ess_threshold: float = 0.5  # resample when ESS < threshold * N
+    proposal_temp: float = 1.0
+    target_temp: float = 0.7  # weights tilt samples toward the sharper target
+    segment: int = 32  # Megopolis coalescing segment
+
+
+def ess(log_w: jnp.ndarray) -> jnp.ndarray:
+    """Effective sample size from log-weights (numerically shifted)."""
+    w = jnp.exp(log_w - jnp.max(log_w))
+    return jnp.square(jnp.sum(w)) / jnp.maximum(jnp.sum(w * w), 1e-30)
+
+
+def _default_twist(logits: jnp.ndarray, token: jnp.ndarray, cfg: SMCDecodeConfig):
+    """log-weight increment = log target(token) - log proposal(token).
+
+    Proposal samples at ``proposal_temp``; the target density is the model
+    at ``target_temp`` — classic tempered-SMC decoding."""
+    logp = jax.nn.log_softmax(logits / cfg.proposal_temp, axis=-1)
+    logt = jax.nn.log_softmax(logits / cfg.target_temp, axis=-1)
+    tok = token[:, None]
+    lp = jnp.take_along_axis(logp, tok, axis=-1)[:, 0]
+    lt = jnp.take_along_axis(logt, tok, axis=-1)[:, 0]
+    return lt - lp
+
+
+def smc_decode(
+    params,
+    model_cfg: ModelConfig,
+    smc_cfg: SMCDecodeConfig,
+    caches,
+    first_tokens: jnp.ndarray,  # (N,) int32 — last prompt token per particle
+    start_pos,  # scalar int32 — position of first_tokens
+    key,
+    twist: Optional[Callable] = None,
+):
+    """Returns (tokens (N, T), log_weights (N,), stats dict).
+
+    ``caches`` must be prefilled for ``start_pos`` (see models.prefill);
+    particle i's hypothesis extends ``first_tokens[i]``.
+    """
+    n = smc_cfg.num_particles
+    twist_fn = twist or partial(_default_twist, cfg=smc_cfg)
+    resampler = get_resampler(smc_cfg.resampler)
+    res_kwargs = {}
+    if smc_cfg.resampler in ("megopolis", "metropolis", "metropolis_c1",
+                             "metropolis_c2", "rejection"):
+        res_kwargs["num_iters"] = smc_cfg.num_iters
+    if smc_cfg.resampler == "megopolis":
+        res_kwargs["segment"] = smc_cfg.segment
+
+    def maybe_resample(k, log_w, caches, tokens_so_far):
+        def do(_):
+            # Metropolis-family resamplers consume unnormalised weights —
+            # shift in log space for stability, then exponentiate.
+            w = jnp.exp(log_w - jnp.max(log_w))
+            ancestors = resampler(k, w, **res_kwargs)
+            new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
+            new_tokens = jnp.take(tokens_so_far, ancestors, axis=0)
+            return jnp.zeros_like(log_w), new_caches, new_tokens, jnp.int32(1)
+
+        def dont(_):
+            return log_w, caches, tokens_so_far, jnp.int32(0)
+
+        trigger = ess(log_w) < smc_cfg.ess_threshold * n
+        return jax.lax.cond(trigger, do, dont, None)
+
+    def step(carry, step_key):
+        tokens_prev, pos, log_w, caches, out_buf, n_resamples, t = carry
+        k_samp, k_res = jax.random.split(step_key)
+        logits, caches = decode_step(params, model_cfg, tokens_prev[:, None], caches, pos)
+        logits = logits.astype(jnp.float32)
+        next_tok = jax.random.categorical(
+            k_samp, logits / smc_cfg.proposal_temp, axis=-1
+        ).astype(jnp.int32)
+        log_w = log_w + twist_fn(logits, next_tok)
+        out_buf = out_buf.at[:, t].set(next_tok)
+        log_w, caches, out_buf, did = maybe_resample(k_res, log_w, caches, out_buf)
+        return (next_tok, pos + 1, log_w, caches, out_buf, n_resamples + did, t + 1), ess(log_w)
+
+    out_buf = jnp.zeros((n, smc_cfg.max_new_tokens), jnp.int32)
+    log_w0 = jnp.zeros((n,), jnp.float32)
+    keys = jax.random.split(key, smc_cfg.max_new_tokens)
+    carry0 = (first_tokens, jnp.asarray(start_pos, jnp.int32), log_w0, caches,
+              out_buf, jnp.int32(0), jnp.int32(0))
+    carry, ess_hist = jax.lax.scan(step, carry0, keys)
+    _, _, log_w, caches, out_buf, n_resamples, _ = carry
+    stats = {"ess_history": ess_hist, "num_resamples": n_resamples}
+    return out_buf, log_w, stats

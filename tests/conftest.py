@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 devices."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def base_key():
+    return jax.random.PRNGKey(0)

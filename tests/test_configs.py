@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests (assignment requirement f): each assigned
+arch instantiates its REDUCED same-family config and runs one forward +
+one train-ish step on CPU, asserting output shapes and no NaNs.  FULL
+configs are exercised only via the dry-run (no allocation here)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_arch
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn, prefill
+
+
+def _smoke_cfg(arch_id):
+    arch = get_arch(arch_id)
+    return dataclasses.replace(arch.smoke, dtype=jnp.float32, remat=False)
+
+
+def _inputs(cfg, key, b=2, s=8):
+    if cfg.embeds_input:
+        return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size, jnp.int32)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch_id):
+    cfg = _smoke_cfg(arch_id)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x = _inputs(cfg, jax.random.fold_in(key, 1))
+    h = forward(params, cfg, x)
+    assert h.shape == (2, 8, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h))), f"{arch_id}: non-finite hidden states"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    """One loss+grad step: finite loss, finite grads, loss decreases after
+    a plain SGD step (learning signal exists)."""
+    cfg = _smoke_cfg(arch_id)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    batch = {
+        "inputs": _inputs(cfg, jax.random.fold_in(key, 2)),
+        "targets": jax.random.randint(jax.random.fold_in(key, 3), (2, 8), 0,
+                                      cfg.vocab_size, jnp.int32),
+    }
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: NaN loss"
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch_id}: degenerate grads"
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2 = loss_fn(params2, cfg, batch)
+    assert float(loss2) < float(loss), f"{arch_id}: no learning signal"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode_step(arch_id):
+    """decode_32k/long_500k cells lower serve_step — its smoke equivalent:
+    prefill then one cached decode step; logits finite, caches update."""
+    cfg = _smoke_cfg(arch_id)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    prompt = _inputs(cfg, jax.random.fold_in(key, 1), b=2, s=6)
+    logits, caches = prefill(params, cfg, prompt, max_seq=10)
+    assert logits.shape == (2, cfg.vocab_size)
+    if cfg.embeds_input:
+        tok = jax.random.normal(jax.random.fold_in(key, 4), (2, 1, cfg.d_model), jnp.float32)
+    else:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits2, caches2 = decode_step(params, cfg, tok, caches, jnp.int32(6))
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch_id}: non-finite decode logits"
+
+
+def test_exact_assigned_configs():
+    """The FULL configs carry the exact published dimensions."""
+    expect = {
+        "nemotron_4_15b": (32, 6144, 48, 8, 24576, 256000),
+        "gemma3_27b": (62, 5376, 32, 16, 21504, 262144),
+        "h2o_danube_3_4b": (24, 3840, 32, 8, 10240, 32000),
+        "qwen3_0_6b": (28, 1024, 16, 8, 3072, 151936),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "llama4_maverick_400b_a17b": (48, 5120, 40, 8, 8192, 202048),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+        "chameleon_34b": (48, 8192, 64, 8, 22016, 65536),
+        "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2_1_3b": (48, 2048, 32, 32, 0, 50304),  # vocab padded 50280->50304
+    }
+    for arch_id, (l, d, h, kv, ff, v) in expect.items():
+        m = get_arch(arch_id).model
+        assert (m.num_layers, m.d_model, m.num_heads, m.num_kv_heads, m.d_ff,
+                m.vocab_size) == (l, d, h, kv, ff, v), arch_id
+
+
+def test_moe_param_counts_match_published():
+    assert abs(get_arch("dbrx_132b").model.num_params() / 1e9 - 132) < 3
+    llama4 = get_arch("llama4_maverick_400b_a17b").model
+    assert abs(llama4.num_params() / 1e9 - 400) < 8
+    assert abs(llama4.num_active_params() / 1e9 - 17) < 2
+
+
+def test_shape_applicability():
+    for arch_id in ARCH_IDS:
+        shapes = applicable_shapes(get_arch(arch_id))
+        assert "train_4k" in shapes and "decode_32k" in shapes
+    assert "long_500k" not in applicable_shapes(get_arch("qwen3_0_6b"))
+    assert "long_500k" in applicable_shapes(get_arch("mamba2_1_3b"))
+    assert "long_500k" in applicable_shapes(get_arch("gemma3_27b"))

@@ -1,0 +1,30 @@
+"""Distributed resampling tests — executed in a subprocess with 8 virtual
+devices (the main pytest process must keep 1 device; jax locks the device
+count at first init)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_PROG = pathlib.Path(__file__).parent / "_distributed_prog.py"
+_SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_distributed_megopolis_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, str(_PROG)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    assert "ALL_OK" in out.stdout, out.stdout
+    for name in ("static_exactness", "dynamic_exactness", "quality_parity", "gather", "island", "ess"):
+        assert f"OK {name}" in out.stdout, out.stdout

@@ -1,0 +1,128 @@
+"""Pallas kernel validation (interpret mode): bit-exact vs ref.py oracles,
+shape/dtype sweeps, and statistical quality parity with repro.core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import megopolis as core_megopolis
+from repro.core import select_iterations
+from repro.core.metrics import mse, offspring_counts
+from repro.core.weightgen import gaussian_weights
+from repro.kernels import megopolis_tpu, metropolis_tpu, prefix_sum_tpu
+from repro.kernels.common import TILE, flat_roll, hash_uniform, key_to_seed
+from repro.kernels.megopolis.megopolis import megopolis_pallas
+from repro.kernels.megopolis.ref import megopolis_ref
+from repro.kernels.metropolis.metropolis import metropolis_pallas
+from repro.kernels.metropolis.ref import metropolis_ref
+from repro.kernels.prefix_sum.prefix_sum import prefix_sum_pallas
+from repro.kernels.prefix_sum.ref import prefix_sum_ref
+
+
+# ---------------------------------------------------------------- flat_roll
+@pytest.mark.parametrize("rows", [8, 16])
+@pytest.mark.parametrize("shift", [0, 1, 127, 128, 129, 1000, 1023, 1024])
+def test_flat_roll_matches_numpy(rows, shift):
+    x = jnp.arange(rows * 128, dtype=jnp.float32).reshape(rows, 128)
+    got = np.asarray(flat_roll(x, shift)).reshape(-1)
+    want = np.roll(np.asarray(x).reshape(-1), -shift)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hash_uniform_statistics():
+    """The stateless RNG must be uniform enough for accept/reject tests."""
+    i = jnp.arange(1 << 16)
+    u = np.asarray(hash_uniform(jnp.uint32(123), i, 7))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(np.quantile(u, 0.25) - 0.25) < 0.01
+    # iteration decorrelation
+    u2 = np.asarray(hash_uniform(jnp.uint32(123), i, 8))
+    assert abs(np.corrcoef(u, u2)[0, 1]) < 0.02
+
+
+# ---------------------------------------------------------- megopolis kernel
+@pytest.mark.parametrize("n_tiles", [1, 2, 5])
+@pytest.mark.parametrize("num_iters", [1, 7, 24])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_megopolis_kernel_matches_ref(n_tiles, num_iters, dtype, base_key):
+    n = n_tiles * TILE
+    w = (jax.random.uniform(jax.random.fold_in(base_key, n_tiles), (n,)) + 1e-3).astype(dtype)
+    offsets = jax.random.randint(jax.random.fold_in(base_key, 77), (num_iters,), 0, n, jnp.int32)
+    seed = key_to_seed(jax.random.fold_in(base_key, 99)).reshape(1)
+    got = megopolis_pallas(
+        w.reshape(-1, 128), offsets, seed, num_iters=num_iters, interpret=True
+    ).reshape(n)
+    want = megopolis_ref(w, offsets, seed, num_iters=num_iters)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_megopolis_tpu_public_api(base_key):
+    n = 4 * TILE
+    w = jax.random.uniform(base_key, (n,)) + 1e-3
+    a = megopolis_tpu(base_key, w, 16)
+    assert a.shape == (n,) and a.dtype == jnp.int32
+    assert bool(jnp.all((a >= 0) & (a < n)))
+    with pytest.raises(ValueError):
+        megopolis_tpu(base_key, w[: n - 3], 16)
+
+
+def test_megopolis_kernel_quality_parity(base_key):
+    """Kernel (SEG=1024, hash RNG) must match core megopolis (SEG=32,
+    jax.random) in MSE on the paper's weight family — DESIGN.md §2."""
+    n = 4 * TILE
+    w = gaussian_weights(jax.random.PRNGKey(3), n, y=2.0)
+    num_iters = int(select_iterations(w, 0.01))
+    k_runs = 24
+    o_kern, o_core = [], []
+    for t in range(k_runs):
+        kk = jax.random.fold_in(base_key, 500 + t)
+        o_kern.append(np.asarray(offspring_counts(megopolis_tpu(kk, w, num_iters), n)))
+        o_core.append(np.asarray(offspring_counts(core_megopolis(kk, w, num_iters), n)))
+    m_kern = float(mse(jnp.asarray(np.stack(o_kern)), w)) / n
+    m_core = float(mse(jnp.asarray(np.stack(o_core)), w)) / n
+    assert abs(m_kern - m_core) < 0.4 * m_core, (m_kern, m_core)
+
+
+# --------------------------------------------------------- metropolis kernel
+@pytest.mark.parametrize("n_tiles", [1, 3])
+@pytest.mark.parametrize("num_iters", [1, 16])
+def test_metropolis_kernel_matches_ref(n_tiles, num_iters, base_key):
+    n = n_tiles * TILE
+    w = jax.random.uniform(jax.random.fold_in(base_key, 5), (n,)) + 1e-3
+    seed = key_to_seed(jax.random.fold_in(base_key, 6)).reshape(1)
+    got = metropolis_pallas(w.reshape(-1, 128), seed, num_iters=num_iters, interpret=True)
+    want = metropolis_ref(w, seed, num_iters=num_iters)
+    np.testing.assert_array_equal(np.asarray(got).reshape(-1), np.asarray(want))
+
+
+def test_metropolis_tpu_vmem_cap(base_key):
+    from repro.kernels.metropolis.ops import MAX_VMEM_PARTICLES
+
+    w = jnp.ones((MAX_VMEM_PARTICLES + TILE,))
+    with pytest.raises(ValueError, match="VMEM"):
+        metropolis_tpu(base_key, w, 4)
+
+
+# --------------------------------------------------------- prefix sum kernel
+@pytest.mark.parametrize("n_tiles", [1, 2, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_prefix_sum_matches_ref(n_tiles, dtype, base_key):
+    n = n_tiles * TILE
+    x = jax.random.uniform(base_key, (n,), jnp.float32).astype(dtype)
+    got = prefix_sum_tpu(x)
+    want = prefix_sum_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_prefix_sum_f32_instability_story(base_key):
+    """Reproduce the paper's §1 motivation: f32 prefix sums over many
+    similar weights drift from the f64 truth as N grows."""
+    n = 64 * TILE
+    x = jax.random.uniform(base_key, (n,), jnp.float32) + 0.5
+    f32 = np.asarray(prefix_sum_tpu(x))[-1]
+    f64 = np.cumsum(np.asarray(x, np.float64))[-1]
+    rel = abs(f32 - f64) / f64
+    assert rel > 0  # measurable drift exists
+    assert rel < 1e-4  # but bounded at this N (grows with N)

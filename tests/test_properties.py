@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The paper's correctness rests on structural properties of the Megopolis
+index map; the framework substrate rests on determinism/conservation
+invariants.  Each is asserted over generated inputs, not examples.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.resamplers.megopolis import megopolis, megopolis_indices
+from repro.core.iterations import select_iterations
+from repro.core.metrics import offspring_counts
+from repro.data import SyntheticLMStream
+from repro.kernels.common import flat_roll, hash_uniform
+from repro.optim import CompressionConfig, compress_and_correct, compress_init
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------- Megopolis index map
+@given(
+    n_seg=st.integers(1, 64),
+    segment=st.sampled_from([1, 4, 32, 128]),
+    offset=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_megopolis_map_is_bijection(n_seg, segment, offset):
+    """For any segment size dividing N and any offset, i -> j is a
+    bijection (Proposition 1's requirement (a))."""
+    n = n_seg * segment
+    i = jnp.arange(n)
+    j = np.asarray(megopolis_indices(i, offset % n, segment, n))
+    assert sorted(j.tolist()) == list(range(n))
+
+
+@given(segment=st.sampled_from([4, 32]), n_seg=st.integers(2, 16))
+@settings(**SETTINGS)
+def test_megopolis_map_uniform_over_offsets(segment, n_seg):
+    """For fixed i, j is uniform over [0, N) across all offsets
+    (requirement (b)): every j is hit exactly once as o sweeps [0, N)."""
+    n = n_seg * segment
+    i = jnp.full((n,), 3, jnp.int32)
+    hits = np.zeros(n, np.int64)
+    for o in range(n):
+        j = int(np.asarray(megopolis_indices(jnp.asarray([3]), o, segment, n))[0])
+        hits[j] += 1
+    assert hits.min() == hits.max() == 1
+
+
+@given(
+    n=st.sampled_from([64, 256]),
+    b=st.integers(1, 24),
+    seed=st.integers(0, 2**30),
+)
+@settings(**SETTINGS)
+def test_resampler_outputs_valid_ancestors(n, b, seed):
+    """Ancestors are in range and offspring counts conserve N for any
+    weights (conservation invariant of every resampler)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) + 1e-6
+    anc = megopolis(key, w, b)
+    a = np.asarray(anc)
+    assert a.min() >= 0 and a.max() < n
+    assert int(offspring_counts(anc, n).sum()) == n
+
+
+@given(seed=st.integers(0, 2**30), n=st.sampled_from([128, 1024]))
+@settings(**SETTINGS)
+def test_zero_weight_particles_never_survive_with_positive_alternatives(seed, n):
+    """A particle with zero weight must never be selected as an ancestor
+    once B >= 1 comparison hits a positive-weight particle; with large B
+    the zero-weight index disappears entirely (u*w[k] <= w[j] with
+    w[k]=0 always accepts)."""
+    key = jax.random.PRNGKey(seed)
+    w = jnp.ones((n,)).at[0].set(0.0)
+    anc = megopolis(key, w, 64)
+    assert 0 not in np.asarray(anc).tolist()
+
+
+# ----------------------------------------------------------- kernel utils
+@given(
+    rows=st.sampled_from([8, 16]),
+    shift=st.integers(0, 10_000),
+    seed=st.integers(0, 2**30),
+)
+@settings(**SETTINGS)
+def test_flat_roll_matches_numpy_roll(rows, shift, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, 128))
+    got = np.asarray(flat_roll(x, shift)).reshape(-1)
+    want = np.roll(np.asarray(x).reshape(-1), -(shift % (rows * 128)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hash_uniform_range_and_determinism(seed):
+    lanes = jnp.arange(4096)
+    u1 = np.asarray(hash_uniform(seed, lanes, 3))
+    u2 = np.asarray(hash_uniform(seed, lanes, 3))
+    np.testing.assert_array_equal(u1, u2)
+    assert u1.min() >= 0.0 and u1.max() < 1.0
+    assert abs(u1.mean() - 0.5) < 0.05  # crude uniformity
+
+
+# ------------------------------------------------------------- iterations
+@given(eps=st.floats(1e-4, 0.5), scale=st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_iteration_count_scale_invariant(eps, scale):
+    """B (eq. 3) depends only on weight RATIOS — rescaling all weights
+    must not change it (the paper's unnormalised-weights property)."""
+    w = jnp.asarray([0.1, 0.5, 1.0, 2.0, 4.0] * 10)
+    b1 = int(select_iterations(w, eps))
+    b2 = int(select_iterations(w * scale, eps))
+    assert b1 == b2
+    assert b1 >= 1
+
+
+# ------------------------------------------------------------------- data
+@given(step=st.integers(0, 1000), lo=st.integers(0, 6), width=st.integers(1, 2))
+@settings(**SETTINGS)
+def test_stream_shard_slices_agree(step, lo, width):
+    s = SyntheticLMStream(vocab_size=31, seq_len=8, global_batch=8, seed=5)
+    full = s.batch(step)
+    part = s.batch(step, row_lo=lo, row_hi=lo + width)
+    np.testing.assert_array_equal(full["inputs"][lo:lo + width], part["inputs"])
+
+
+# ------------------------------------------------------------ compression
+@given(seed=st.integers(0, 2**30), ratio=st.floats(0.01, 0.9))
+@settings(**SETTINGS)
+def test_error_feedback_conserves_gradient_mass(seed, ratio):
+    cfg = CompressionConfig(ratio=ratio, min_size=4, wire_dtype="float32")
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (16, 16))}
+    resid = compress_init(g)
+    wire, resid = compress_and_correct(cfg, g, resid)
+    np.testing.assert_allclose(np.asarray(wire["w"]) + np.asarray(resid["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,108 @@
+"""Statistical validation of the paper's quality claims (§6.1, §6.3).
+
+Small-N, multi-run Monte Carlo on CPU:
+  * Megopolis MSE  <  Metropolis MSE            (Fig. 6 MSE rows)
+  * Megopolis bias contribution ~ Metropolis's  (Fig. 6 bias rows)
+  * C1-PS128 MSE  >>  Megopolis MSE             (Fig. 7 / §6.4)
+  * segment size {32, 128, 1024} leaves Megopolis quality unchanged
+    (the TPU adaptation argument in DESIGN.md §2)
+  * unbiased baselines (multinomial/systematic) have ~zero bias contribution
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    megopolis,
+    metropolis,
+    metropolis_c1,
+    multinomial,
+    select_iterations,
+    systematic,
+)
+from repro.core.metrics import bias_contribution, bias_variance, mse, offspring_counts
+from repro.core.weightgen import gaussian_weights
+
+N = 1024
+K = 48  # Monte Carlo runs per weight sequence
+
+
+def _offsprings(fn, key, w, num_iters, k_runs=K, **kw):
+    outs = []
+    jfn = jax.jit(lambda kk: offspring_counts(fn(kk, w, num_iters, **kw), N))
+    for t in range(k_runs):
+        outs.append(np.asarray(jfn(jax.random.fold_in(key, t))))
+    return jnp.asarray(np.stack(outs))
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return gaussian_weights(jax.random.PRNGKey(42), N, y=2.0)
+
+
+@pytest.fixture(scope="module")
+def num_iters(weights):
+    return int(select_iterations(weights, 0.01))
+
+
+def test_megopolis_mse_below_metropolis(weights, num_iters):
+    key = jax.random.PRNGKey(7)
+    o_mego = _offsprings(megopolis, key, weights, num_iters)
+    o_metr = _offsprings(metropolis, key, weights, num_iters)
+    mse_mego = float(mse(o_mego, weights)) / N
+    mse_metr = float(mse(o_metr, weights)) / N
+    # Paper Tables 3-4 @ y=2: Megopolis ~0.52, Metropolis ~1.00.
+    assert mse_mego < mse_metr, (mse_mego, mse_metr)
+    assert mse_mego < 0.8, mse_mego
+    assert 0.8 < mse_metr < 1.3, mse_metr
+
+
+def test_megopolis_bias_matches_metropolis(weights, num_iters):
+    key = jax.random.PRNGKey(8)
+    b_mego = float(bias_contribution(_offsprings(megopolis, key, weights, num_iters), weights))
+    b_metr = float(bias_contribution(_offsprings(metropolis, key, weights, num_iters), weights))
+    # Both should be small and comparable (paper: bias contribution of
+    # Megopolis == Metropolis).
+    assert b_mego < 0.2
+    assert abs(b_mego - b_metr) < 0.15, (b_mego, b_metr)
+
+
+def test_c1_small_partition_inflates_mse(weights, num_iters):
+    key = jax.random.PRNGKey(9)
+    mse_c1 = float(mse(_offsprings(metropolis_c1, key, weights, num_iters), weights)) / N
+    mse_mego = float(mse(_offsprings(megopolis, key, weights, num_iters), weights)) / N
+    # Paper Table 5 @ y=2: C1-PS128 ~3.2 vs Megopolis ~0.52 (6x).
+    assert mse_c1 > 2.0 * mse_mego, (mse_c1, mse_mego)
+
+
+def test_segment_size_invariance(weights, num_iters):
+    """TPU adaptation: S in {32,128,1024} must not change quality."""
+    key = jax.random.PRNGKey(10)
+    stats = {}
+    for seg in (32, 128, 1024):
+        o = _offsprings(megopolis, key, weights, num_iters, segment=seg)
+        stats[seg] = (float(mse(o, weights)) / N, float(bias_contribution(o, weights)))
+    base_mse = stats[32][0]
+    for seg, (m, b) in stats.items():
+        assert abs(m - base_mse) < 0.35 * base_mse, stats
+        assert b < 0.2, stats
+
+
+def test_unbiased_baselines_have_low_bias(weights):
+    key = jax.random.PRNGKey(11)
+    for fn in (multinomial, systematic):
+        o = _offsprings(fn, key, weights, 0)
+        var, bias_sq, total = bias_variance(o, weights)
+        assert float(bias_sq / total) < 0.05, fn.__name__
+
+
+def test_systematic_lowest_variance(weights):
+    """Paper §6.5: systematic < multinomial in MSE; Megopolis in between."""
+    key = jax.random.PRNGKey(12)
+    num_iters = int(select_iterations(weights, 0.01))
+    m_sys = float(mse(_offsprings(systematic, key, weights, 0), weights))
+    m_mult = float(mse(_offsprings(multinomial, key, weights, 0), weights))
+    m_mego = float(mse(_offsprings(megopolis, key, weights, num_iters), weights))
+    assert m_sys < m_mego < m_mult, (m_sys, m_mego, m_mult)

@@ -1,0 +1,85 @@
+"""SMC particle decoding: ESS math, resample triggering, ancestor-gather
+coherence, and statistical sanity of the tempered-decoding weights."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import init_params, prefill
+from repro.smc import SMCDecodeConfig, ess, smc_decode
+
+
+def _setup(arch="qwen3-0.6b", n=16, prompt=4, seed=0):
+    cfg = dataclasses.replace(get_arch(arch).smoke, dtype=jnp.float32, remat=False)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (n, prompt), 0,
+                                 cfg.vocab_size, jnp.int32)
+    return cfg, params, prompts, key
+
+
+def test_ess_bounds():
+    assert abs(float(ess(jnp.zeros(10))) - 10.0) < 1e-4  # uniform -> N
+    concentrated = jnp.array([0.0] + [-100.0] * 9)
+    assert float(ess(concentrated)) < 1.01  # one particle -> ~1
+
+
+@pytest.mark.parametrize("resampler", ["megopolis", "metropolis", "improved_systematic"])
+def test_smc_decode_runs_and_is_finite(resampler):
+    cfg, params, prompts, key = _setup()
+    new = 12
+    logits, caches = prefill(params, cfg, prompts, max_seq=4 + new)
+    smc = SMCDecodeConfig(num_particles=16, max_new_tokens=new, resampler=resampler,
+                          target_temp=0.5, ess_threshold=0.9)
+    tokens, log_w, stats = smc_decode(params, cfg, smc, caches, prompts[:, -1],
+                                      4, jax.random.fold_in(key, 2))
+    assert tokens.shape == (16, new)
+    assert bool(jnp.all((tokens >= 0) & (tokens < cfg.vocab_size)))
+    assert bool(jnp.all(jnp.isfinite(log_w)))
+    assert int(stats["num_resamples"]) >= 1  # aggressive threshold must trigger
+
+
+def test_resampling_resets_weights_and_keeps_population_valid():
+    cfg, params, prompts, key = _setup(n=32)
+    logits, caches = prefill(params, cfg, prompts, max_seq=4 + 8)
+    smc = SMCDecodeConfig(num_particles=32, max_new_tokens=8, target_temp=0.3,
+                          ess_threshold=0.99)  # resample nearly every step
+    tokens, log_w, stats = smc_decode(params, cfg, smc, caches, prompts[:, -1],
+                                      4, jax.random.fold_in(key, 3))
+    # after a resample at the last step, weights are reset to zero
+    hist = np.asarray(stats["ess_history"])
+    assert hist.max() <= 32.0 + 1e-3
+    assert int(stats["num_resamples"]) >= 4
+
+
+def test_greedy_limit_matches_argmax_decoding():
+    """With temp -> 0 the proposal collapses to argmax and no weight
+    spread accumulates (ESS stays N, no resamples)."""
+    cfg, params, prompts, key = _setup(n=8)
+    logits, caches = prefill(params, cfg, prompts, max_seq=4 + 5)
+    smc = SMCDecodeConfig(num_particles=8, max_new_tokens=5,
+                          proposal_temp=1e-4, target_temp=1e-4,
+                          ess_threshold=0.1)
+    tokens, log_w, stats = smc_decode(params, cfg, smc, caches, prompts[:, -1],
+                                      4, jax.random.fold_in(key, 4))
+    assert int(stats["num_resamples"]) == 0
+    np.testing.assert_allclose(np.asarray(log_w), 0.0, atol=1e-3)
+
+
+def test_ancestor_gather_coherence():
+    """All particles forced onto one ancestor must continue identically
+    afterwards (cache gather correctness): identical prompts + identical
+    sampling keys per particle -> identical continuations."""
+    cfg, params, _, key = _setup(n=4)
+    same_prompt = jnp.tile(jnp.array([[1, 2, 3, 4]], jnp.int32), (4, 1))
+    logits, caches = prefill(params, cfg, same_prompt, max_seq=4 + 6)
+    smc = SMCDecodeConfig(num_particles=4, max_new_tokens=6,
+                          proposal_temp=1e-4, target_temp=1e-4)
+    tokens, _, _ = smc_decode(params, cfg, smc, caches, same_prompt[:, -1],
+                              4, jax.random.fold_in(key, 5))
+    for i in range(1, 4):
+        np.testing.assert_array_equal(np.asarray(tokens[0]), np.asarray(tokens[i]))

@@ -1,0 +1,24 @@
+"""Integration test of launch/steps.py (TP+FSDP plans) on 8 virtual
+devices — subprocess, same pattern as test_distributed.py."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_PROG = pathlib.Path(__file__).parent / "_steps_prog.py"
+_SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_steps_plans_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(_PROG)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    for name in ("train_step_finite", "params_updated", "decode_step", "prefill_step"):
+        assert f"OK {name}" in out.stdout, out.stdout
+    assert "ALL_OK" in out.stdout

@@ -1,0 +1,47 @@
+"""Training-driver fault tolerance: resume-exactness, heartbeat,
+compressed-DP mode convergence."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.train import TrainRun, run
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path):
+    """Train 8 steps straight vs 4 + checkpoint + resume 4: identical loss
+    trajectory (exact-resume invariant: data position + state restore)."""
+    base = dict(arch="qwen3-0.6b", smoke=True, global_batch=4, seq_len=32)
+    full = run(TrainRun(steps=8, ckpt_dir=str(tmp_path / "a"), ckpt_every=100, **base))
+
+    rdir = str(tmp_path / "b")
+    first = run(TrainRun(steps=4, ckpt_dir=rdir, ckpt_every=4, **base))
+    second = run(TrainRun(steps=8, ckpt_dir=rdir, ckpt_every=100, resume=True, **base))
+    got = first["losses"] + second["losses"]
+    # rtol: XLA-CPU matmul reductions are load-dependent (threadpool work
+    # splitting), so even identical replays drift ~1e-4/step — the check is
+    # that the resumed trajectory tracks the uninterrupted one, which a
+    # wrong data position or state restore would break by whole units.
+    np.testing.assert_allclose(got, full["losses"], rtol=5e-3)
+
+
+def test_heartbeat_written(tmp_path):
+    run(TrainRun(arch="qwen3-0.6b", steps=3, smoke=True, global_batch=4,
+                 seq_len=32, ckpt_dir=str(tmp_path)))
+    hb = [json.loads(l) for l in open(tmp_path / "heartbeat.json")]
+    assert [r["step"] for r in hb] == [0, 1, 2]
+    assert all(np.isfinite(r["loss"]) and r["step_time_s"] > 0 for r in hb)
+
+
+def test_loss_decreases(tmp_path):
+    out = run(TrainRun(arch="mamba2-1.3b", steps=20, smoke=True, global_batch=8,
+                       seq_len=32))
+    assert out["losses"][-1] < out["losses"][0]
+
+
+def test_compressed_dp_mode_still_learns():
+    out = run(TrainRun(arch="qwen3-0.6b", steps=20, smoke=True, global_batch=8,
+                       seq_len=32, compress=True))
+    assert out["losses"][-1] < out["losses"][0]
