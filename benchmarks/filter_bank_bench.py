@@ -1,0 +1,109 @@
+"""Filter-bank throughput: batched scenario axis vs the naive Python loop.
+
+The serving case (ROADMAP north star; EXPERIMENTS.md §Perf): many concurrent
+particle filters — one per scenario / user / hypothesis bank.  The naive
+implementation loops ``run_filter`` S times (S jitted launches per pipeline
+stage, S dispatch round-trips per step); ``run_filter_bank`` runs the whole
+bank under one ``lax.scan`` whose resampling stage is a single batched
+launch (DESIGN.md §4).  Reported metric is per-filter throughput
+(particle-steps/s/filter) — a flat bank curve means scenarios are ~free
+until the device saturates, while the loop's per-launch overhead eats it.
+
+    PYTHONPATH=src python -m benchmarks.filter_bank_bench [--quick]
+
+Writes ``filter_bank.csv`` + ``BENCH_filter_bank.json`` into ``BENCH_OUT``
+(default benchmarks/out/) — accrete the JSON into EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import ensure_out, print_table, time_fn, write_csv
+from repro.pf.filter import ParticleFilter, run_filter, run_filter_bank, simulate
+from repro.pf.models import ungm_family, ungm_theta
+
+
+def bench_one(resampler: str, num_scenarios: int, particles: int, steps: int,
+              num_iters: int) -> dict:
+    model = ungm_family()
+    scenarios = [
+        ungm_theta(amp=4.0 + s % 8, obs_var=0.5 + 0.25 * (s % 4))
+        for s in range(num_scenarios)
+    ]
+    thetas = jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+    obs = jnp.stack([
+        simulate(jax.random.PRNGKey(100 + s), model, steps, theta=th)[1]
+        for s, th in enumerate(scenarios)
+    ])
+    pf = ParticleFilter(model, particles, resampler=resampler, num_iters=num_iters)
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, num_scenarios)
+
+    bank = jax.jit(lambda k: run_filter_bank(k, pf, obs, thetas=thetas))
+    t_bank = time_fn(bank, key)
+
+    single = jax.jit(lambda k, z, th: run_filter(k, pf, z, theta=th))
+
+    def loop(_):
+        outs = [single(keys[s], obs[s], scenarios[s]) for s in range(num_scenarios)]
+        return jnp.stack(outs)
+
+    t_loop = time_fn(loop, key)
+
+    particle_steps = num_scenarios * steps * particles
+    return {
+        "resampler": resampler,
+        "scenarios": num_scenarios,
+        "particles": particles,
+        "steps": steps,
+        "bank_s": t_bank,
+        "loop_s": t_loop,
+        "speedup": t_loop / t_bank,
+        "bank_psteps_per_s_per_filter": particle_steps / t_bank / num_scenarios,
+        "loop_psteps_per_s_per_filter": particle_steps / t_loop / num_scenarios,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sweep for CI smoke")
+    ap.add_argument("--particles", type=int, default=0, help="override particle count")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        particles, steps, sweep = 1024, 10, (1, 4, 8)
+        resamplers = ("megopolis", "systematic")
+    else:
+        particles, steps, sweep = 8192, 25, (1, 4, 16, 64)
+        resamplers = ("megopolis", "metropolis", "systematic")
+    particles = args.particles or particles
+    steps = args.steps or steps
+
+    rows = []
+    for resampler in resamplers:
+        for num_s in sweep:
+            rows.append(bench_one(resampler, num_s, particles, steps, args.iters))
+            print_table(rows[-1:])
+
+    csv_path = write_csv("filter_bank.csv", rows)
+    json_path = os.path.join(ensure_out(), "BENCH_filter_bank.json")
+    with open(json_path, "w") as f:
+        json.dump({"config": {"particles": particles, "steps": steps,
+                              "num_iters": args.iters},
+                   "rows": rows}, f, indent=2)
+    print(f"\nwrote {csv_path} and {json_path}")
+    best = max(rows, key=lambda r: r["speedup"])
+    print(f"best bank speedup: {best['speedup']:.2f}x "
+          f"({best['resampler']}, S={best['scenarios']})")
+
+
+if __name__ == "__main__":
+    main()

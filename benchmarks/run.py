@@ -21,6 +21,7 @@ SUITES = [
     ("fig8", "benchmarks.fig8_prefix_sum", []),
     ("fig10", "benchmarks.fig10_gamma", []),
     ("table2", "benchmarks.table2_e2e_pf", []),
+    ("filter_bank", "benchmarks.filter_bank_bench", ["--quick"]),
     ("smc", "benchmarks.smc_decode_bench", ["--particles", "32", "--new-tokens", "8",
                                             "--archs", "qwen3-0.6b"]),
 ]

@@ -9,8 +9,10 @@
 
 from repro.core.resamplers import (  # noqa: F401
     get_resampler,
+    get_resampler_batch,
     list_resamplers,
     megopolis,
+    megopolis_batch,
     metropolis,
     metropolis_c1,
     metropolis_c2,

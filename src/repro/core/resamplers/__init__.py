@@ -9,18 +9,42 @@ Every resampler shares one signature::
 ``jnp.bincount(ancestors, length=N)``.  Weights need NOT be normalised for
 the Metropolis family (only ratios are used) nor for the prefix-sum family
 (the running total is used as the upper edge).
+
+Every resampler also has a batched entry point (DESIGN.md §4)::
+
+    ancestors = get_resampler_batch(name)(key, weights, **kwargs)  # int32[B, N]
+
+over ``weights[B, N]`` — row ``b`` is bit-identical to the single-population
+call with key ``jax.random.split(key, B)[b]`` (see ``batched.py``).
 """
 
-from repro.core.resamplers.megopolis import megopolis
-from repro.core.resamplers.metropolis import metropolis, metropolis_c1, metropolis_c2
+from repro.core.resamplers.batched import (
+    batch_rows,
+    batch_via_vmap,
+    split_batch_keys,
+)
+from repro.core.resamplers.megopolis import megopolis, megopolis_batch
+from repro.core.resamplers.metropolis import (
+    metropolis,
+    metropolis_batch,
+    metropolis_c1,
+    metropolis_c1_batch,
+    metropolis_c2,
+    metropolis_c2_batch,
+)
 from repro.core.resamplers.prefix_sum import (
     multinomial,
+    multinomial_batch,
     systematic,
+    systematic_batch,
     improved_systematic,
+    improved_systematic_batch,
     stratified,
+    stratified_batch,
     residual,
+    residual_batch,
 )
-from repro.core.resamplers.rejection import rejection
+from repro.core.resamplers.rejection import rejection, rejection_batch
 
 _REGISTRY = {
     "megopolis": megopolis,
@@ -35,6 +59,25 @@ _REGISTRY = {
     "rejection": rejection,
 }
 
+# Batch axis first-class: one batched launch per registered resampler, all
+# honouring the split-key bit-identity contract (megopolis_batch's hand-
+# batched shared-offset mode is an explicit opt-in kwarg, not the registry
+# default — the registry path is vmap-derived for every family).
+_BATCH_REGISTRY = {
+    "megopolis": megopolis_batch,
+    "metropolis": metropolis_batch,
+    "metropolis_c1": metropolis_c1_batch,
+    "metropolis_c2": metropolis_c2_batch,
+    "multinomial": multinomial_batch,
+    "systematic": systematic_batch,
+    "improved_systematic": improved_systematic_batch,
+    "stratified": stratified_batch,
+    "residual": residual_batch,
+    "rejection": rejection_batch,
+}
+
+assert set(_BATCH_REGISTRY) == set(_REGISTRY)
+
 
 def get_resampler(name: str):
     """Look up a resampler by name; raises KeyError with choices on miss."""
@@ -42,6 +85,14 @@ def get_resampler(name: str):
         return _REGISTRY[name]
     except KeyError:
         raise KeyError(f"unknown resampler {name!r}; choices: {sorted(_REGISTRY)}") from None
+
+
+def get_resampler_batch(name: str):
+    """Batched counterpart of ``get_resampler`` (weights[B, N] -> int32[B, N])."""
+    try:
+        return _BATCH_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown resampler {name!r}; choices: {sorted(_BATCH_REGISTRY)}") from None
 
 
 def list_resamplers():

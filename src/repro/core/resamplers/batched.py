@@ -1,0 +1,73 @@
+"""Batched (multi-population) resampling — the scenario axis (DESIGN.md §4).
+
+A fleet of particle filters (one per scenario / request / hypothesis bank)
+wants ONE device launch per resampling step, not a Python loop of B
+launches.  Every resampler in the registry therefore gains a batched entry
+point::
+
+    ancestors = resample_batch(key, weights, num_iters, **kw)   # int32[B, N]
+
+with one contract, uniform across the registry (DESIGN.md §4):
+
+  * ``weights`` is ``f32[B, N]`` — B independent, unnormalised populations;
+  * the key is split ONCE along the batch axis, ``keys = split(key, B)``,
+    and row ``b`` of the output is bit-identical to the single-population
+    call ``resampler(keys[b], weights[b], num_iters, **kw)``;
+  * consequently rows are statistically independent and per-row
+    deterministic — growing or permuting the batch never changes the
+    result of a row that kept its key.
+
+For most families the batched form is derived here by ``jax.vmap`` (the
+per-row randomness is already expressed with counter-style ``fold_in`` /
+``split``, so vmap is bit-exact and fuses the whole bank into one XLA
+launch).  Megopolis additionally has a hand-batched shared-offset mode
+(``repro.core.resamplers.megopolis.megopolis_batch``) exploiting Alg. 5's
+structure: the global offset draw is one scalar table shared by every row,
+so the comparison-index map — and hence the gather pattern — is identical
+across the batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def split_batch_keys(key: jax.Array, batch: int) -> jax.Array:
+    """The ONE key-splitting convention of the batched API (DESIGN.md §4)."""
+    return jax.random.split(key, batch)
+
+
+def batch_rows(fn, keys, weights, num_iters=0, **kwargs):
+    """vmap ``fn`` over explicit per-row keys.
+
+    Bit-identical to ``[fn(keys[b], weights[b], num_iters, **kwargs) for b]``
+    — all per-row randomness in the registry is counter-based (``fold_in`` /
+    ``split``), which vmap maps elementwise.  Exposed separately so callers
+    that already carry per-row key chains (``run_filter_bank``) can join the
+    batched launch without re-deriving keys.
+    """
+    if weights.ndim != 2:
+        raise ValueError(f"batched resampling expects weights[B, N]; got shape {weights.shape}")
+    return jax.vmap(lambda k, w: fn(k, w, num_iters, **kwargs))(keys, weights)
+
+
+def batch_via_vmap(fn):
+    """Derive the standard batched entry point from a single-population
+    resampler (the trivial-to-batch families: Metropolis, prefix-sum,
+    rejection)."""
+
+    @functools.wraps(fn)
+    def resample_batch(key: jax.Array, weights: jnp.ndarray, num_iters: int = 0, **kwargs):
+        keys = split_batch_keys(key, weights.shape[0])
+        return batch_rows(fn, keys, weights, num_iters, **kwargs)
+
+    resample_batch.__name__ = f"{fn.__name__}_batch"
+    resample_batch.__qualname__ = f"{fn.__name__}_batch"
+    resample_batch.__doc__ = (
+        f"Batched {fn.__name__}: one launch over weights[B, N]; row b is "
+        f"bit-identical to {fn.__name__}(split(key, B)[b], weights[b], ...)."
+    )
+    return resample_batch

@@ -16,8 +16,12 @@ offspring variance (paper §6.1).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+from repro.core.resamplers.batched import split_batch_keys
 
 DEFAULT_SEGMENT = 32  # paper-faithful warp size; TPU kernel uses 1024.
 
@@ -40,6 +44,7 @@ def megopolis(
     num_iters: int,
     *,
     segment: int = DEFAULT_SEGMENT,
+    offsets: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Resample; returns int32 ancestor indices (paper Algorithm 5).
 
@@ -50,10 +55,15 @@ def megopolis(
       segment: coalescing segment size ``S``; any ``S >= 1`` is valid
         (Proposition 1 needs only bijectivity + uniformity, both independent
         of ``S``).
+      offsets: optional pre-drawn ``int[num_iters]`` global offsets.  When
+        given they replace the internal draw (the accept/reject uniforms are
+        unchanged — the key is split identically either way); this is the
+        injection point the shared-offset batched mode builds on.
     """
     n = weights.shape[0]
     key_off, key_u = jax.random.split(key)
-    offsets = jax.random.randint(key_off, (num_iters,), 0, n)
+    if offsets is None:
+        offsets = jax.random.randint(key_off, (num_iters,), 0, n)
     i = jnp.arange(n, dtype=jnp.int32)
 
     def body(b, k):
@@ -64,3 +74,53 @@ def megopolis(
         return jnp.where(accept, j, k)
 
     return jax.lax.fori_loop(0, num_iters, body, i)
+
+
+def megopolis_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    segment: int = DEFAULT_SEGMENT,
+    shared_offsets: bool = False,
+) -> jnp.ndarray:
+    """Batched Megopolis over ``weights[B, N]`` — one launch (DESIGN.md §4).
+
+    ``shared_offsets=False`` (registry default): the standard batched
+    contract — row ``b`` is bit-identical to
+    ``megopolis(split(key, B)[b], weights[b], ...)``; every row draws its
+    own offset table.
+
+    ``shared_offsets=True`` (hand-batched, Alg. 5's structure): the global
+    offsets ``o[1..num_iters]`` are drawn ONCE and shared by every row, so
+    per iteration the comparison map ``i -> j`` is one index vector for the
+    whole bank and the ``w[:, j]`` gather is a single batch-uniform pattern
+    — the batch-axis analogue of the paper's warp-shared offset (and what
+    the batched Pallas kernel scalar-prefetches).  Row ``b`` then equals
+    ``megopolis(split(key, B)[b], weights[b], ..., offsets=offsets)``;
+    accept/reject uniforms stay per-row independent.
+    """
+    if weights.ndim != 2:
+        raise ValueError(f"megopolis_batch expects weights[B, N]; got shape {weights.shape}")
+    bsz, n = weights.shape
+    keys = split_batch_keys(key, bsz)
+    if not shared_offsets:
+        return jax.vmap(lambda k, w: megopolis(k, w, num_iters, segment=segment))(keys, weights)
+
+    # One global offset table for the whole bank (drawn from key, not from
+    # any row key, so no row's uniform stream is correlated with it).
+    offsets = jax.random.randint(jax.random.fold_in(key, num_iters), (num_iters,), 0, n)
+    keys_u = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+    i = jnp.arange(n, dtype=jnp.int32)
+
+    def body(b, k):
+        j = megopolis_indices(i, offsets[b], segment, n).astype(jnp.int32)
+        u = jax.vmap(
+            lambda kk: jax.random.uniform(jax.random.fold_in(kk, b), (n,), weights.dtype)
+        )(keys_u)
+        w_k = jnp.take_along_axis(weights, k, axis=1)
+        w_j = weights[:, j]  # shared j: one gather pattern bank-wide
+        accept = u * w_k <= w_j
+        return jnp.where(accept, j[None, :], k)
+
+    return jax.lax.fori_loop(0, num_iters, body, jnp.broadcast_to(i, (bsz, n)))

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.resamplers.batched import batch_via_vmap
+
 WARP = 32  # threads per warp in the paper's cost model.
 
 
@@ -29,6 +31,12 @@ def metropolis(key: jax.Array, weights: jnp.ndarray, num_iters: int) -> jnp.ndar
         return jnp.where(accept, j, k)
 
     return jax.lax.fori_loop(0, num_iters, body, i)
+
+
+# Batched entry points (DESIGN.md §4): per-(row, particle, iteration)
+# randomness is already counter-based, so vmap is bit-exact and fuses the
+# whole bank's accept/reject loop into one launch.
+metropolis_batch = batch_via_vmap(metropolis)
 
 
 def _partition_geometry(n: int, partition_size_bytes: int, dtype_bytes: int = 4):
@@ -96,3 +104,7 @@ def metropolis_c2(
         return jnp.where(accept, j, k)
 
     return jax.lax.fori_loop(0, num_iters, body, i)
+
+
+metropolis_c1_batch = batch_via_vmap(metropolis_c1)
+metropolis_c2_batch = batch_via_vmap(metropolis_c2)

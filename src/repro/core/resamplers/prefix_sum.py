@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.resamplers.batched import batch_via_vmap
+
 
 def _inclusive_cumsum(weights: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(weights)
@@ -114,3 +116,13 @@ def residual(key: jax.Array, weights: jnp.ndarray, num_iters: int = 0) -> jnp.nd
     u = jax.random.uniform(key, (n,), weights.dtype) * c[-1]
     rnd = jnp.searchsorted(c, u, side="right").astype(jnp.int32)
     return jnp.where(slots < n_det, jnp.minimum(det, n - 1), jnp.minimum(rnd, n - 1))
+
+
+# Batched entry points (DESIGN.md §4).  vmap lowers the whole family to ONE
+# batched cumsum + ONE batched searchsorted (or batched bidirectional walk
+# for Alg. 8) — already the single-launch form the scenario axis wants.
+multinomial_batch = batch_via_vmap(multinomial)
+systematic_batch = batch_via_vmap(systematic)
+improved_systematic_batch = batch_via_vmap(improved_systematic)
+stratified_batch = batch_via_vmap(stratified)
+residual_batch = batch_via_vmap(residual)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.resamplers.batched import batch_via_vmap
+
 
 def rejection(
     key: jax.Array,
@@ -47,3 +49,10 @@ def rejection(
     done0 = u0 * w_max <= weights[i]
     k, _, _ = jax.lax.while_loop(cond, body, (i, done0, jnp.int32(0)))
     return k
+
+
+# Batched entry point (DESIGN.md §4).  Under vmap the while_loop runs until
+# the LAST row converges with per-row ``done`` masking — the batch-level
+# analogue of rejection's divergent-execution-time weakness (§1): one slow
+# row stalls the bank, which the bank benchmark makes visible.
+rejection_batch = batch_via_vmap(rejection)

@@ -8,6 +8,6 @@ Each package ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
 (pure-jnp oracle, bit-exact vs the kernel).
 """
 
-from repro.kernels.megopolis.ops import megopolis_tpu  # noqa: F401
+from repro.kernels.megopolis.ops import megopolis_tpu, megopolis_tpu_batch  # noqa: F401
 from repro.kernels.metropolis.ops import metropolis_tpu  # noqa: F401
 from repro.kernels.prefix_sum.ops import prefix_sum_tpu  # noqa: F401

@@ -13,7 +13,7 @@ Memory-access contract (DESIGN.md §2):
   * the intra-segment wrap ``(i + o[b]) mod SEG`` is a register-level flat
     roll of the tile — no extra memory traffic;
   * per-(particle, iteration) uniforms come from a stateless counter hash
-    (no CURAND state loads/stores — beyond-paper win, see EXPERIMENTS §Perf);
+    (no CURAND state loads/stores — beyond-paper win, see EXPERIMENTS.md §Perf);
   * the current ancestor's weight ``w[k]`` is carried by VALUE in a VMEM
     scratch accumulator (never re-fetched), exactly like the register-carried
     ``w_k`` in the CUDA original.
@@ -38,35 +38,63 @@ LANES = 128
 SEG = TILE  # 1024 particles = one (8,128) f32 tile
 
 
-def _kernel(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
-    """Grid step (t, b): one accept/reject sweep of tile t at iteration b."""
-    t = pl.program_id(0)
-    b = pl.program_id(1)
-    o = offsets_ref[b]
-    seed = seed_ref[0]
+def _sweep(t, b, o, seed, w_own, w_cmp, k_prev, wk_prev, n_total):
+    """One accept/reject sweep of one (8,128) tile (Alg. 5 lines 5-14).
 
+    Shared verbatim by the single-bank and batched kernel bodies so the two
+    can never drift arithmetically; ``k_prev``/``wk_prev`` are the carried
+    ancestor/weight values (ignored at b == 0, where k <- i and w[k] is
+    seeded from the tile's own weights)."""
     row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
     col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
     lane = row * LANES + col  # position p within the tile
     i_global = t * SEG + lane  # particle index (Alg. 5 line 5)
 
-    @pl.when(b == 0)
-    def _init():
-        k_ref[...] = i_global  # k <- i           (Alg. 5 line 6)
-        wk_ref[...] = w_own_ref[...]  # w[k] by value (register carry)
+    k = jnp.where(b == 0, i_global, k_prev)  # k <- i      (Alg. 5 line 6)
+    wk = jnp.where(b == 0, w_own, wk_prev)  # w[k] by value (register carry)
 
-    n_total = pl.num_programs(0) * SEG
     # j = i_aligned + o_aligned + (i + o) mod SEG   (Alg. 5 lines 7-11)
     # block fetch already applied i_aligned + o_aligned; flat-roll applies
     # the intra-segment wrap.
-    w_j = flat_roll(w_cmp_ref[...], o % SEG)
+    w_j = flat_roll(w_cmp, o % SEG)
     o_aligned = o - (o % SEG)
     j_global = (t * SEG + o_aligned + (i_global + o) % SEG) % n_total
 
     u = hash_uniform(seed, i_global, b, dtype=w_j.dtype)
-    accept = u * wk_ref[...] <= w_j  # u <= w[j]/w[k]  (line 13)
-    k_ref[...] = jnp.where(accept, j_global, k_ref[...])
-    wk_ref[...] = jnp.where(accept, w_j, wk_ref[...])
+    accept = u * wk <= w_j  # u <= w[j]/w[k]  (line 13)
+    return jnp.where(accept, j_global, k), jnp.where(accept, w_j, wk)
+
+
+def _kernel(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
+    """Grid step (t, b): one accept/reject sweep of tile t at iteration b."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = pl.num_programs(0) * SEG
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[b], seed_ref[0],
+        w_own_ref[...], w_cmp_ref[...], k_ref[...], wk_ref[...], n_total,
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+
+def _kernel_batch(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
+    """Grid step (s, t, b): row s of the bank, tile t, iteration b.
+
+    The offset table is scalar-prefetched ONCE for the whole bank (the
+    batch-axis analogue of Alg. 5's globally shared offset); rows decorrelate
+    through their per-row RNG seed ``seeds[s]`` only.  Block shapes carry a
+    leading 1 for the batch axis."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    n_total = pl.num_programs(1) * SEG
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[b], seeds_ref[s],
+        w_own_ref[0], w_cmp_ref[0], k_ref[0], wk_ref[...], n_total,
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -105,3 +133,53 @@ def megopolis_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
         interpret=interpret,
     )(offsets, seed, weights2d, weights2d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas_batch(
+    weights3d: jnp.ndarray,
+    offsets: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched pallas_call: a whole ``[Bz, R, 128]`` weight bank in ONE launch.
+
+    Grid grows a LEADING batch dimension (Bz, num_tiles, num_iters) — the
+    iteration axis stays innermost so the VMEM ``w[k]`` carry still runs the
+    full accept/reject chain per (row, tile) before moving on.  ``offsets``:
+    int32[num_iters], ONE table shared by every row (Alg. 5's global offset,
+    lifted to the bank — the comparison block index is then identical across
+    rows, so the scalar-prefetched schedule is row-invariant); ``seeds``:
+    uint32[Bz], one stateless-RNG stream per row.  Returns int32[Bz, R, 128];
+    row s is bit-identical to ``megopolis_pallas(weights3d[s], offsets,
+    seeds[s:s+1], ...)`` (asserted in tests/test_batched.py).
+    """
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    def _own_index(s, t, b, offs, seeds):
+        return s, t, 0
+
+    def _cmp_index(s, t, b, offs, seeds):
+        # aligned block chosen by the bank-shared offset (wraps mod num_tiles)
+        return s, (t + offs[b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # shared offsets + per-row seeds in SMEM
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+            pl.BlockSpec((1, SUBLANES, LANES), _cmp_index),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_batch,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(offsets, seeds, weights3d, weights3d)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import TILE, key_to_seed
-from repro.kernels.megopolis.megopolis import LANES, megopolis_pallas
+from repro.kernels.megopolis.megopolis import LANES, megopolis_pallas, megopolis_pallas_batch
 
 
 def megopolis_tpu(
@@ -41,3 +41,33 @@ def megopolis_tpu(
     w2 = weights.reshape(n // LANES, LANES)
     k2 = megopolis_pallas(w2, offsets, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
+
+
+def megopolis_tpu_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Resample a ``[B, N]`` weight bank in one kernel launch (DESIGN.md §4).
+
+    The global offset table is drawn ONCE and shared by every row (the
+    bank-level lift of Alg. 5's shared offset — one scalar-prefetch schedule
+    for the whole launch); each row gets its own stateless-RNG seed, so rows
+    stay statistically independent.  Returns int32[B, N] ancestors.
+    """
+    if weights.ndim != 2:
+        raise ValueError(f"megopolis_tpu_batch expects weights[B, N]; got {weights.shape}")
+    bsz, n = weights.shape
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_batch requires N % {TILE} == 0 (one f32 VMEM tile); got N={n}. "
+            "Use repro.core.megopolis_batch for unaligned N."
+        )
+    key_off, key_rows = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
+    seeds = key_to_seed(jax.random.split(key_rows, bsz))
+    w3 = weights.reshape(bsz, n // LANES, LANES)
+    k3 = megopolis_pallas_batch(w3, offsets, seeds, num_iters=num_iters, interpret=interpret)
+    return k3.reshape(bsz, n)

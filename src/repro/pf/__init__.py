@@ -1,3 +1,8 @@
-from repro.pf.filter import ParticleFilter, StateSpaceModel, run_filter  # noqa: F401
-from repro.pf.models import ungm  # noqa: F401
+from repro.pf.filter import (  # noqa: F401
+    ParticleFilter,
+    StateSpaceModel,
+    run_filter,
+    run_filter_bank,
+)
+from repro.pf.models import ungm, ungm_family, ungm_theta  # noqa: F401
 from repro.pf.metrics import rmse, resample_ratio  # noqa: F401

@@ -4,10 +4,17 @@ The modified SIR filter (Alg. 6) drops weight normalisation — the
 Metropolis-family resamplers only use weight *ratios* — and estimates the
 state as the post-resampling particle mean (uniform weights).
 
-Two execution modes:
+Three execution modes:
   * ``run_filter``: fully jitted ``lax.scan`` over time steps (production).
+  * ``run_filter_bank``: S independent filters — a SCENARIO axis of
+    observation streams, model parameters and keys — under ONE jitted scan
+    whose resampling step is a single batched launch (DESIGN.md §4).
   * ``run_filter_timed``: per-stage host timing (predict+update / resample /
     estimate) for the paper's Resample-Ratio metric (eq. 25).
+
+Model callables take ``(key, x, t)``; scenario-parameterised models take a
+trailing ``theta`` pytree (``(key, x, t, theta)``), enabling per-scenario
+dynamics in the bank (see ``repro.pf.models.ungm_family``).
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import get_resampler
+from repro.core.resamplers.batched import batch_rows, split_batch_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,12 +51,12 @@ class ParticleFilter:
         fn = get_resampler(self.resampler)
         return fn(key, weights, self.num_iters, **dict(self.resampler_kwargs))
 
-    def step(self, key, particles, z, t):
+    def step(self, key, particles, z, t, theta=None):
         """One SIR step (Alg. 6): returns (particles', estimate, weights)."""
         k_pred, k_res = jax.random.split(key)
         # Stage 1: predict + update
-        x = self.model.transition(k_pred, particles, t)
-        w = self.model.likelihood(z, x, t)
+        x = _call(self.model.transition, k_pred, particles, t, theta=theta)
+        w = _call(self.model.likelihood, z, x, t, theta=theta)
         # Stage 2: resample
         ancestors = self._resample(k_res, w)
         x_bar = jnp.take(x, ancestors, axis=0)
@@ -56,14 +64,20 @@ class ParticleFilter:
         return x_bar, jnp.mean(x_bar), w
 
 
-def simulate(key, model: StateSpaceModel, num_steps: int):
+def _call(fn, *args, theta=None):
+    """Invoke a model callable, appending ``theta`` only when given — keeps
+    the plain ``(key, x, t)`` model API untouched."""
+    return fn(*args) if theta is None else fn(*args, theta)
+
+
+def simulate(key, model: StateSpaceModel, num_steps: int, theta=None):
     """Ground-truth trajectory + observations."""
 
     def body(carry, t):
         x, k = carry
         k, k1, k2 = jax.random.split(k, 3)
-        x = model.transition(k1, x, t)
-        z = model.observe(k2, x, t)
+        x = _call(model.transition, k1, x, t, theta=theta)
+        z = _call(model.observe, k2, x, t, theta=theta)
         return (x, k), (x, z)
 
     k0, key = jax.random.split(key)
@@ -72,14 +86,14 @@ def simulate(key, model: StateSpaceModel, num_steps: int):
     return xs, zs
 
 
-def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray):
+def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None):
     """Jitted scan over time; returns estimates f32[T]."""
 
     def body(carry, inp):
         particles, k = carry
         t, z = inp
         k, ks = jax.random.split(k)
-        particles, est, _ = pf.step(ks, particles, z, t)
+        particles, est, _ = pf.step(ks, particles, z, t, theta=theta)
         return (particles, k), est
 
     k0, key = jax.random.split(key)
@@ -87,6 +101,62 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray):
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
     _, ests = jax.lax.scan(body, (particles, key), (ts, observations))
     return ests
+
+
+def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=None):
+    """Run S independent filters in ONE jitted scan; returns estimates f32[S, T].
+
+    The scenario axis (DESIGN.md §4): ``observations`` is ``[S, T]`` — one
+    observation stream per scenario; ``thetas`` (optional) is a pytree whose
+    leaves carry a leading ``[S]`` axis of per-scenario model parameters.
+    ``key`` is split once along the scenario axis (the batched-API key
+    contract), so row ``s`` of the result is bit-identical to
+    ``run_filter(split(key, S)[s], pf, observations[s], thetas[s])`` — a
+    bank is a drop-in replacement for the naive Python loop of S filters,
+    at one device launch per pipeline stage instead of S.
+
+    Every stage is batched: predict/update via vmap over the scenario axis,
+    resampling via the registry's batched path (one launch over the whole
+    ``[S, N]`` weight bank).
+    """
+    num_s = observations.shape[0]
+    fn = get_resampler(pf.resampler)
+    kwargs = dict(pf.resampler_kwargs)
+    keys = split_batch_keys(key, num_s)
+
+    def init_one(k):
+        k0, kc = jax.random.split(k)
+        return pf.model.init(k0, pf.num_particles), kc
+
+    particles, carry_keys = jax.vmap(init_one)(keys)
+
+    theta_axes = None if thetas is None else jax.tree.map(lambda _: 0, thetas)
+
+    def body(carry, inp):
+        xs, ks = carry  # [S, N] particles, [S] key chain
+        t, zs = inp  # scalar step, [S] observations
+        step = jax.vmap(jax.random.split)(ks)
+        ks_next, step_keys = step[:, 0], step[:, 1]
+        pr = jax.vmap(jax.random.split)(step_keys)
+        k_pred, k_res = pr[:, 0], pr[:, 1]
+        # Stage 1 (batched): predict + update
+        x = jax.vmap(
+            lambda k, xr, th: _call(pf.model.transition, k, xr, t, theta=th),
+            in_axes=(0, 0, theta_axes),
+        )(k_pred, xs, thetas)
+        w = jax.vmap(
+            lambda z, xr, th: _call(pf.model.likelihood, z, xr, t, theta=th),
+            in_axes=(0, 0, theta_axes),
+        )(zs, x, thetas)
+        # Stage 2: ONE batched resampling launch for the whole bank
+        ancestors = batch_rows(fn, k_res, w, pf.num_iters, **kwargs)
+        x_bar = jnp.take_along_axis(x, ancestors, axis=1)
+        # Stage 3 (batched): estimate
+        return (x_bar, ks_next), jnp.mean(x_bar, axis=1)
+
+    ts = jnp.arange(1, observations.shape[1] + 1, dtype=jnp.float32)
+    _, ests = jax.lax.scan(body, (particles, carry_keys), (ts, observations.T))
+    return ests.T
 
 
 def run_filter_timed(key, pf: ParticleFilter, observations, warmup: int = 2):

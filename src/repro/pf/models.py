@@ -47,3 +47,39 @@ def ungm() -> StateSpaceModel:
         init=_init,
         name="ungm",
     )
+
+
+# ---------------------------------------------------------------- scenarios
+def ungm_theta(amp: float = 8.0, obs_var: float = _SIGMA_N2) -> dict:
+    """One scenario's parameters for ``ungm_family``: forcing amplitude
+    (the paper's fixed 8 cos(1.2 t) term) and measurement-noise variance."""
+    return {"amp": jnp.float32(amp), "obs_var": jnp.float32(obs_var)}
+
+
+def _transition_theta(key, x, t, theta):
+    v = jax.random.normal(key, x.shape, x.dtype) * jnp.sqrt(_SIGMA_V2)
+    return x / 2.0 + 25.0 * x / (1.0 + x**2) + theta["amp"] * jnp.cos(1.2 * t) + v
+
+
+def _observe_theta(key, x, t, theta):
+    n = jax.random.normal(key, x.shape, x.dtype) * jnp.sqrt(theta["obs_var"])
+    return x**2 / 20.0 + n
+
+
+def _likelihood_theta(z, x, t, theta):
+    resid = z - x**2 / 20.0
+    return jnp.exp(-0.5 * resid**2 / theta["obs_var"])
+
+
+def ungm_family() -> StateSpaceModel:
+    """UNGM with per-scenario parameters (trailing ``theta`` pytree arg) —
+    the scenario-axis model for ``run_filter_bank``: one bank runs S
+    differently-forced / differently-noised UNGM instances at once.
+    ``theta == ungm_theta()`` reproduces ``ungm`` exactly."""
+    return StateSpaceModel(
+        transition=_transition_theta,
+        observe=_observe_theta,
+        likelihood=_likelihood_theta,
+        init=_init,
+        name="ungm-family",
+    )

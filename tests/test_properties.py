@@ -8,6 +8,9 @@ invariants.  Each is asserted over generated inputs, not examples.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.resamplers.megopolis import megopolis, megopolis_indices
