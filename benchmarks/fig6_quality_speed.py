@@ -9,24 +9,25 @@ CI scale by default (N up to 2^16, K=32); ``--full`` restores the paper's
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
-from repro.core import get_resampler
+from repro.core import MegopolisSpec, MetropolisC1Spec, MetropolisC2Spec, MetropolisSpec
 from repro.core.iterations import gaussian_weight_iterations
 from repro.core.metrics import bias_variance
 from repro.core.weightgen import gaussian_weights
 
+# One typed spec template per competitor (DESIGN.md §9); the per-grid-point
+# iteration count is a spec.replace sweep, not kwargs plumbing.
 ALGOS = {
-    "megopolis": ("megopolis", {}),
-    "metropolis": ("metropolis", {}),
-    "c1_ps128": ("metropolis_c1", {"partition_size_bytes": 128}),
-    "c1_ps2048": ("metropolis_c1", {"partition_size_bytes": 2048}),
-    "c2_ps128": ("metropolis_c2", {"partition_size_bytes": 128}),
-    "c2_ps2048": ("metropolis_c2", {"partition_size_bytes": 2048}),
+    "megopolis": MegopolisSpec(),
+    "metropolis": MetropolisSpec(),
+    "c1_ps128": MetropolisC1Spec(partition_size_bytes=128),
+    "c1_ps2048": MetropolisC1Spec(partition_size_bytes=2048),
+    "c2_ps128": MetropolisC2Spec(partition_size_bytes=128),
+    "c2_ps2048": MetropolisC2Spec(partition_size_bytes=2048),
 }
 
 
@@ -40,24 +41,23 @@ def run(full: bool = False, weight_gen=gaussian_weights, grid=(0.0, 1.0, 2.0, 3.
     rows = []
     for n in ns:
         for p in grid:
-            b = int(b_for(p))
-            for name, (reg, kw) in ALGOS.items():
-                fn = get_resampler(reg)
+            iters = int(b_for(p))
+            for name, template in ALGOS.items():
+                resample = template.replace(num_iters=iters).build()
                 mse_acc, bias_acc = 0.0, 0.0
                 for s in range(seqs):
                     kw_w = jax.random.fold_in(jax.random.PRNGKey(17), int(p * 100) + s)
                     w = weight_gen(kw_w, n, p)
-                    off = offsprings_for(fn, jax.random.fold_in(kw_w, 1), w,
-                                         runs, num_iters=b, **kw)
+                    off = offsprings_for(resample, jax.random.fold_in(kw_w, 1), w, runs)
                     var, bias_sq, total = bias_variance(off, w)
                     mse_acc += float(total) / n
                     bias_acc += float(bias_sq / jnp.maximum(total, 1e-30))
-                jit_fn = jax.jit(functools.partial(fn, num_iters=b, **kw))
+                jit_fn = jax.jit(resample)
                 w = weight_gen(jax.random.PRNGKey(3), n, p)
                 t = time_fn(lambda k: jit_fn(k, w), jax.random.PRNGKey(5),
                             warmup=1, repeats=3)
                 rows.append({
-                    "n": n, param_name: p, "B": b, "algo": name,
+                    "n": n, param_name: p, "B": iters, "algo": name,
                     "mse_over_n": mse_acc / seqs,
                     "bias_contrib": bias_acc / seqs,
                     "time_s": t,

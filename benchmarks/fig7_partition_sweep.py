@@ -5,12 +5,11 @@ largest N with y = 4 (weights concentrated — the degeneracy regime)."""
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 
 from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
-from repro.core import get_resampler
+from repro.core import MegopolisSpec, MetropolisC1Spec, MetropolisC2Spec
 from repro.core.iterations import gaussian_weight_iterations
 from repro.core.metrics import bias_variance
 from repro.core.weightgen import gaussian_weights
@@ -25,22 +24,28 @@ def main(argv=None):
     args = ap.parse_args(argv)
     n = 1 << (22 if args.full else 14)
     runs = 256 if args.full else 16
-    b = gaussian_weight_iterations(args.y, 0.01)
+    iters = gaussian_weight_iterations(args.y, 0.01)
     key = jax.random.PRNGKey(11)
     w = gaussian_weights(key, n, args.y)
 
+    # The partition sweep is a spec.replace sweep (DESIGN.md §9): one
+    # validated template per family, varied along its tuning axis — the
+    # Megopolis reference line has no such axis, which is the point.
+    templates = {
+        "megopolis": MegopolisSpec(num_iters=iters),
+        "metropolis_c1": MetropolisC1Spec(num_iters=iters),
+        "metropolis_c2": MetropolisC2Spec(num_iters=iters),
+    }
     rows = []
-    for algo in ("megopolis", "metropolis_c1", "metropolis_c2"):
+    for algo, template in templates.items():
         sizes = (0,) if algo == "megopolis" else PARTITIONS
         for ps in sizes:
-            kw = {} if algo == "megopolis" else {"partition_size_bytes": ps}
-            fn = get_resampler(algo)
-            off = offsprings_for(fn, jax.random.fold_in(key, 1), w, runs,
-                                 num_iters=b, **kw)
+            spec = template if ps == 0 else template.replace(partition_size_bytes=ps)
+            resample = spec.build()
+            off = offsprings_for(resample, jax.random.fold_in(key, 1), w, runs)
             var, bias_sq, total = bias_variance(off, w)
-            jit_fn = jax.jit(functools.partial(fn, num_iters=b, **kw))
-            t = time_fn(lambda k: jit_fn(k, w), jax.random.PRNGKey(5))
-            rows.append({"algo": algo, "partition_bytes": ps, "B": b,
+            t = time_fn(jax.jit(resample), jax.random.PRNGKey(5), w)
+            rows.append({"algo": algo, "partition_bytes": ps, "B": iters,
                          "mse_over_n": float(total) / n, "time_s": t})
     write_csv("fig7.csv", rows)
     print_table(rows)

@@ -9,12 +9,11 @@ Megopolis' stays flat (§6.5)."""
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 
 from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
-from repro.core import get_resampler
+from repro.core import coerce_spec
 from repro.core.iterations import gaussian_weight_iterations
 from repro.core.metrics import bias_variance
 from repro.core.weightgen import gaussian_weights
@@ -33,16 +32,16 @@ def main(argv=None):
     rows = []
     for n in ns:
         for y in ys:
-            b = gaussian_weight_iterations(y, 0.01)
+            iters = gaussian_weight_iterations(y, 0.01)
             key = jax.random.fold_in(jax.random.PRNGKey(23), int(y * 10))
             w = gaussian_weights(key, n, y)
             for algo in ALGOS:
-                fn = get_resampler(algo)
-                kw = {"num_iters": b} if algo == "megopolis" else {}
-                off = offsprings_for(fn, jax.random.fold_in(key, 1), w, runs, **kw)
+                # coerce_spec applies the iteration count only where the
+                # family has one — no per-algorithm conditionals.
+                resample = coerce_spec(algo, num_iters=iters).build()
+                off = offsprings_for(resample, jax.random.fold_in(key, 1), w, runs)
                 var, bias_sq, total = bias_variance(off, w)
-                jit_fn = jax.jit(functools.partial(fn, **kw))
-                t = time_fn(lambda k: jit_fn(k, w), jax.random.PRNGKey(5))
+                t = time_fn(jax.jit(resample), jax.random.PRNGKey(5), w)
                 rows.append({"n": n, "y": y, "algo": algo,
                              "mse_over_n": float(total) / n,
                              "bias_contrib": float(bias_sq / max(float(total), 1e-30)),

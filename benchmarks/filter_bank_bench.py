@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import ensure_out, print_table, time_fn, write_csv
+from repro.core import coerce_spec
 from repro.pf.filter import ParticleFilter, run_filter, run_filter_bank, simulate
 from repro.pf.models import ungm_family, ungm_theta
 
@@ -41,7 +42,10 @@ def bench_one(resampler: str, num_scenarios: int, particles: int, steps: int,
         simulate(jax.random.PRNGKey(100 + s), model, steps, theta=th)[1]
         for s, th in enumerate(scenarios)
     ])
-    pf = ParticleFilter(model, particles, resampler=resampler, num_iters=num_iters)
+    # One spec per swept resampler; coerce_spec drops the iteration count for
+    # the prefix-sum entries (DESIGN.md §9).
+    pf = ParticleFilter(model, particles,
+                        resampler=coerce_spec(resampler, num_iters=num_iters))
     key = jax.random.PRNGKey(0)
     keys = jax.random.split(key, num_scenarios)
 

@@ -14,30 +14,36 @@ import jax
 import numpy as np
 
 from benchmarks.common import print_table, write_csv
+from repro.core import (
+    MegopolisSpec,
+    MetropolisC1Spec,
+    MetropolisC2Spec,
+    MetropolisSpec,
+    PrefixSumSpec,
+)
 from repro.pf.filter import ParticleFilter, run_filter_timed, simulate
 from repro.pf.metrics import resample_ratio, rmse
 from repro.pf.models import ungm
 
+# Typed spec templates (DESIGN.md §9): the B sweep is spec.replace, and the
+# per-algorithm hyperparameters live inside the spec — no kwargs tuples.
 FIG9_ALGOS = {
-    "megopolis": (),
-    "metropolis": (),
-    "c1_ps128": (("partition_size_bytes", 128),),
-    "c2_ps128": (("partition_size_bytes", 128),),
+    "megopolis": MegopolisSpec(),
+    "metropolis": MetropolisSpec(),
+    "c1_ps128": MetropolisC1Spec(partition_size_bytes=128),
+    "c2_ps128": MetropolisC2Spec(partition_size_bytes=128),
 }
-_REG = {"c1_ps128": "metropolis_c1", "c2_ps128": "metropolis_c2"}
 
 
-def evaluate(algo: str, b: int, *, particles: int, steps: int, mc_runs: int,
-             kwargs=()) -> dict:
+def evaluate(algo: str, spec, b: int, *, particles: int, steps: int,
+             mc_runs: int) -> dict:
     model = ungm()
     errs, ratios = [], []
     for run_i in range(mc_runs):
         key = jax.random.PRNGKey(run_i)
         k_sim, k_flt = jax.random.split(key)
         xs, zs = simulate(k_sim, model, steps)
-        kw = dict(kwargs)
-        pf = ParticleFilter(model, particles, resampler=_REG.get(algo, algo),
-                            num_iters=b, resampler_kwargs=tuple(kw.items()))
+        pf = ParticleFilter(model, particles, resampler=spec)
         ests, times = run_filter_timed(k_flt, pf, zs)
         errs.append(rmse(np.asarray(ests)[None], np.asarray(xs)))
         ratios.append(resample_ratio(times))
@@ -56,10 +62,10 @@ def main(argv=None):
     # Fig. 9: B sweep
     b_values = (5, 10, 20, 30) if not args.full else (5, 7, 10, 15, 20, 25, 30, 40)
     fig9 = []
-    for b in b_values:
-        for algo, kw in FIG9_ALGOS.items():
-            fig9.append(evaluate(algo, b, particles=particles, steps=steps,
-                                 mc_runs=mc, kwargs=kw))
+    for iters in b_values:
+        for algo, template in FIG9_ALGOS.items():
+            fig9.append(evaluate(algo, template.replace(num_iters=iters), iters,
+                                 particles=particles, steps=steps, mc_runs=mc))
     write_csv("fig9.csv", fig9)
     print("== Fig. 9 (B sweep) ==")
     print_table(fig9)
@@ -67,11 +73,12 @@ def main(argv=None):
     # Table 2: fixed B + unbiased baselines
     table2 = []
     for algo in ("multinomial", "improved_systematic"):
-        table2.append(evaluate(algo, 0, particles=particles, steps=steps, mc_runs=mc))
-    for b in (16, 32, 64):
-        for algo, kw in FIG9_ALGOS.items():
-            table2.append(evaluate(algo, b, particles=particles, steps=steps,
-                                   mc_runs=mc, kwargs=kw))
+        table2.append(evaluate(algo, PrefixSumSpec(kind=algo), 0,
+                               particles=particles, steps=steps, mc_runs=mc))
+    for iters in (16, 32, 64):
+        for algo, template in FIG9_ALGOS.items():
+            table2.append(evaluate(algo, template.replace(num_iters=iters), iters,
+                                   particles=particles, steps=steps, mc_runs=mc))
     write_csv("table2.csv", table2)
     print("\n== Table 2 ==")
     print_table(table2)

@@ -19,6 +19,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import (
+    MegopolisSpec,
+    MetropolisC1Spec,
+    MetropolisSpec,
+    PrefixSumSpec,
+)
 from repro.pf.filter import (
     ParticleFilter,
     run_filter,
@@ -44,7 +50,7 @@ def run_bank_demo(args):
         obs.append(zs)
     obs = jnp.stack(obs)
 
-    pf = ParticleFilter(model, args.particles, resampler="megopolis", num_iters=args.iters)
+    pf = ParticleFilter(model, args.particles, resampler=MegopolisSpec(num_iters=args.iters))
     key = jax.random.PRNGKey(42)
 
     bank = jax.jit(lambda k: run_filter_bank(k, pf, obs, thetas=thetas))
@@ -89,15 +95,16 @@ def main():
 
     print(f"UNGM, {args.particles} particles, {args.steps} steps, B={args.iters}\n")
     print(f"{'resampler':22s} {'RMSE':>8s} {'resample ratio':>15s}")
-    for name in ("megopolis", "metropolis", "metropolis_c1", "improved_systematic"):
-        kw = () if "metropolis" not in name and name != "megopolis" else ()
-        pf = ParticleFilter(model, args.particles, resampler=name,
-                            num_iters=args.iters,
-                            resampler_kwargs=((("partition_size_bytes", 128),)
-                                              if name == "metropolis_c1" else ()))
+    # Each competitor is one typed spec — hyperparameters travel inside it
+    # (DESIGN.md §9), so there is no per-algorithm kwargs plumbing here.
+    for spec in (MegopolisSpec(num_iters=args.iters),
+                 MetropolisSpec(num_iters=args.iters),
+                 MetropolisC1Spec(num_iters=args.iters, partition_size_bytes=128),
+                 PrefixSumSpec(kind="improved_systematic")):
+        pf = ParticleFilter(model, args.particles, resampler=spec)
         ests, times = run_filter_timed(k_flt, pf, obs)
         err = rmse(np.asarray(ests)[None], np.asarray(truth))
-        print(f"{name:22s} {err:8.3f} {resample_ratio(times):15.3f}")
+        print(f"{spec.name:22s} {err:8.3f} {resample_ratio(times):15.3f}")
 
 
 if __name__ == "__main__":

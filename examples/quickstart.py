@@ -4,18 +4,22 @@ Resamples one degenerate weight population with Megopolis and every
 comparison method, reproducing the paper's headline quality ordering, the
 eq. (3) iteration selection, and the memory-transaction argument.
 
+Resamplers are configured through the typed spec API (DESIGN.md §9): one
+spec object per family, ``spec.build()`` returns the callable, and
+``num_iters='auto'`` makes the no-tuning story literal — no per-algorithm
+kwargs anywhere.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import get_resampler, list_resamplers
+from repro.core import MegopolisSpec, coerce_spec, list_resamplers
 from repro.core.iterations import select_iterations
 from repro.core.metrics import bias_variance
 from repro.core.transactions import index_streams, transactions_per_group
 from repro.core.weightgen import gaussian_weights
-from repro.kernels.megopolis.ops import megopolis_tpu
 
 N = 1 << 14
 Y = 3.0  # weight concentration (paper eq. 12); higher = more degenerate
@@ -23,26 +27,36 @@ RUNS = 64
 
 key = jax.random.PRNGKey(0)
 weights = gaussian_weights(key, N, Y)
-b = int(select_iterations(weights, epsilon=0.01))
-print(f"N={N} particles, y={Y} -> B={b} iterations (paper eq. 3)\n")
+iters = int(select_iterations(weights, epsilon=0.01))
+print(f"N={N} particles, y={Y} -> B={iters} iterations (paper eq. 3)\n")
 
 print(f"{'resampler':22s} {'MSE/N':>10s} {'bias%':>8s}")
 for name in ("megopolis", "metropolis", "metropolis_c1", "metropolis_c2",
              "multinomial", "systematic", "improved_systematic"):
-    fn = get_resampler(name)
-    kw = {"num_iters": b} if "metropolis" in name or name == "megopolis" else {}
+    # One uniform line per family: coerce_spec applies num_iters only where
+    # the family has the field (the prefix-sum methods take none).
+    resample = coerce_spec(name, num_iters=iters).build()
 
     @jax.jit
-    def one(k):
-        return jnp.bincount(fn(k, weights, **kw), length=N)
+    def one(k, resample=resample):
+        return jnp.bincount(resample(k, weights), length=N)
 
     offs = jax.lax.map(one, jax.random.split(jax.random.fold_in(key, 1), RUNS))
     var, bias_sq, total = bias_variance(offs, weights)
     print(f"{name:22s} {float(total)/N:10.4f} {100*float(bias_sq/total):8.2f}")
 
-# the TPU kernel (interpret mode on CPU) agrees with the core algorithm
-anc = megopolis_tpu(key, weights[: (N // 1024) * 1024], b)
-print(f"\nPallas kernel resampled {anc.shape[0]} particles "
+# num_iters='auto' routes through eq. (3) at call time: the headline
+# "no tuning parameter" claim as API — no B chosen anywhere.
+auto = MegopolisSpec().build()
+anc_auto = auto(jax.random.fold_in(key, 2), weights)
+print(f"\nMegopolisSpec() auto-selected B at call time "
+      f"(ancestors[0..5] = {anc_auto[:6].tolist()})")
+
+# Backend dispatch lives in the spec: the same family runs the Pallas TPU
+# kernel (interpret mode on CPU) from one field flip.
+kernel = MegopolisSpec(num_iters=iters, segment=1024, backend="pallas_interpret").build()
+anc = kernel(key, weights[: (N // 1024) * 1024])
+print(f"Pallas kernel resampled {anc.shape[0]} particles "
       f"(ancestor[0..5] = {anc[:6].tolist()})")
 
 # the paper's speed argument, counted: transactions per 32-thread warp

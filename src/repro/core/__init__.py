@@ -8,9 +8,19 @@
 # memory-transaction cost model (Figs. 1-4) evaluated analytically.
 
 from repro.core.resamplers import (  # noqa: F401
+    MegopolisSpec,
+    MetropolisC1Spec,
+    MetropolisC2Spec,
+    MetropolisSpec,
+    PrefixSumSpec,
+    RejectionSpec,
+    Resampler,
+    ResamplerSpec,
+    coerce_spec,
     get_resampler,
     get_resampler_batch,
     list_resamplers,
+    spec_from_name,
     megopolis,
     megopolis_batch,
     metropolis,

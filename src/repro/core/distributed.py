@@ -157,6 +157,7 @@ def effective_sample_size(local_weights: jnp.ndarray, *, axis_name: str):
 def make_distributed_resampler(
     mesh,
     *,
+    spec=None,
     axis_name: str = "data",
     num_iters: int = 32,
     segment: int = 1024,
@@ -165,9 +166,40 @@ def make_distributed_resampler(
 ):
     """Build a jitted global-array resampler over ``mesh``.
 
+    ``spec`` (a ``MegopolisSpec``, DESIGN.md §9) supplies ``num_iters`` and
+    ``segment`` in one typed object, overriding the loose kwargs; the
+    distributed-only knobs (``axis_name``, ``schedule``, ``static_seed``)
+    stay here — they configure the chip-level decomposition, not the
+    algorithm family.  ``num_iters`` must be concrete (the per-iteration
+    ppermute schedule is built at trace time), so ``num_iters='auto'``
+    specs are rejected eagerly.
+
     Returns ``fn(key, weights_global) -> ancestors_global`` where weights are
     sharded ``P(axis_name)`` and ancestors come back with the same sharding.
     """
+    if spec is not None:
+        from repro.core.spec import MegopolisSpec
+
+        if not isinstance(spec, MegopolisSpec):
+            raise TypeError(
+                f"make_distributed_resampler takes a MegopolisSpec; got {type(spec).__name__} "
+                "(the hierarchical decomposition is Alg. 5 specific)"
+            )
+        if not isinstance(spec.num_iters, int):
+            raise ValueError(
+                "make_distributed_resampler needs a concrete num_iters (the "
+                "shard-offset schedule is built per iteration at trace time); "
+                f"got num_iters={spec.num_iters!r}"
+            )
+        if spec.backend not in ("reference", "xla"):
+            raise ValueError(
+                "make_distributed_resampler runs its own shard_map decomposition, "
+                f"not the single-chip Pallas kernel; got backend={spec.backend!r} "
+                "(use backend='reference')"
+            )
+        num_iters, segment = spec.num_iters, spec.segment
+    if schedule not in ("static", "dynamic"):
+        raise ValueError(f"schedule must be 'static' or 'dynamic'; got {schedule!r}")
     n_shards = int(np.prod([mesh.shape[a] for a in (axis_name,)]))
     shard_sched = _static_shard_schedule(static_seed, num_iters, n_shards)
 

@@ -16,6 +16,11 @@ Every resampler also has a batched entry point (DESIGN.md §4)::
 
 over ``weights[B, N]`` — row ``b`` is bit-identical to the single-population
 call with key ``jax.random.split(key, B)[b]`` (see ``batched.py``).
+
+Both string lookups are legacy shims: the typed spec API in
+``repro.core.spec`` (DESIGN.md §9) is the primary surface —
+``spec_from_name(name, **hyperparams).build()`` returns a ``Resampler``
+whose ``__call__`` / ``.batch`` bake the hyperparameters in.
 """
 
 from repro.core.resamplers.batched import (
@@ -46,54 +51,20 @@ from repro.core.resamplers.prefix_sum import (
 )
 from repro.core.resamplers.rejection import rejection, rejection_batch
 
-_REGISTRY = {
-    "megopolis": megopolis,
-    "metropolis": metropolis,
-    "metropolis_c1": metropolis_c1,
-    "metropolis_c2": metropolis_c2,
-    "multinomial": multinomial,
-    "systematic": systematic,
-    "improved_systematic": improved_systematic,
-    "stratified": stratified,
-    "residual": residual,
-    "rejection": rejection,
-}
-
-# Batch axis first-class: one batched launch per registered resampler, all
-# honouring the split-key bit-identity contract (megopolis_batch's hand-
-# batched shared-offset mode is an explicit opt-in kwarg, not the registry
-# default — the registry path is vmap-derived for every family).
-_BATCH_REGISTRY = {
-    "megopolis": megopolis_batch,
-    "metropolis": metropolis_batch,
-    "metropolis_c1": metropolis_c1_batch,
-    "metropolis_c2": metropolis_c2_batch,
-    "multinomial": multinomial_batch,
-    "systematic": systematic_batch,
-    "improved_systematic": improved_systematic_batch,
-    "stratified": stratified_batch,
-    "residual": residual_batch,
-    "rejection": rejection_batch,
-}
-
-assert set(_BATCH_REGISTRY) == set(_REGISTRY)
-
-
-def get_resampler(name: str):
-    """Look up a resampler by name; raises KeyError with choices on miss."""
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown resampler {name!r}; choices: {sorted(_REGISTRY)}") from None
-
-
-def get_resampler_batch(name: str):
-    """Batched counterpart of ``get_resampler`` (weights[B, N] -> int32[B, N])."""
-    try:
-        return _BATCH_REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown resampler {name!r}; choices: {sorted(_BATCH_REGISTRY)}") from None
-
-
-def list_resamplers():
-    return sorted(_REGISTRY)
+# The typed spec API (DESIGN.md §9) owns the ONE name-keyed family table;
+# the legacy string lookups below are thin shims over it.
+from repro.core.spec import (  # noqa: F401,E402
+    MegopolisSpec,
+    MetropolisC1Spec,
+    MetropolisC2Spec,
+    MetropolisSpec,
+    PrefixSumSpec,
+    RejectionSpec,
+    Resampler,
+    ResamplerSpec,
+    coerce_spec,
+    get_resampler,
+    get_resampler_batch,
+    list_resamplers,
+    spec_from_name,
+)

@@ -1,0 +1,583 @@
+"""Typed resampler specs — one object per family, one build surface (DESIGN.md §9).
+
+The paper's headline claim is that Megopolis needs *no tuning parameter*
+beyond the eq. (3) iteration count, yet the pre-spec API forced every call
+site to hand-thread ``num_iters`` and per-algorithm kwargs.  A
+``ResamplerSpec`` is the typed replacement: a frozen, hashable dataclass —
+one per algorithm family — that carries every hyperparameter the family
+has, validates it EAGERLY (bad segment / backend / kind errors at
+construction, not at trace time), and builds a uniform callable::
+
+    spec = MegopolisSpec(num_iters=24, segment=32)
+    r = spec.build()            # -> Resampler
+    anc  = r(key, weights)      # int32[N]      (single population)
+    bank = r.batch(key, w_bank) # int32[B, N]   (weights[B, N], split-key rows)
+
+Properties:
+
+  * **Static-safe.**  Specs are registered as static pytree nodes
+    (``jax.tree_util.register_static``): hashable, usable as ``jit`` static
+    arguments, storable inside other frozen configs (``ParticleFilter``,
+    ``SMCDecodeConfig``), and ``jax.tree`` round-trips return the same
+    object.
+  * **Sweepable.**  ``spec.replace(partition_size_bytes=2048)`` returns a
+    validated variant — benchmark sweeps are spec transformations.
+  * **No tuning parameter.**  ``num_iters='auto'`` (the Metropolis-family
+    default) routes through ``select_iterations`` (paper eq. 3) at call
+    time, so the no-tuning story is first-class: ``MegopolisSpec().build()``
+    resamples any weight vector without the caller ever choosing ``B``.
+  * **Backend dispatch.**  ``backend='reference' | 'xla' | 'pallas_interpret'
+    | 'pallas'`` selects the execution surface in the spec: ``reference``
+    is the pure-jnp algorithm, ``xla`` the same jit-wrapped, and the
+    ``pallas*`` pair the TPU kernel (interpret mode validates on CPU).
+    Families without a kernel reject pallas backends at construction.
+
+``spec_from_name(name, **kw)`` maps the 10 registry names onto spec
+instances (with a difflib nearest-match hint on unknown names);
+``get_resampler`` / ``get_resampler_batch`` remain as thin legacy shims
+over the same family table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Any, Callable, ClassVar, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iterations import select_iterations
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.resamplers.megopolis import DEFAULT_SEGMENT, megopolis, megopolis_batch
+from repro.core.resamplers.metropolis import (
+    WARP,
+    metropolis,
+    metropolis_batch,
+    metropolis_c1,
+    metropolis_c1_batch,
+    metropolis_c2,
+    metropolis_c2_batch,
+)
+from repro.core.resamplers.prefix_sum import (
+    improved_systematic,
+    improved_systematic_batch,
+    multinomial,
+    multinomial_batch,
+    residual,
+    residual_batch,
+    stratified,
+    stratified_batch,
+    systematic,
+    systematic_batch,
+)
+from repro.core.resamplers.rejection import rejection, rejection_batch
+
+AUTO = "auto"
+BACKENDS = ("reference", "xla", "pallas_interpret", "pallas")
+# Kernel coalescing segment: one (8, 128) f32 VMEM tile (DESIGN.md §2).
+KERNEL_SEGMENT = 1024
+# Loop-bound cap when num_iters='auto' resolves under trace: eq. (3) yields a
+# traced B, so offset tables are drawn at this static size and the
+# accept/reject loop runs the traced bound (clamped).  4096 covers every
+# weight family in the paper's sweeps (y <= 4 needs B <= ~210; the
+# one-heavy-particle torture case at N=512 needs ~2.4k).
+AUTO_MAX_ITERS = 4096
+
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _check_positive_int(value, field: str, cls: str):
+    if isinstance(value, bool) or not isinstance(value, int) or value < 1:
+        raise ValueError(f"{cls}.{field} must be a positive int; got {value!r}")
+
+
+def _check_num_iters(value, cls: str):
+    if value == AUTO:
+        return
+    if isinstance(value, bool) or not isinstance(value, int) or value < 1:
+        raise ValueError(
+            f"{cls}.num_iters must be a positive int or {AUTO!r} (eq. 3 selection); "
+            f"got {value!r}"
+        )
+
+
+def _check_backend(value, cls: str, supported: Tuple[str, ...]):
+    if value not in BACKENDS:
+        raise ValueError(f"{cls}.backend must be one of {BACKENDS}; got {value!r}")
+    if value not in supported:
+        raise ValueError(
+            f"{cls} supports backends {supported}; got {value!r} "
+            "(this family has no Pallas kernel)"
+        )
+
+
+class Resampler:
+    """A built resampler: the ONE callable surface every family shares.
+
+    Constructed by ``ResamplerSpec.build()``; hyperparameters and backend
+    are baked in, so call sites never thread kwargs::
+
+        r(key, weights)            # int32[N]     over f32[N]
+        r.batch(key, weights)      # int32[B, N]  over f32[B, N]
+        r.batch_rows(keys, weights)  # explicit per-row keys (filter banks)
+        r.name, r.spec             # registry name / originating spec
+
+    ``batch`` follows the DESIGN.md §4 contract: the key is split once
+    along the batch axis and row ``b`` is bit-identical to the single call
+    with ``split(key, B)[b]`` (the pallas batched Megopolis kernel instead
+    shares the offset table bank-wide — its own documented contract).
+    """
+
+    def __init__(self, spec: "ResamplerSpec", single: Callable, batch: Callable):
+        self.spec = spec
+        self.name = spec.name
+        self._single = single
+        self._batch = batch
+        self.__name__ = f"{self.name}_resampler"
+        self.__qualname__ = self.__name__
+
+    def __call__(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
+        if weights.ndim != 1:
+            raise ValueError(
+                f"{self.name}: expected weights[N]; got shape {weights.shape} "
+                "(use .batch for weights[B, N])"
+            )
+        return self._single(key, weights)
+
+    def batch(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
+        if weights.ndim != 2:
+            raise ValueError(
+                f"{self.name}.batch: expected weights[B, N]; got shape {weights.shape}"
+            )
+        return self._batch(key, weights)
+
+    def batch_rows(self, keys: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
+        """vmap the single-population call over explicit per-row keys.
+
+        The filter-bank path: callers that already carry per-row key chains
+        (``run_filter_bank``) join the batched launch without re-deriving
+        keys.  Row ``b`` is bit-identical to ``self(keys[b], weights[b])``.
+        """
+        if weights.ndim != 2:
+            raise ValueError(
+                f"{self.name}.batch_rows: expected weights[B, N]; got shape {weights.shape}"
+            )
+        return jax.vmap(self._single)(keys, weights)
+
+    def __repr__(self):
+        return f"Resampler({self.spec!r})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResamplerSpec:
+    """Base class: frozen, hashable, static-safe spec of one resampler family."""
+
+    _NAME: ClassVar[str] = ""
+
+    @property
+    def name(self) -> str:
+        return self._NAME
+
+    def replace(self, **changes) -> "ResamplerSpec":
+        """Return a validated copy with ``changes`` applied (sweep-friendly)."""
+        return dataclasses.replace(self, **changes)
+
+    def build(self) -> Resampler:
+        raise NotImplementedError
+
+
+def _resolve_iters_dynamic(num_iters, weights):
+    """Trace-safe iteration count: eq. (3) when 'auto', else the static int."""
+    if num_iters == AUTO:
+        return jnp.minimum(select_iterations(weights), AUTO_MAX_ITERS)
+    return num_iters
+
+
+def _resolve_iters_static(num_iters, weights, name: str) -> int:
+    """Concrete iteration count for kernel grids (pallas backends)."""
+    if num_iters != AUTO:
+        return num_iters
+    if _is_traced(weights):
+        raise TypeError(
+            f"{name}: num_iters='auto' under a pallas backend needs concrete "
+            "weights (B sets the kernel grid); pass an int num_iters to use "
+            "this spec inside jit."
+        )
+    return int(select_iterations(weights))
+
+
+def _maybe_jit(single, batch, backend: str):
+    """backend='xla' is the reference algorithm jit-wrapped (bit-identical)."""
+    if backend == "xla":
+        return jax.jit(single), jax.jit(batch)
+    return single, batch
+
+
+def _vmap_batch(single):
+    """Derive the standard DESIGN.md §4 batched form: split keys + vmap."""
+
+    def batch(key, weights):
+        keys = split_batch_keys(key, weights.shape[0])
+        return jax.vmap(single)(keys, weights)
+
+    return batch
+
+
+@dataclasses.dataclass(frozen=True)
+class MegopolisSpec(ResamplerSpec):
+    """The paper's contribution (Alg. 5): segment-coalesced Metropolis.
+
+    ``segment`` is the coalescing segment size S of the reference path; the
+    pallas backends run the TPU kernel, whose S is fixed at one VMEM tile
+    (``KERNEL_SEGMENT`` = 1024) — constructing a pallas spec therefore
+    requires ``segment=1024`` so the coalescing contract stays explicit.
+    """
+
+    num_iters: Union[int, str] = AUTO
+    segment: int = DEFAULT_SEGMENT
+    backend: str = "reference"
+
+    _NAME: ClassVar[str] = "megopolis"
+
+    def __post_init__(self):
+        _check_num_iters(self.num_iters, "MegopolisSpec")
+        _check_positive_int(self.segment, "segment", "MegopolisSpec")
+        _check_backend(self.backend, "MegopolisSpec", BACKENDS)
+        if self.backend in ("pallas", "pallas_interpret") and self.segment != KERNEL_SEGMENT:
+            raise ValueError(
+                f"MegopolisSpec: the pallas kernel coalesces at segment="
+                f"{KERNEL_SEGMENT} (one f32 VMEM tile); got segment={self.segment}. "
+                "Set segment=1024 or use backend='reference'/'xla'."
+            )
+
+    def build(self) -> Resampler:
+        if self.backend in ("pallas", "pallas_interpret"):
+            # Lazy import: kernels are only a dependency of pallas specs.
+            from repro.kernels.megopolis.ops import megopolis_tpu, megopolis_tpu_batch
+
+            interpret = self.backend == "pallas_interpret"
+
+            def single(key, w):
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return megopolis_tpu(key, w, b, interpret=interpret)
+
+            def batch(key, w):
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return megopolis_tpu_batch(key, w, b, interpret=interpret)
+
+            return Resampler(self, single, batch)
+
+        seg = self.segment
+
+        if self.num_iters == AUTO:
+
+            def single(key, w):
+                # eq. (3) resolves at call time; the loop runs the (possibly
+                # traced) selected bound over an offset table drawn at the
+                # static cap.  NB: a (AUTO_MAX_ITERS,) draw shares no prefix
+                # with a (B,) draw, so 'auto' is a distinct random stream
+                # from the same spec with num_iters=B pinned (unlike the
+                # Metropolis family, where the two are bit-identical).
+                b = _resolve_iters_dynamic(AUTO, w)
+                key_off, _ = jax.random.split(key)
+                offsets = jax.random.randint(key_off, (AUTO_MAX_ITERS,), 0, w.shape[0])
+                return megopolis(key, w, b, segment=seg, offsets=offsets)
+
+        else:
+
+            def single(key, w):
+                return megopolis(key, w, self.num_iters, segment=seg)
+
+        single_fn, batch_fn = _maybe_jit(single, _vmap_batch(single), self.backend)
+        return Resampler(self, single_fn, batch_fn)
+
+
+def _metropolis_family_build(spec, fn, extra_kwargs: dict) -> Resampler:
+    """Shared build for the fixed-point accept/reject loops (Algs. 2-4):
+    ``num_iters`` is only a loop bound + fold_in counter, so the 'auto'
+    (traced) count is bit-identical to the same static count."""
+
+    def single(key, w):
+        b = _resolve_iters_dynamic(spec.num_iters, w)
+        return fn(key, w, b, **extra_kwargs)
+
+    single_fn, batch_fn = _maybe_jit(single, _vmap_batch(single), spec.backend)
+    return Resampler(spec, single_fn, batch_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetropolisSpec(ResamplerSpec):
+    """Paper Alg. 2: the random-access Metropolis baseline."""
+
+    num_iters: Union[int, str] = AUTO
+    backend: str = "reference"
+
+    _NAME: ClassVar[str] = "metropolis"
+
+    def __post_init__(self):
+        _check_num_iters(self.num_iters, "MetropolisSpec")
+        _check_backend(self.backend, "MetropolisSpec", BACKENDS)
+
+    def build(self) -> Resampler:
+        if self.backend in ("pallas", "pallas_interpret"):
+            from repro.kernels.metropolis.ops import metropolis_tpu
+
+            interpret = self.backend == "pallas_interpret"
+
+            def single(key, w):
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return metropolis_tpu(key, w, b, interpret=interpret)
+
+            def batch(key, w):
+                # No batched Metropolis kernel (the random gather is the
+                # strawman); run the single kernel per row under lax.map.
+                keys = split_batch_keys(key, w.shape[0])
+                return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
+
+            return Resampler(self, single, batch)
+        return _metropolis_family_build(self, metropolis, {})
+
+
+@dataclasses.dataclass(frozen=True)
+class MetropolisC1Spec(ResamplerSpec):
+    """Paper Alg. 3 (Dülger C1): one warp-shared partition, all iterations."""
+
+    num_iters: Union[int, str] = AUTO
+    partition_size_bytes: int = 128
+    warp: int = WARP
+    backend: str = "reference"
+
+    _NAME: ClassVar[str] = "metropolis_c1"
+
+    def __post_init__(self):
+        _check_num_iters(self.num_iters, "MetropolisC1Spec")
+        _check_positive_int(self.partition_size_bytes, "partition_size_bytes", "MetropolisC1Spec")
+        _check_positive_int(self.warp, "warp", "MetropolisC1Spec")
+        _check_backend(self.backend, "MetropolisC1Spec", ("reference", "xla"))
+
+    def build(self) -> Resampler:
+        return _metropolis_family_build(
+            self,
+            metropolis_c1,
+            {"partition_size_bytes": self.partition_size_bytes, "warp": self.warp},
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MetropolisC2Spec(ResamplerSpec):
+    """Paper Alg. 4 (Dülger C2): fresh warp-shared partition per iteration."""
+
+    num_iters: Union[int, str] = AUTO
+    partition_size_bytes: int = 128
+    warp: int = WARP
+    backend: str = "reference"
+
+    _NAME: ClassVar[str] = "metropolis_c2"
+
+    def __post_init__(self):
+        _check_num_iters(self.num_iters, "MetropolisC2Spec")
+        _check_positive_int(self.partition_size_bytes, "partition_size_bytes", "MetropolisC2Spec")
+        _check_positive_int(self.warp, "warp", "MetropolisC2Spec")
+        _check_backend(self.backend, "MetropolisC2Spec", ("reference", "xla"))
+
+    def build(self) -> Resampler:
+        return _metropolis_family_build(
+            self,
+            metropolis_c2,
+            {"partition_size_bytes": self.partition_size_bytes, "warp": self.warp},
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectionSpec(ResamplerSpec):
+    """Murray's rejection resampler (§1 context): unbiased, capped loop."""
+
+    max_iters: int = 1024
+    backend: str = "reference"
+
+    _NAME: ClassVar[str] = "rejection"
+
+    def __post_init__(self):
+        _check_positive_int(self.max_iters, "max_iters", "RejectionSpec")
+        _check_backend(self.backend, "RejectionSpec", ("reference", "xla"))
+
+    def build(self) -> Resampler:
+        def single(key, w):
+            return rejection(key, w, max_iters=self.max_iters)
+
+        single_fn, batch_fn = _maybe_jit(single, _vmap_batch(single), self.backend)
+        return Resampler(self, single_fn, batch_fn)
+
+
+_PREFIX_SUM_KINDS = {
+    "multinomial": multinomial,
+    "systematic": systematic,
+    "improved_systematic": improved_systematic,
+    "stratified": stratified,
+    "residual": residual,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSumSpec(ResamplerSpec):
+    """The prefix-sum family (§6.5): Algs. 7/8 + classical extras.
+
+    ``kind`` selects the algorithm; none takes an iteration count (the
+    family's whole point — one cumsum, one search)."""
+
+    kind: str = "systematic"
+    backend: str = "reference"
+
+    def __post_init__(self):
+        if self.kind not in _PREFIX_SUM_KINDS:
+            hint = difflib.get_close_matches(str(self.kind), _PREFIX_SUM_KINDS, n=1)
+            did_you_mean = f" — did you mean {hint[0]!r}?" if hint else ""
+            raise ValueError(
+                f"PrefixSumSpec.kind must be one of {sorted(_PREFIX_SUM_KINDS)}; "
+                f"got {self.kind!r}{did_you_mean}"
+            )
+        _check_backend(self.backend, "PrefixSumSpec", ("reference", "xla"))
+
+    @property
+    def name(self) -> str:
+        return self.kind
+
+    def build(self) -> Resampler:
+        fn = _PREFIX_SUM_KINDS[self.kind]
+
+        def single(key, w):
+            return fn(key, w)
+
+        single_fn, batch_fn = _maybe_jit(single, _vmap_batch(single), self.backend)
+        return Resampler(self, single_fn, batch_fn)
+
+
+for _cls in (
+    MegopolisSpec,
+    MetropolisSpec,
+    MetropolisC1Spec,
+    MetropolisC2Spec,
+    RejectionSpec,
+    PrefixSumSpec,
+):
+    jax.tree_util.register_static(_cls)
+
+
+# ----------------------------------------------------------------------------
+# The ONE family table: registry name -> (spec constructor kwargs, legacy fns).
+# Everything name-keyed (spec_from_name, get_resampler, get_resampler_batch,
+# list_resamplers) derives from this single surface.
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Family:
+    spec_cls: type
+    spec_fixed: Tuple[Tuple[str, Any], ...]  # kwargs frozen into the name
+    legacy_single: Callable
+    legacy_batch: Callable
+
+
+_FAMILIES = {
+    "megopolis": _Family(MegopolisSpec, (), megopolis, megopolis_batch),
+    "metropolis": _Family(MetropolisSpec, (), metropolis, metropolis_batch),
+    "metropolis_c1": _Family(MetropolisC1Spec, (), metropolis_c1, metropolis_c1_batch),
+    "metropolis_c2": _Family(MetropolisC2Spec, (), metropolis_c2, metropolis_c2_batch),
+    "rejection": _Family(RejectionSpec, (), rejection, rejection_batch),
+    **{
+        kind: _Family(
+            PrefixSumSpec,
+            (("kind", kind),),
+            _PREFIX_SUM_KINDS[kind],
+            {
+                "multinomial": multinomial_batch,
+                "systematic": systematic_batch,
+                "improved_systematic": improved_systematic_batch,
+                "stratified": stratified_batch,
+                "residual": residual_batch,
+            }[kind],
+        )
+        for kind in _PREFIX_SUM_KINDS
+    },
+}
+
+
+def _unknown_name_error(name: str) -> KeyError:
+    choices = sorted(_FAMILIES)
+    hint = difflib.get_close_matches(str(name), choices, n=1)
+    did_you_mean = f" — did you mean {hint[0]!r}?" if hint else ""
+    return KeyError(f"unknown resampler {name!r}{did_you_mean}; choices: {choices}")
+
+
+def _family(name: str) -> _Family:
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise _unknown_name_error(name) from None
+
+
+def spec_from_name(name: str, **kwargs) -> ResamplerSpec:
+    """Build the typed spec for a registry name: ``spec_from_name('megopolis',
+    num_iters=24)`` == ``MegopolisSpec(num_iters=24)``.
+
+    For legacy API uniformity a ``num_iters`` kwarg is tolerated (and
+    dropped) on iteration-free families — the prefix-sum and rejection
+    entries always ignored it.  Any other unknown kwarg raises eagerly.
+    """
+    fam = _family(name)
+    fields = {f.name for f in dataclasses.fields(fam.spec_cls)}
+    if "num_iters" not in fields:
+        kwargs.pop("num_iters", None)
+    unknown = sorted(set(kwargs) - fields)
+    if unknown:
+        raise TypeError(
+            f"{name}: unknown spec argument(s) {unknown}; "
+            f"{fam.spec_cls.__name__} fields are {sorted(fields)}"
+        )
+    return fam.spec_cls(**dict(fam.spec_fixed), **kwargs)
+
+
+def coerce_spec(resampler: Union[str, ResamplerSpec], /, **defaults) -> ResamplerSpec:
+    """Normalise ``str | ResamplerSpec`` to a spec, applying ``defaults`` only
+    where the family actually has the field.
+
+    The uniform-call-site helper: ``coerce_spec(name_or_spec, num_iters=b,
+    segment=s)`` configures Megopolis/Metropolis variants and leaves the
+    prefix-sum family untouched — no per-algorithm conditionals at call
+    sites.  A spec passed in is returned with the same field filtering, so
+    explicit specs can still be bulk-configured by a sweep driver.
+    """
+    spec = spec_from_name(resampler) if isinstance(resampler, str) else resampler
+    if not isinstance(spec, ResamplerSpec):
+        raise TypeError(
+            f"expected a registry name or ResamplerSpec; got {type(resampler).__name__}"
+        )
+    fields = {f.name for f in dataclasses.fields(spec)}
+    applicable = {k: v for k, v in defaults.items() if k in fields}
+    return spec.replace(**applicable) if applicable else spec
+
+
+def list_resamplers() -> list:
+    return sorted(_FAMILIES)
+
+
+def get_resampler(name: str) -> Callable:
+    """Legacy lookup: ``fn(key, weights, num_iters, **kw) -> int32[N]``.
+
+    .. deprecated:: prefer ``spec_from_name(name, **kw).build()`` — the spec
+       carries hyperparameters and backend, so call sites stop threading
+       ``num_iters``/kwargs.  This shim resolves through the same family
+       table and returns the reference implementation unchanged.
+    """
+    return _family(name).legacy_single
+
+
+def get_resampler_batch(name: str) -> Callable:
+    """Legacy batched lookup (weights[B, N] -> int32[B, N]).
+
+    .. deprecated:: prefer ``spec_from_name(name, **kw).build().batch`` —
+       same family table, same reference implementation.
+    """
+    return _family(name).legacy_batch

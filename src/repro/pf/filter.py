@@ -21,13 +21,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+import warnings
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import get_resampler
-from repro.core.resamplers.batched import batch_rows, split_batch_keys
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import ResamplerSpec, coerce_spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,15 +42,55 @@ class StateSpaceModel:
 
 @dataclasses.dataclass(frozen=True)
 class ParticleFilter:
+    """SIR filter config.  ``resampler`` is a registry name or a typed
+    ``ResamplerSpec`` (DESIGN.md §9); a spec carries its own hyperparameters
+    and backend, so combining one with ``num_iters`` / ``resampler_kwargs``
+    raises.  The spec resolves (and validates) eagerly at construction."""
+
     model: StateSpaceModel
     num_particles: int
-    resampler: str = "megopolis"
-    num_iters: int = 30  # B — fixed application prior (paper §7)
-    resampler_kwargs: tuple = ()
+    resampler: Union[str, ResamplerSpec] = "megopolis"
+    # B for string-named resamplers; None defaults to 30, the fixed
+    # application prior of paper §7.  Must stay unset when ``resampler`` is
+    # already a spec (the spec carries its own count).
+    num_iters: Union[int, str, None] = None
+    resampler_kwargs: tuple = ()  # deprecated: pre-spec hyperparameter channel
+
+    def __post_init__(self):
+        if isinstance(self.resampler, ResamplerSpec):
+            if self.resampler_kwargs:
+                raise ValueError(
+                    "ParticleFilter: pass hyperparameters inside the ResamplerSpec, "
+                    "not via the deprecated resampler_kwargs tuple"
+                )
+            if self.num_iters is not None:
+                raise ValueError(
+                    "ParticleFilter: num_iters is ignored when resampler is a "
+                    "ResamplerSpec — set it inside the spec "
+                    "(e.g. MegopolisSpec(num_iters=...))"
+                )
+            spec = self.resampler
+        else:
+            if self.resampler_kwargs:
+                warnings.warn(
+                    "ParticleFilter.resampler_kwargs is deprecated; pass a "
+                    "ResamplerSpec as `resampler` instead (e.g. "
+                    "MetropolisC1Spec(num_iters=30, partition_size_bytes=128))",
+                    DeprecationWarning,
+                    stacklevel=3,
+                )
+            iters = 30 if self.num_iters is None else self.num_iters
+            spec = coerce_spec(self.resampler, num_iters=iters)
+            spec = spec.replace(**dict(self.resampler_kwargs))
+        object.__setattr__(self, "_built", spec.build())
+
+    @property
+    def spec(self) -> ResamplerSpec:
+        """The resolved resampler spec this filter runs."""
+        return self._built.spec
 
     def _resample(self, key, weights):
-        fn = get_resampler(self.resampler)
-        return fn(key, weights, self.num_iters, **dict(self.resampler_kwargs))
+        return self._built(key, weights)
 
     def step(self, key, particles, z, t, theta=None):
         """One SIR step (Alg. 6): returns (particles', estimate, weights)."""
@@ -120,8 +161,7 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
     ``[S, N]`` weight bank).
     """
     num_s = observations.shape[0]
-    fn = get_resampler(pf.resampler)
-    kwargs = dict(pf.resampler_kwargs)
+    resampler = pf._built
     keys = split_batch_keys(key, num_s)
 
     def init_one(k):
@@ -149,7 +189,7 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
             in_axes=(0, 0, theta_axes),
         )(zs, x, thetas)
         # Stage 2: ONE batched resampling launch for the whole bank
-        ancestors = batch_rows(fn, k_res, w, pf.num_iters, **kwargs)
+        ancestors = resampler.batch_rows(k_res, w)
         x_bar = jnp.take_along_axis(x, ancestors, axis=1)
         # Stage 3 (batched): estimate
         return (x_bar, ks_next), jnp.mean(x_bar, axis=1)

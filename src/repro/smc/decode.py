@@ -24,25 +24,34 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import get_resampler
+from repro.core.spec import ResamplerSpec, coerce_spec
 from repro.models import ModelConfig, decode_step
 
 
 @dataclasses.dataclass(frozen=True)
 class SMCDecodeConfig:
+    """``resampler`` accepts a registry name or a typed ``ResamplerSpec``
+    (DESIGN.md §9).  With a spec, ``num_iters`` / ``segment`` below are not
+    consulted — the spec carries its own hyperparameters and backend."""
+
     num_particles: int
     max_new_tokens: int
-    resampler: str = "megopolis"
+    resampler: Union[str, ResamplerSpec] = "megopolis"
     num_iters: int = 16  # B (paper eq. 3; fixed application prior, §7)
     ess_threshold: float = 0.5  # resample when ESS < threshold * N
     proposal_temp: float = 1.0
     target_temp: float = 0.7  # weights tilt samples toward the sharper target
     segment: int = 32  # Megopolis coalescing segment
+
+    def resampler_spec(self) -> ResamplerSpec:
+        if isinstance(self.resampler, ResamplerSpec):
+            return self.resampler
+        return coerce_spec(self.resampler, num_iters=self.num_iters, segment=self.segment)
 
 
 def ess(log_w: jnp.ndarray) -> jnp.ndarray:
@@ -81,20 +90,14 @@ def smc_decode(
     """
     n = smc_cfg.num_particles
     twist_fn = twist or partial(_default_twist, cfg=smc_cfg)
-    resampler = get_resampler(smc_cfg.resampler)
-    res_kwargs = {}
-    if smc_cfg.resampler in ("megopolis", "metropolis", "metropolis_c1",
-                             "metropolis_c2", "rejection"):
-        res_kwargs["num_iters"] = smc_cfg.num_iters
-    if smc_cfg.resampler == "megopolis":
-        res_kwargs["segment"] = smc_cfg.segment
+    resampler = smc_cfg.resampler_spec().build()
 
     def maybe_resample(k, log_w, caches, tokens_so_far):
         def do(_):
             # Metropolis-family resamplers consume unnormalised weights —
             # shift in log space for stability, then exponentiate.
             w = jnp.exp(log_w - jnp.max(log_w))
-            ancestors = resampler(k, w, **res_kwargs)
+            ancestors = resampler(k, w)
             new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
             new_tokens = jnp.take(tokens_so_far, ancestors, axis=0)
             return jnp.zeros_like(log_w), new_caches, new_tokens, jnp.int32(1)
