@@ -20,12 +20,15 @@ def _b_for_alpha(alpha: float) -> int:
 
 
 def main(argv=None):
+    from repro.core.spec import BACKENDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", choices=BACKENDS, default="reference")
     args = ap.parse_args(argv)
     rows = run(full=args.full, weight_gen=gamma_weights,
                grid=(0.5, 2.0, 3.0, 10.0, 50.0), param_name="alpha",
-               csv_name="fig10.csv", b_for=_b_for_alpha)
+               csv_name="fig10.csv", b_for=_b_for_alpha, backend=args.backend)
     print_table([r for r in rows if r["n"] == max(x["n"] for x in rows)])
 
 

@@ -3,7 +3,12 @@ Megopolis for {Megopolis, Metropolis, C1-PS128, C1-PS2048, C2-PS128,
 C2-PS2048} on Gaussian-likelihood weights (eq. 12), y in {0..4}.
 
 CI scale by default (N up to 2^16, K=32); ``--full`` restores the paper's
-2^22 / K=256 regime.
+2^22 / K=256 regime.  ``--backend`` selects the execution surface for the
+WHOLE method set (the kernel matrix is complete, DESIGN.md §9): under a
+pallas backend the method set uses kernel-legal geometry — Megopolis at
+segment=1024, C1/C2 at partition_size_bytes=4096 (one VMEM tile each) —
+and the default grid shrinks (interpret mode is a validation surface;
+its absolute timings are meaningless).
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
 from repro.core import MegopolisSpec, MetropolisC1Spec, MetropolisC2Spec, MetropolisSpec
 from repro.core.iterations import gaussian_weight_iterations
 from repro.core.metrics import bias_variance
+from repro.core.spec import BACKENDS, KERNEL_PARTITION_BYTES, KERNEL_SEGMENT
 from repro.core.weightgen import gaussian_weights
 
 # One typed spec template per competitor (DESIGN.md §9); the per-grid-point
@@ -31,18 +37,37 @@ ALGOS = {
 }
 
 
+def algos_for_backend(backend: str) -> dict:
+    """The Fig. 6 method set on ``backend``, with kernel-legal geometry."""
+    if backend not in ("pallas", "pallas_interpret"):
+        return {name: t.replace(backend=backend) for name, t in ALGOS.items()}
+    return {
+        "megopolis": MegopolisSpec(segment=KERNEL_SEGMENT, backend=backend),
+        "metropolis": MetropolisSpec(backend=backend),
+        "c1_ps4096": MetropolisC1Spec(
+            partition_size_bytes=KERNEL_PARTITION_BYTES, backend=backend
+        ),
+        "c2_ps4096": MetropolisC2Spec(
+            partition_size_bytes=KERNEL_PARTITION_BYTES, backend=backend
+        ),
+    }
+
+
 def run(full: bool = False, weight_gen=gaussian_weights, grid=(0.0, 1.0, 2.0, 3.0, 4.0),
-        param_name: str = "y", csv_name: str = "fig6.csv", b_for=None):
-    ns = [2**e for e in ((14, 18, 22) if full else (10, 12, 14))]
-    runs = 256 if full else 16
+        param_name: str = "y", csv_name: str = "fig6.csv", b_for=None,
+        backend: str = "reference"):
+    pallas = backend in ("pallas", "pallas_interpret")
+    ns = [2**e for e in ((14, 18, 22) if full else (10, 11, 12) if pallas else (10, 12, 14))]
+    runs = 256 if full else 8 if pallas else 16
     seqs = 4 if full else 1
     b_for = b_for or (lambda p: gaussian_weight_iterations(p, 0.01))
+    algos = algos_for_backend(backend)
 
     rows = []
     for n in ns:
         for p in grid:
             iters = int(b_for(p))
-            for name, template in ALGOS.items():
+            for name, template in algos.items():
                 resample = template.replace(num_iters=iters).build()
                 mse_acc, bias_acc = 0.0, 0.0
                 for s in range(seqs):
@@ -58,6 +83,7 @@ def run(full: bool = False, weight_gen=gaussian_weights, grid=(0.0, 1.0, 2.0, 3.
                             warmup=1, repeats=3)
                 rows.append({
                     "n": n, param_name: p, "B": iters, "algo": name,
+                    "backend": backend,
                     "mse_over_n": mse_acc / seqs,
                     "bias_contrib": bias_acc / seqs,
                     "time_s": t,
@@ -73,8 +99,11 @@ def run(full: bool = False, weight_gen=gaussian_weights, grid=(0.0, 1.0, 2.0, 3.
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", choices=BACKENDS, default="reference",
+                    help="execution surface for the whole method set "
+                         "(pallas_interpret validates the kernels on CPU)")
     args = ap.parse_args(argv)
-    rows = run(full=args.full)
+    rows = run(full=args.full, backend=args.backend)
     print_table([r for r in rows if r["n"] == max(x["n"] for x in rows)])
 
 

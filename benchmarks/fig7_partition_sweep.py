@@ -1,6 +1,13 @@
 """Paper Fig. 7: MSE and execution time of C1/C2 across partition sizes
 {128, 256, 512, 1024, 2048} vs the Megopolis reference lines, at the
-largest N with y = 4 (weights concentrated — the degeneracy regime)."""
+largest N with y = 4 (weights concentrated — the degeneracy regime).
+
+``--backend`` runs the sweep on any backend; the pallas kernels partition
+at one fixed (8, 128) VMEM tile, so under a pallas backend the partition
+axis collapses to the single kernel-legal point (4096 bytes) — the sweep
+degenerates by construction, which is itself the TPU finding: tile-fixed
+coalescing removes C1/C2's tuning axis along with its pathology.
+"""
 
 from __future__ import annotations
 
@@ -12,6 +19,7 @@ from benchmarks.common import offsprings_for, print_table, time_fn, write_csv
 from repro.core import MegopolisSpec, MetropolisC1Spec, MetropolisC2Spec
 from repro.core.iterations import gaussian_weight_iterations
 from repro.core.metrics import bias_variance
+from repro.core.spec import BACKENDS, KERNEL_PARTITION_BYTES, KERNEL_SEGMENT
 from repro.core.weightgen import gaussian_weights
 
 PARTITIONS = (128, 256, 512, 1024, 2048)
@@ -21,9 +29,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--y", type=float, default=4.0)
+    ap.add_argument("--backend", choices=BACKENDS, default="reference")
     args = ap.parse_args(argv)
-    n = 1 << (22 if args.full else 14)
-    runs = 256 if args.full else 16
+    pallas = args.backend in ("pallas", "pallas_interpret")
+    n = 1 << (22 if args.full else 12 if pallas else 14)
+    runs = 256 if args.full else 8 if pallas else 16
     iters = gaussian_weight_iterations(args.y, 0.01)
     key = jax.random.PRNGKey(11)
     w = gaussian_weights(key, n, args.y)
@@ -32,13 +42,21 @@ def main(argv=None):
     # validated template per family, varied along its tuning axis — the
     # Megopolis reference line has no such axis, which is the point.
     templates = {
-        "megopolis": MegopolisSpec(num_iters=iters),
-        "metropolis_c1": MetropolisC1Spec(num_iters=iters),
-        "metropolis_c2": MetropolisC2Spec(num_iters=iters),
+        "megopolis": MegopolisSpec(
+            num_iters=iters, backend=args.backend,
+            segment=KERNEL_SEGMENT if pallas else 32,
+        ),
+        "metropolis_c1": MetropolisC1Spec(num_iters=iters, backend=args.backend,
+                                          partition_size_bytes=KERNEL_PARTITION_BYTES
+                                          if pallas else 128),
+        "metropolis_c2": MetropolisC2Spec(num_iters=iters, backend=args.backend,
+                                          partition_size_bytes=KERNEL_PARTITION_BYTES
+                                          if pallas else 128),
     }
+    partitions = (KERNEL_PARTITION_BYTES,) if pallas else PARTITIONS
     rows = []
     for algo, template in templates.items():
-        sizes = (0,) if algo == "megopolis" else PARTITIONS
+        sizes = (0,) if algo == "megopolis" else partitions
         for ps in sizes:
             spec = template if ps == 0 else template.replace(partition_size_bytes=ps)
             resample = spec.build()
@@ -46,6 +64,7 @@ def main(argv=None):
             var, bias_sq, total = bias_variance(off, w)
             t = time_fn(jax.jit(resample), jax.random.PRNGKey(5), w)
             rows.append({"algo": algo, "partition_bytes": ps, "B": iters,
+                         "backend": args.backend,
                          "mse_over_n": float(total) / n, "time_s": t})
     write_csv("fig7.csv", rows)
     print_table(rows)

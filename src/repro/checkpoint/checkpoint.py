@@ -37,10 +37,12 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.compat import keystr_simple
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    items = [(jax.tree_util.keystr(path, simple=True, separator="/"), leaf) for path, leaf in flat]
+    items = [(keystr_simple(path), leaf) for path, leaf in flat]
     return items, treedef
 
 

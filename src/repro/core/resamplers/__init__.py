@@ -20,7 +20,10 @@ call with key ``jax.random.split(key, B)[b]`` (see ``batched.py``).
 Both string lookups are legacy shims: the typed spec API in
 ``repro.core.spec`` (DESIGN.md §9) is the primary surface —
 ``spec_from_name(name, **hyperparams).build()`` returns a ``Resampler``
-whose ``__call__`` / ``.batch`` bake the hyperparameters in.
+whose ``__call__`` / ``.batch`` bake the hyperparameters in.  Backend
+dispatch is uniform: every family here also runs on the Pallas kernel
+lane (``backend='pallas_interpret' | 'pallas'``, DESIGN.md §2 kernel
+matrix), gated bit-exactly by ``tests/test_backend_parity.py``.
 """
 
 from repro.core.resamplers.batched import (

@@ -30,7 +30,11 @@ Properties:
     | 'pallas'`` selects the execution surface in the spec: ``reference``
     is the pure-jnp algorithm, ``xla`` the same jit-wrapped, and the
     ``pallas*`` pair the TPU kernel (interpret mode validates on CPU).
-    Families without a kernel reject pallas backends at construction.
+    EVERY family builds on every backend — the kernel matrix is complete
+    (Megopolis, Metropolis, C1/C2, rejection, and all five prefix-sum
+    kinds); kernels whose geometry is tile-fixed require the matching
+    spec fields (``segment=1024`` for Megopolis, ``partition_size_bytes=
+    4096`` for C1/C2) so the coalescing contract stays explicit.
 
 ``spec_from_name(name, **kw)`` maps the 10 registry names onto spec
 instances (with a difflib nearest-match hint on unknown names);
@@ -77,6 +81,9 @@ AUTO = "auto"
 BACKENDS = ("reference", "xla", "pallas_interpret", "pallas")
 # Kernel coalescing segment: one (8, 128) f32 VMEM tile (DESIGN.md §2).
 KERNEL_SEGMENT = 1024
+# The C1/C2 kernels' partition is that same tile, in the papers' byte units.
+KERNEL_PARTITION_BYTES = KERNEL_SEGMENT * 4
+PALLAS_BACKENDS = ("pallas_interpret", "pallas")
 # Loop-bound cap when num_iters='auto' resolves under trace: eq. (3) yields a
 # traced B, so offset tables are drawn at this static size and the
 # accept/reject loop runs the traced bound (clamped).  4096 covers every
@@ -104,14 +111,9 @@ def _check_num_iters(value, cls: str):
         )
 
 
-def _check_backend(value, cls: str, supported: Tuple[str, ...]):
+def _check_backend(value, cls: str):
     if value not in BACKENDS:
         raise ValueError(f"{cls}.backend must be one of {BACKENDS}; got {value!r}")
-    if value not in supported:
-        raise ValueError(
-            f"{cls} supports backends {supported}; got {value!r} "
-            "(this family has no Pallas kernel)"
-        )
 
 
 class Resampler:
@@ -209,6 +211,27 @@ def _resolve_iters_static(num_iters, weights, name: str) -> int:
     return int(select_iterations(weights))
 
 
+def _per_row_auto_batch(spec, single):
+    """Pallas ``.batch`` under ``num_iters='auto'``: eq. (3) must see EACH
+    row's weights — resolving one bank-level B would silently under-iterate
+    concentrated rows — and the §4 contract (row b bit-identical to the
+    single call with split key b) must survive, so the rows are launched
+    individually with their own static B.  Needs concrete weights (host
+    loop); inside jit pass an int ``num_iters``."""
+
+    def batch(key, w):
+        if _is_traced(w):
+            raise TypeError(
+                f"{spec.name}: num_iters='auto' under a pallas backend needs "
+                "concrete weights (eq. 3 resolves per row); pass an int "
+                "num_iters to use .batch inside jit."
+            )
+        keys = split_batch_keys(key, w.shape[0])
+        return jnp.stack([single(keys[b], w[b]) for b in range(w.shape[0])])
+
+    return batch
+
+
 def _maybe_jit(single, batch, backend: str):
     """backend='xla' is the reference algorithm jit-wrapped (bit-identical)."""
     if backend == "xla":
@@ -245,7 +268,7 @@ class MegopolisSpec(ResamplerSpec):
     def __post_init__(self):
         _check_num_iters(self.num_iters, "MegopolisSpec")
         _check_positive_int(self.segment, "segment", "MegopolisSpec")
-        _check_backend(self.backend, "MegopolisSpec", BACKENDS)
+        _check_backend(self.backend, "MegopolisSpec")
         if self.backend in ("pallas", "pallas_interpret") and self.segment != KERNEL_SEGMENT:
             raise ValueError(
                 f"MegopolisSpec: the pallas kernel coalesces at segment="
@@ -319,11 +342,11 @@ class MetropolisSpec(ResamplerSpec):
 
     def __post_init__(self):
         _check_num_iters(self.num_iters, "MetropolisSpec")
-        _check_backend(self.backend, "MetropolisSpec", BACKENDS)
+        _check_backend(self.backend, "MetropolisSpec")
 
     def build(self) -> Resampler:
-        if self.backend in ("pallas", "pallas_interpret"):
-            from repro.kernels.metropolis.ops import metropolis_tpu
+        if self.backend in PALLAS_BACKENDS:
+            from repro.kernels.metropolis.ops import metropolis_tpu, metropolis_tpu_batch
 
             interpret = self.backend == "pallas_interpret"
 
@@ -331,19 +354,66 @@ class MetropolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
                 return metropolis_tpu(key, w, b, interpret=interpret)
 
-            def batch(key, w):
-                # No batched Metropolis kernel (the random gather is the
-                # strawman); run the single kernel per row under lax.map.
-                keys = split_batch_keys(key, w.shape[0])
-                return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
+            if self.num_iters == AUTO:
+                batch = _per_row_auto_batch(self, single)
+            else:
+
+                def batch(key, w):
+                    # One [B, R, 128] launch; row b bit-identical to the
+                    # single kernel with split(key, B)[b] (held on-kernel,
+                    # DESIGN.md §4).
+                    return metropolis_tpu_batch(
+                        key, w, self.num_iters, interpret=interpret
+                    )
 
             return Resampler(self, single, batch)
         return _metropolis_family_build(self, metropolis, {})
 
 
+def _check_kernel_partition(spec, cls: str):
+    """The C1/C2 kernels' partition is one (8,128) f32 VMEM tile: pallas
+    specs must say so (same explicitness rule as MegopolisSpec.segment)."""
+    if spec.backend in PALLAS_BACKENDS and spec.partition_size_bytes != KERNEL_PARTITION_BYTES:
+        raise ValueError(
+            f"{cls}: the pallas kernel's partition is one f32 VMEM tile = "
+            f"{KERNEL_PARTITION_BYTES} bytes; got partition_size_bytes="
+            f"{spec.partition_size_bytes}. Set partition_size_bytes=4096 or "
+            "use backend='reference'/'xla'."
+        )
+
+
+def _c1c2_pallas_build(spec, tpu_fn) -> Resampler:
+    """Shared pallas build for the segment-local variants: single kernel
+    call, batch via lax.map over split keys (row b == single with key b —
+    the same §4 contract the reference lane derives by vmap).  'auto'
+    batches resolve eq. (3) per row (see ``_per_row_auto_batch``: lax.map
+    would hand ``single`` traced rows and a bank-level B would be wrong)."""
+
+    interpret = spec.backend == "pallas_interpret"
+
+    def single(key, w):
+        b = _resolve_iters_static(spec.num_iters, w, spec.name)
+        return tpu_fn(key, w, b, interpret=interpret)
+
+    if spec.num_iters == AUTO:
+        batch = _per_row_auto_batch(spec, single)
+    else:
+
+        def batch(key, w):
+            keys = split_batch_keys(key, w.shape[0])
+            return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
+
+    return Resampler(spec, single, batch)
+
+
 @dataclasses.dataclass(frozen=True)
 class MetropolisC1Spec(ResamplerSpec):
-    """Paper Alg. 3 (Dülger C1): one warp-shared partition, all iterations."""
+    """Paper Alg. 3 (Dülger C1): one warp-shared partition, all iterations.
+
+    The pallas kernel shares the partition at tile granularity (its "warp"
+    is the whole 1024-lane tile; ``warp`` is a reference-lane knob) and
+    requires ``partition_size_bytes=4096`` — one f32 VMEM tile.
+    """
 
     num_iters: Union[int, str] = AUTO
     partition_size_bytes: int = 128
@@ -356,9 +426,14 @@ class MetropolisC1Spec(ResamplerSpec):
         _check_num_iters(self.num_iters, "MetropolisC1Spec")
         _check_positive_int(self.partition_size_bytes, "partition_size_bytes", "MetropolisC1Spec")
         _check_positive_int(self.warp, "warp", "MetropolisC1Spec")
-        _check_backend(self.backend, "MetropolisC1Spec", ("reference", "xla"))
+        _check_backend(self.backend, "MetropolisC1Spec")
+        _check_kernel_partition(self, "MetropolisC1Spec")
 
     def build(self) -> Resampler:
+        if self.backend in PALLAS_BACKENDS:
+            from repro.kernels.metropolis.ops import metropolis_c1_tpu
+
+            return _c1c2_pallas_build(self, metropolis_c1_tpu)
         return _metropolis_family_build(
             self,
             metropolis_c1,
@@ -368,7 +443,11 @@ class MetropolisC1Spec(ResamplerSpec):
 
 @dataclasses.dataclass(frozen=True)
 class MetropolisC2Spec(ResamplerSpec):
-    """Paper Alg. 4 (Dülger C2): fresh warp-shared partition per iteration."""
+    """Paper Alg. 4 (Dülger C2): fresh warp-shared partition per iteration.
+
+    Pallas geometry as for C1: tile-granular sharing,
+    ``partition_size_bytes=4096`` required.
+    """
 
     num_iters: Union[int, str] = AUTO
     partition_size_bytes: int = 128
@@ -381,9 +460,14 @@ class MetropolisC2Spec(ResamplerSpec):
         _check_num_iters(self.num_iters, "MetropolisC2Spec")
         _check_positive_int(self.partition_size_bytes, "partition_size_bytes", "MetropolisC2Spec")
         _check_positive_int(self.warp, "warp", "MetropolisC2Spec")
-        _check_backend(self.backend, "MetropolisC2Spec", ("reference", "xla"))
+        _check_backend(self.backend, "MetropolisC2Spec")
+        _check_kernel_partition(self, "MetropolisC2Spec")
 
     def build(self) -> Resampler:
+        if self.backend in PALLAS_BACKENDS:
+            from repro.kernels.metropolis.ops import metropolis_c2_tpu
+
+            return _c1c2_pallas_build(self, metropolis_c2_tpu)
         return _metropolis_family_build(
             self,
             metropolis_c2,
@@ -402,9 +486,24 @@ class RejectionSpec(ResamplerSpec):
 
     def __post_init__(self):
         _check_positive_int(self.max_iters, "max_iters", "RejectionSpec")
-        _check_backend(self.backend, "RejectionSpec", ("reference", "xla"))
+        _check_backend(self.backend, "RejectionSpec")
 
     def build(self) -> Resampler:
+        if self.backend in PALLAS_BACKENDS:
+            from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch
+
+            interpret = self.backend == "pallas_interpret"
+
+            def single(key, w):
+                return rejection_tpu(key, w, max_iters=self.max_iters, interpret=interpret)
+
+            def batch(key, w):
+                return rejection_tpu_batch(
+                    key, w, max_iters=self.max_iters, interpret=interpret
+                )
+
+            return Resampler(self, single, batch)
+
         def single(key, w):
             return rejection(key, w, max_iters=self.max_iters)
 
@@ -439,13 +538,30 @@ class PrefixSumSpec(ResamplerSpec):
                 f"PrefixSumSpec.kind must be one of {sorted(_PREFIX_SUM_KINDS)}; "
                 f"got {self.kind!r}{did_you_mean}"
             )
-        _check_backend(self.backend, "PrefixSumSpec", ("reference", "xla"))
+        _check_backend(self.backend, "PrefixSumSpec")
 
     @property
     def name(self) -> str:
         return self.kind
 
     def build(self) -> Resampler:
+        if self.backend in PALLAS_BACKENDS:
+            from repro.kernels.prefix_sum.ops import prefix_resample_tpu
+
+            interpret = self.backend == "pallas_interpret"
+            kind = self.kind
+
+            def single(key, w):
+                return prefix_resample_tpu(key, w, kind, interpret=interpret)
+
+            def batch(key, w):
+                # Scan + search per row under lax.map (row b == single with
+                # split(key, B)[b], the §4 contract).
+                keys = split_batch_keys(key, w.shape[0])
+                return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
+
+            return Resampler(self, single, batch)
+
         fn = _PREFIX_SUM_KINDS[self.kind]
 
         def single(key, w):

@@ -13,8 +13,17 @@ buys three production properties for free:
     from the same (seed, step) — repartitioning is a no-op.
 
 Targets are next-token (inputs shifted by one within the same generated
-row of length seq_len + 1), so loss curves are smooth and reproducible for
-integration tests.
+row of length seq_len + 1).
+
+Token distribution: a deterministic head-heavy mixture — with probability
+3/4 a token from the 16-token "head", else uniform over the full vocab.
+A uniform stream has NOTHING to learn (expected loss is pinned at
+ln(vocab) and "loss decreased" integration checks reduce to coin flips);
+the mixture gives next-token prediction a ~2-nat learnable gap between
+the random-init loss (~ln V) and the unigram entropy, so short smoke
+trains decrease monotonically-in-expectation while every counter-stream
+property above is preserved (tokens are still a pure function of
+``(seed, step, global_row, position)``).
 """
 
 from __future__ import annotations
@@ -26,6 +35,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.common import hash_bits
+
+HEAD_TOKENS = 16  # support of the high-probability head
+HEAD_WEIGHT = 12  # head probability = HEAD_WEIGHT / 16 (= 3/4)
+
+
+def _mixture_tokens(bits, vocab_size: int):
+    """Map hash bits to head-heavy tokens (jnp in, jnp out; np-compatible).
+
+    Uses disjoint bit ranges for the branch choice (top 4 bits), the head
+    token (bits 16..) and the tail token (low bits) so the three are
+    independent streams of the same counter draw.
+    """
+    head = (bits >> np.uint32(16)) % np.uint32(min(HEAD_TOKENS, vocab_size))
+    tail = bits % np.uint32(vocab_size)
+    pick_head = (bits >> np.uint32(28)) < np.uint32(HEAD_WEIGHT)
+    return jnp.where(pick_head, head, tail).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,10 +70,8 @@ class SyntheticLMStream:
         pos = np.arange(self.seq_len + 1, dtype=np.uint32)
         # lane index = global_row * (S+1) + position; iteration = step
         lane = rows[:, None] * np.uint32(self.seq_len + 1) + pos[None, :]
-        bits = np.asarray(
-            hash_bits(jnp.uint32(self.seed), jnp.asarray(lane), jnp.uint32(step))
-        )
-        toks = (bits % np.uint32(self.vocab_size)).astype(np.int32)
+        bits = hash_bits(jnp.uint32(self.seed), jnp.asarray(lane), jnp.uint32(step))
+        toks = np.asarray(_mixture_tokens(bits, self.vocab_size))
         return {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
 
     def jax_batch(self, step, row_lo: int, row_hi: int):
@@ -57,7 +80,7 @@ class SyntheticLMStream:
         pos = jnp.arange(self.seq_len + 1, dtype=jnp.uint32)
         lane = rows[:, None] * jnp.uint32(self.seq_len + 1) + pos[None, :]
         bits = hash_bits(jnp.uint32(self.seed), lane, jnp.asarray(step, jnp.uint32))
-        toks = (bits % jnp.uint32(self.vocab_size)).astype(jnp.int32)
+        toks = _mixture_tokens(bits, self.vocab_size)
         return {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
 
 

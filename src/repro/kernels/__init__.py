@@ -1,13 +1,27 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
   megopolis/   — the paper's contribution with tile-coalesced access
-  metropolis/  — the random-access strawman (VMEM-resident baseline)
-  prefix_sum/  — sequential-grid block scan (for multinomial/systematic)
+  metropolis/  — Algs. 2-4: the random-access strawman (VMEM-resident)
+                 plus the Dülger C1/C2 tile-partition variants
+  rejection/   — Murray's unbiased baseline (VMEM-resident, masked loop)
+  prefix_sum/  — sequential-grid block scan + coalesced binary search,
+                 composed into the five prefix-sum resampler kinds
 
 Each package ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
-(pure-jnp oracle, bit-exact vs the kernel).
+(pure-jnp oracle, bit-exact vs the kernel in interpret mode — the parity
+surface ``tests/test_backend_parity.py`` pins).
 """
 
 from repro.kernels.megopolis.ops import megopolis_tpu, megopolis_tpu_batch  # noqa: F401
-from repro.kernels.metropolis.ops import metropolis_tpu  # noqa: F401
-from repro.kernels.prefix_sum.ops import prefix_sum_tpu  # noqa: F401
+from repro.kernels.metropolis.ops import (  # noqa: F401
+    metropolis_c1_tpu,
+    metropolis_c2_tpu,
+    metropolis_tpu,
+    metropolis_tpu_batch,
+)
+from repro.kernels.prefix_sum.ops import (  # noqa: F401
+    prefix_resample_tpu,
+    prefix_sum_tpu,
+    searchsorted_tpu,
+)
+from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch  # noqa: F401

@@ -18,9 +18,47 @@ from jax import lax
 # NOTE: all scalar constants below are *numpy* scalars so they inline as
 # jaxpr literals — Pallas kernel bodies may not close over device constants.
 _GOLDEN = np.uint32(0x9E3779B9)
-_LANE = 128
-_SUBLANES = 8
-TILE = _SUBLANES * _LANE  # 1024 particles per (8,128) f32 VMEM tile
+LANES = 128
+SUBLANES = 8
+_LANE = LANES
+_SUBLANES = SUBLANES
+TILE = SUBLANES * LANES  # 1024 particles per (8,128) f32 VMEM tile
+
+
+def tile_lane_ids(t) -> jnp.ndarray:
+    """Global particle index of every lane of tile ``t``: int32[8, 128] with
+    flat row-major value ``t * 1024 + row * 128 + col`` — the ONE lane->
+    particle map every kernel body shares."""
+    row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
+    col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+    return t * TILE + row * LANES + col
+
+# Residency budget for kernels that keep a whole f32[N] array VMEM-resident
+# (the Metropolis/rejection random gather, the search kernel's CDF): ~4 MB,
+# comfortably inside a 16 MB VMEM core.  ONE definition — DESIGN.md §2
+# cites it, three ops modules enforce it.
+MAX_VMEM_PARTICLES = 1 << 20
+
+
+def check_tile_aligned(n: int, who: str):
+    """Raise unless N is whole (8, 128) f32 VMEM tiles."""
+    if n % TILE != 0:
+        raise ValueError(f"{who} requires N % {TILE} == 0; got {n}")
+
+
+def check_vmem_resident(
+    n: int,
+    who: str,
+    what: str = "weight array",
+    remedy: str = "Use megopolis_tpu (streams tiles at any N).",
+):
+    """Raise when a whole-array-resident kernel exceeds the VMEM budget."""
+    if n > MAX_VMEM_PARTICLES:
+        raise ValueError(
+            f"{who} keeps the whole {what} VMEM-resident and caps N at "
+            f"{MAX_VMEM_PARTICLES} — the scaling wall the paper's coalescing "
+            f"removes. {remedy}"
+        )
 
 
 def murmur3_fmix(x: jnp.ndarray) -> jnp.ndarray:

@@ -27,11 +27,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import TILE, flat_roll, hash_uniform
+from repro.kernels.common import TILE, flat_roll, hash_uniform, tile_lane_ids
 
 SUBLANES = 8
 LANES = 128
@@ -45,10 +44,7 @@ def _sweep(t, b, o, seed, w_own, w_cmp, k_prev, wk_prev, n_total):
     can never drift arithmetically; ``k_prev``/``wk_prev`` are the carried
     ancestor/weight values (ignored at b == 0, where k <- i and w[k] is
     seeded from the tile's own weights)."""
-    row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
-    col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
-    lane = row * LANES + col  # position p within the tile
-    i_global = t * SEG + lane  # particle index (Alg. 5 line 5)
+    i_global = tile_lane_ids(t)  # particle index (Alg. 5 line 5)
 
     k = jnp.where(b == 0, i_global, k_prev)  # k <- i      (Alg. 5 line 6)
     wk = jnp.where(b == 0, w_own, wk_prev)  # w[k] by value (register carry)

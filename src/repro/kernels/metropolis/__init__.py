@@ -1,2 +1,11 @@
-from repro.kernels.metropolis.ops import metropolis_tpu  # noqa: F401
-from repro.kernels.metropolis.ref import metropolis_ref  # noqa: F401
+from repro.kernels.metropolis.ops import (  # noqa: F401
+    metropolis_c1_tpu,
+    metropolis_c2_tpu,
+    metropolis_tpu,
+    metropolis_tpu_batch,
+)
+from repro.kernels.metropolis.ref import (  # noqa: F401
+    metropolis_c1_ref,
+    metropolis_c2_ref,
+    metropolis_ref,
+)

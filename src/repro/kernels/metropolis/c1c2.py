@@ -1,0 +1,164 @@
+"""Metropolis-C1/C2 — Pallas TPU kernels (paper Algorithms 3-4, Dülger).
+
+The CUDA originals constrain each warp's proposal index to a shared random
+partition of ``N_w`` weights so the warp's gathers land in one cache line
+(paper Fig. 3).  The TPU translation keeps that contract at tile
+granularity: the partition is one aligned ``(8, 128)`` f32 VMEM tile
+(``SEG = 1024`` particles = 4096 bytes), and the "warp" that shares it is
+the whole tile of lanes.
+
+  * **C1** (Alg. 3): ONE partition tile per own-tile, chosen up front and
+    kept for every iteration — a scalar-prefetched table ``p[num_tiles]``
+    drives the comparison BlockSpec, so the partition is fetched once per
+    tile and re-used for all B sweeps (one transaction amortised over B).
+  * **C2** (Alg. 4): a FRESH partition tile per (tile, iteration) — table
+    ``p[num_tiles * num_iters]``, comparison block re-fetched every sweep
+    (B transactions, the cost C2 pays for C1's quality pathology).
+
+Within the partition the proposal ``j_local ~ U{0, SEG-1}`` is a random
+in-VMEM gather — the analogue of the CUDA originals' random access inside
+the shared-memory partition; no HBM traffic.  RNG lane layout matches the
+Metropolis kernel: ``hash_bits(seed, i, b)`` proposes, ``hash_uniform(seed,
+i + N, b)`` accepts.
+
+Validated bit-exactly against ``ref.metropolis_c1_ref`` /
+``ref.metropolis_c2_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
+
+SEG = SUBLANES * LANES
+# One (8,128) f32 VMEM tile — the kernel's partition, in bytes (Algs. 3-4
+# parametrise the partition by bytes; the TPU tile is 1024 f32 = 4 KiB).
+PARTITION_BYTES = SEG * 4
+
+
+def _sweep_partition(t, b, p_tile, seed, w_own, w_part, k_prev, wk_prev, n_total):
+    """One segment-local accept/reject sweep (Algs. 3-4 lines 7-13).
+
+    ``w_part`` is the partition tile ``p_tile`` (already fetched by the
+    BlockSpec); the proposal is a random lane of that tile."""
+    i_global = tile_lane_ids(t)
+
+    k = jnp.where(b == 0, i_global, k_prev)
+    wk = jnp.where(b == 0, w_own, wk_prev)
+
+    # j = p * N_w + U{0, N_w-1}: random access INSIDE the resident tile.
+    j_local = (hash_bits(seed, i_global, b) % jnp.uint32(SEG)).astype(jnp.int32)
+    w_j = jnp.take(w_part.reshape(SEG), j_local.reshape(-1), axis=0).reshape(
+        SUBLANES, LANES
+    )
+    j_global = p_tile * SEG + j_local
+
+    u = hash_uniform(seed, i_global + n_total, b, dtype=w_j.dtype)
+    accept = u * wk <= w_j
+    return jnp.where(accept, j_global, k), jnp.where(accept, w_j, wk)
+
+
+def _kernel_c1(p_ref, seed_ref, w_own_ref, w_part_ref, k_ref, wk_ref):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = pl.num_programs(0) * SEG
+    k_new, wk_new = _sweep_partition(
+        t, b, p_ref[t], seed_ref[0],
+        w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+
+def _make_kernel_c2(num_iters: int):
+    def _kernel_c2(p_ref, seed_ref, w_own_ref, w_part_ref, k_ref, wk_ref):
+        t = pl.program_id(0)
+        b = pl.program_id(1)
+        n_total = pl.num_programs(0) * SEG
+        k_new, wk_new = _sweep_partition(
+            t, b, p_ref[t * num_iters + b], seed_ref[0],
+            w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+        )
+        k_ref[...] = k_new
+        wk_ref[...] = wk_new
+
+    return _kernel_c2
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c1_pallas(
+    weights2d: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``weights2d``: f32[R, 128] with R % 8 == 0; ``partitions``:
+    int32[num_tiles] (one fixed partition tile per own-tile); ``seed``:
+    uint32[1].  Returns int32[R, 128] ancestors."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+            # partition block constant in b -> fetched ONCE per tile (C1's
+            # whole point: one transaction amortised over all B sweeps)
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (p[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_c1,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(partitions, seed, weights2d, weights2d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c2_pallas(
+    weights2d: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``partitions``: int32[num_tiles * num_iters], row-major by tile —
+    ``partitions[t * num_iters + b]`` is tile t's partition at iteration b
+    (a fresh fetch per sweep, Alg. 4's cost).  Returns int32[R, 128]."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+            # fresh partition block EVERY (t, b) grid step
+            pl.BlockSpec(
+                (SUBLANES, LANES), lambda t, b, p, seed: (p[t * num_iters + b], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _make_kernel_c2(num_iters),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(partitions, seed, weights2d, weights2d)

@@ -16,41 +16,59 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import hash_bits, hash_uniform
+from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
 
-SUBLANES = 8
-LANES = 128
 SEG = SUBLANES * LANES
+
+
+def _sweep(t, b, seed, w_full, w_own, k_prev, wk_prev):
+    """One Alg. 2 accept/reject sweep of one (8,128) tile.
+
+    Shared by the single and batched kernel bodies (same discipline as the
+    Megopolis ``_sweep``) so the two can never drift arithmetically."""
+    i_global = tile_lane_ids(t)
+    k = jnp.where(b == 0, i_global, k_prev)
+    wk = jnp.where(b == 0, w_own, wk_prev)
+
+    n_total = w_full.shape[0] * LANES
+    # Alg. 2 line 5: j ~ U{0, N-1} per (particle, iteration) — random gather.
+    j = (hash_bits(seed, i_global, b) % jnp.uint32(n_total)).astype(jnp.int32)
+    w_flat = w_full.reshape(n_total)
+    w_j = jnp.take(w_flat, j.reshape(-1), axis=0).reshape(SUBLANES, LANES)
+
+    u = hash_uniform(seed, i_global + n_total, b, dtype=w_j.dtype)
+    accept = u * wk <= w_j
+    return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
 
 
 def _kernel(seed_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
     t = pl.program_id(0)
     b = pl.program_id(1)
-    seed = seed_ref[0]
+    k_new, wk_new = _sweep(
+        t, b, seed_ref[0], w_full_ref[...], w_own_ref[...], k_ref[...], wk_ref[...]
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
 
-    row = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
-    col = lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
-    i_global = t * SEG + row * LANES + col
 
-    @pl.when(b == 0)
-    def _init():
-        k_ref[...] = i_global
-        wk_ref[...] = w_own_ref[...]
+def _kernel_batch(seeds_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
+    """Grid step (s, t, b): row s of the bank, tile t, iteration b.
 
-    n_total = w_full_ref.shape[0] * LANES
-    # Alg. 2 line 5: j ~ U{0, N-1} per (particle, iteration) — random gather.
-    j = (hash_bits(seed, i_global, b) % jnp.uint32(n_total)).astype(jnp.int32)
-    w_flat = w_full_ref[...].reshape(n_total)
-    w_j = jnp.take(w_flat, j.reshape(-1), axis=0).reshape(SUBLANES, LANES)
-
-    u = hash_uniform(seed, i_global + n_total, b, dtype=w_j.dtype)
-    accept = u * wk_ref[...] <= w_j
-    k_ref[...] = jnp.where(accept, j, k_ref[...])
-    wk_ref[...] = jnp.where(accept, w_j, wk_ref[...])
+    One whole ``[B, R, 128]`` bank per pallas_call; each row keeps its own
+    VMEM-resident weight copy (the strawman's cost, paid per row) and its
+    own stateless-RNG seed ``seeds[s]``, so row s is bit-identical to the
+    single-bank kernel run with that seed."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    k_new, wk_new = _sweep(
+        t, b, seeds_ref[s], w_full_ref[0], w_own_ref[0], k_ref[0], wk_ref[...]
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -82,3 +100,43 @@ def metropolis_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
         interpret=interpret,
     )(seed, weights2d, weights2d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas_batch(
+    weights3d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched pallas_call: a ``[Bz, R, 128]`` weight bank in ONE launch.
+
+    Same leading batch-grid dimension as the Megopolis bank kernel —
+    grid (Bz, num_tiles, num_iters), iteration axis innermost so the VMEM
+    ``w[k]`` carry runs the full chain per (row, tile).  ``seeds``:
+    uint32[Bz], one stateless-RNG stream per row.  Returns int32[Bz, R, 128];
+    row s is bit-identical to ``metropolis_pallas(weights3d[s],
+    seeds[s:s+1], ...)``.
+    """
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            # row s's whole weight array resident (per-row strawman cost)
+            pl.BlockSpec((1, rows, LANES), lambda s, t, b, seeds: (s, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_batch,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(seeds, weights3d, weights3d)

@@ -1,15 +1,36 @@
-"""Public wrapper for the Metropolis TPU kernel (VMEM-resident strawman)."""
+"""Public wrappers for the Metropolis-family TPU kernels (Algs. 2-4).
+
+``metropolis_tpu`` / ``metropolis_tpu_batch`` are the VMEM-resident
+random-gather strawman; ``metropolis_c1_tpu`` / ``metropolis_c2_tpu`` are
+the Dülger segment-local variants whose partition is one (8, 128) VMEM
+tile (``c1c2.py``).  Batch contract (DESIGN.md §4): the key is split once
+along the batch axis and row ``b`` is bit-identical to the single call
+with ``split_batch_keys(key, B)[b]``.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import TILE, key_to_seed
-from repro.kernels.metropolis.metropolis import LANES, metropolis_pallas
-
-# Weights must stay VMEM-resident for the random gather; cap N (DESIGN.md §2).
-MAX_VMEM_PARTICLES = 1 << 20
+from repro.core.resamplers.batched import split_batch_keys
+from repro.kernels.common import (  # noqa: F401  (MAX_VMEM_PARTICLES re-export)
+    MAX_VMEM_PARTICLES,
+    TILE,
+    check_tile_aligned,
+    check_vmem_resident,
+    key_to_seed,
+)
+from repro.kernels.metropolis.c1c2 import (
+    PARTITION_BYTES,
+    metropolis_c1_pallas,
+    metropolis_c2_pallas,
+)
+from repro.kernels.metropolis.metropolis import (
+    LANES,
+    metropolis_pallas,
+    metropolis_pallas_batch,
+)
 
 
 def metropolis_tpu(
@@ -20,15 +41,73 @@ def metropolis_tpu(
     interpret: bool = True,
 ) -> jnp.ndarray:
     n = weights.shape[0]
-    if n % TILE != 0:
-        raise ValueError(f"metropolis_tpu requires N % {TILE} == 0; got {n}")
-    if n > MAX_VMEM_PARTICLES:
-        raise ValueError(
-            f"metropolis_tpu random-gather kernel caps N at {MAX_VMEM_PARTICLES} "
-            "(whole weight array must be VMEM-resident) — the scaling wall the "
-            "paper's coalescing removes. Use megopolis_tpu."
-        )
+    check_tile_aligned(n, "metropolis_tpu")
+    check_vmem_resident(n, "metropolis_tpu")
     seed = key_to_seed(key).reshape(1)
     w2 = weights.reshape(n // LANES, LANES)
     k2 = metropolis_pallas(w2, seed, num_iters=num_iters, interpret=interpret)
+    return k2.reshape(n)
+
+
+def metropolis_tpu_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One ``[B, R, 128]`` launch; row b == ``metropolis_tpu(split(key,B)[b],
+    weights[b])`` bit-exactly (the §4 split-key contract, held on-kernel)."""
+    if weights.ndim != 2:
+        raise ValueError(f"metropolis_tpu_batch expects weights[B, N]; got {weights.shape}")
+    bsz, n = weights.shape
+    check_tile_aligned(n, "metropolis_tpu_batch")
+    check_vmem_resident(n, "metropolis_tpu_batch")
+    seeds = key_to_seed(split_batch_keys(key, bsz))
+    w3 = weights.reshape(bsz, n // LANES, LANES)
+    k3 = metropolis_pallas_batch(w3, seeds, num_iters=num_iters, interpret=interpret)
+    return k3.reshape(bsz, n)
+
+
+def metropolis_c1_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Alg. 3 at tile granularity: ONE partition tile per own-tile, kept for
+    all iterations.  Key split mirrors the reference ``metropolis_c1``:
+    partition choice from the first subkey, accept/reject stream from the
+    second."""
+    n = weights.shape[0]
+    check_tile_aligned(n, "metropolis_c1_tpu")
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(kp, (num_tiles,), 0, num_tiles, dtype=jnp.int32)
+    seed = key_to_seed(kloop).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    k2 = metropolis_c1_pallas(w2, partitions, seed, num_iters=num_iters, interpret=interpret)
+    return k2.reshape(n)
+
+
+def metropolis_c2_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Alg. 4 at tile granularity: a FRESH partition tile per (tile,
+    iteration) — table laid out row-major by tile, ``p[t * B + b]``."""
+    n = weights.shape[0]
+    check_tile_aligned(n, "metropolis_c2_tpu")
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(
+        kp, (num_tiles * num_iters,), 0, num_tiles, dtype=jnp.int32
+    )
+    seed = key_to_seed(kloop).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    k2 = metropolis_c2_pallas(w2, partitions, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)

@@ -1,4 +1,4 @@
-"""Pure-jnp bit-exact oracle for the Metropolis Pallas kernel."""
+"""Pure-jnp bit-exact oracles for the Metropolis-family Pallas kernels."""
 
 from __future__ import annotations
 
@@ -7,7 +7,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import hash_bits, hash_uniform
+from repro.kernels.common import TILE, hash_bits, hash_uniform
+
+SEG = TILE  # 1024 — the c1c2 kernels' partition size, must match
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters",))
@@ -29,5 +31,63 @@ def metropolis_ref(
         accept = u * wk <= w_j
         return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
 
+    k, _ = jax.lax.fori_loop(0, num_iters, body, (i, weights))
+    return k
+
+
+def _partition_body(weights, i, seed, p_tile_of_b):
+    """Shared C1/C2 oracle sweep: ``p_tile_of_b(b)`` names each particle's
+    partition tile at iteration b (C1: constant in b; C2: fresh per b)."""
+    n = weights.shape[0]
+
+    def body(b, state):
+        k, wk = state
+        p = p_tile_of_b(b)
+        j_local = (hash_bits(seed, i, b) % jnp.uint32(SEG)).astype(jnp.int32)
+        j = p * SEG + j_local
+        w_j = weights[j]
+        u = hash_uniform(seed, i + n, b, dtype=weights.dtype)
+        accept = u * wk <= w_j
+        return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def metropolis_c1_ref(
+    weights: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+) -> jnp.ndarray:
+    """``partitions``: int32[num_tiles], tile t's fixed partition tile."""
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    seed = jnp.asarray(seed).reshape(-1)[0]
+    p_i = partitions[i // SEG]  # constant across iterations (Alg. 3)
+    body = _partition_body(weights, i, seed, lambda b: p_i)
+    k, _ = jax.lax.fori_loop(0, num_iters, body, (i, weights))
+    return k
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def metropolis_c2_ref(
+    weights: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+) -> jnp.ndarray:
+    """``partitions``: int32[num_tiles * num_iters], row-major by tile —
+    particle i's partition at iteration b is ``partitions[(i // SEG) *
+    num_iters + b]`` (fresh per iteration, Alg. 4)."""
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    seed = jnp.asarray(seed).reshape(-1)[0]
+    tile_of_i = i // SEG
+    body = _partition_body(
+        weights, i, seed, lambda b: partitions[tile_of_i * num_iters + b]
+    )
     k, _ = jax.lax.fori_loop(0, num_iters, body, (i, weights))
     return k

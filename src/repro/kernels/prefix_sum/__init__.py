@@ -1,2 +1,10 @@
-from repro.kernels.prefix_sum.ops import prefix_sum_tpu  # noqa: F401
-from repro.kernels.prefix_sum.ref import prefix_sum_ref  # noqa: F401
+from repro.kernels.prefix_sum.ops import (  # noqa: F401
+    prefix_resample_tpu,
+    prefix_sum_tpu,
+    searchsorted_tpu,
+)
+from repro.kernels.prefix_sum.ref import (  # noqa: F401
+    prefix_resample_ref,
+    prefix_sum_ref,
+    prefix_sum_tiled_ref,
+)

@@ -1,11 +1,41 @@
-"""Public wrapper: 1-D inclusive prefix sum via the block-scan kernel."""
+"""Public wrappers: prefix-sum scan + the kernel-lane prefix-sum resamplers.
+
+``prefix_sum_tpu`` is the raw 1-D inclusive scan.  ``prefix_resample_tpu``
+composes the family's two memory-bound stages — block-scan CDF, then
+coalesced binary search (``search.py``) — into the five registry kinds
+(multinomial / systematic / improved_systematic / stratified / residual).
+
+Randomness placement: the family's uniforms are drawn OUTSIDE the kernels
+with ``jax.random``, by the *identical formulas* as the reference
+implementations in ``repro.core.resamplers.prefix_sum`` (same key usage,
+same strata arithmetic).  The kernels accelerate the O(N) memory-bound
+stages; the draw is O(N) compute-bound and already fused by XLA.  The
+kernel lane therefore differs from the reference lane only through the
+tiled scan's f32 rounding — and is bit-exact against the ``ref.py`` oracle,
+which replays that tiled scan.
+
+``improved_systematic`` (paper Alg. 8) provably equals ``systematic``'s
+searchsorted form (asserted for the reference pair in the test suite); the
+bidirectional walk is a GPU warp-access pattern with no TPU analogue, so
+its kernel lane IS the systematic search kernel with the same draws.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import TILE
+from repro.kernels.common import TILE, check_tile_aligned, check_vmem_resident
 from repro.kernels.prefix_sum.prefix_sum import LANES, prefix_sum_pallas
+from repro.kernels.prefix_sum.search import searchsorted_pallas
+
+PREFIX_KINDS = (
+    "multinomial",
+    "systematic",
+    "improved_systematic",
+    "stratified",
+    "residual",
+)
 
 
 def prefix_sum_tpu(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
@@ -14,3 +44,91 @@ def prefix_sum_tpu(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
         raise ValueError(f"prefix_sum_tpu requires N % {TILE} == 0; got {n}")
     y2 = prefix_sum_pallas(x.reshape(n // LANES, LANES), interpret=interpret)
     return y2.reshape(n)
+
+
+def searchsorted_tpu(
+    cdf: jnp.ndarray, u: jnp.ndarray, *, side: str = "left", interpret: bool = True
+) -> jnp.ndarray:
+    n = cdf.shape[0]
+    if n % TILE != 0 or u.shape != (n,):
+        raise ValueError(
+            f"searchsorted_tpu requires matching N % {TILE} == 0 shapes; "
+            f"got cdf {cdf.shape}, u {u.shape}"
+        )
+    check_vmem_resident(
+        n, "searchsorted_tpu", what="CDF",
+        remedy="Use backend='reference'/'xla' for this family at larger N.",
+    )
+    k2 = searchsorted_pallas(
+        cdf.reshape(n // LANES, LANES), u.reshape(n // LANES, LANES),
+        side=side, interpret=interpret,
+    )
+    return k2.reshape(n)
+
+
+def kind_draws(key: jax.Array, n: int, total, dtype, kind: str):
+    """The family's uniform draws + search side, shared verbatim with the
+    ``ref.py`` oracle.  Formulas match ``repro.core.resamplers.prefix_sum``
+    exactly (same key usage, same strata arithmetic); ``total`` is the
+    CDF's last element from whichever scan produced it."""
+    if kind == "multinomial":
+        return jax.random.uniform(key, (n,), dtype) * total, "right"
+    if kind in ("systematic", "improved_systematic"):
+        u0 = jax.random.uniform(key, (), dtype)
+        return (jnp.arange(n, dtype=dtype) + u0) * (total / n), "left"
+    if kind == "stratified":
+        u = jax.random.uniform(key, (n,), dtype)
+        return (jnp.arange(n, dtype=dtype) + u) * (total / n), "left"
+    raise ValueError(f"no independent draw formula for kind {kind!r}")
+
+
+def prefix_resample_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    kind: str = "systematic",
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Resample via the scan + search kernels; returns int32[N] ancestors."""
+    if kind not in PREFIX_KINDS:
+        raise ValueError(f"kind must be one of {PREFIX_KINDS}; got {kind!r}")
+    n = weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"prefix_resample_tpu requires N % {TILE} == 0 (one f32 VMEM tile); "
+            f"got N={n}. Use the reference backend for unaligned N."
+        )
+    # The search stage keeps the CDF VMEM-resident (DESIGN.md §2) — check
+    # here so the clear error comes before three scan launches.
+    check_vmem_resident(
+        n, "prefix_resample_tpu", what="CDF",
+        remedy="Use backend='reference'/'xla' for this family at larger N.",
+    )
+    if kind == "residual":
+        return _residual_tpu(key, weights, interpret=interpret)
+    c = prefix_sum_tpu(weights, interpret=interpret)
+    u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
+    return searchsorted_tpu(c, u, side=side, interpret=interpret)
+
+
+def _residual_tpu(key: jax.Array, weights: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
+    """Residual resampling on the kernel lane (mirrors the reference's
+    "deterministic offsets into the cumsum" form, Alg. of §6.5 extras).
+
+    All three O(N) scans (normalising total, deterministic-copy counts,
+    residual CDF) run on the block-scan kernel; both searches run on the
+    search kernel.  Counts are scanned as f32 — exact for N <= 2^24."""
+    n = weights.shape[0]
+    total = prefix_sum_tpu(weights, interpret=interpret)[-1]
+    w = weights / total
+    counts = jnp.floor(n * w)  # f32 integer values
+    n_det = jnp.sum(counts).astype(jnp.int32)
+    resid = n * w - counts
+
+    cc = prefix_sum_tpu(counts, interpret=interpret)
+    c = prefix_sum_tpu(resid, interpret=interpret)
+    slots = jnp.arange(n, dtype=jnp.int32)
+    det = searchsorted_tpu(cc, slots.astype(weights.dtype), side="right", interpret=interpret)
+    u = jax.random.uniform(key, (n,), weights.dtype) * c[-1]
+    rnd = searchsorted_tpu(c, u, side="right", interpret=interpret)
+    return jnp.where(slots < n_det, det, rnd)

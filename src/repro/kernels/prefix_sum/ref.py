@@ -1,9 +1,67 @@
-"""Oracle for the prefix-sum kernel: plain jnp.cumsum."""
+"""Oracles for the prefix-sum kernels.
+
+``prefix_sum_ref`` is the plain ``jnp.cumsum`` (numerically close but not
+bit-identical to the tiled scan); ``prefix_sum_tiled_ref`` replays the
+kernel's exact arithmetic — per-1024-tile ``jnp.cumsum`` plus a scalar
+carry accumulated in tile order — and IS bit-identical in interpret mode.
+``prefix_resample_ref`` is the pure-jnp oracle for the kernel-lane
+resamplers: tiled scan + ``jnp.searchsorted`` over the identical draws
+(``kind_draws`` is imported from ``ops.py`` so the streams can never
+drift).
+"""
+
+import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.common import TILE
 
 
 @jax.jit
 def prefix_sum_ref(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(x)
+
+
+@jax.jit
+def prefix_sum_tiled_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact replay of the block-scan kernel: local cumsum per (8,128)
+    tile + sequential scalar carry, f32 adds in the same order."""
+    n = x.shape[0]
+    assert n % TILE == 0
+
+    def scan_tile(carry, tile):
+        local = jnp.cumsum(tile)
+        return carry + local[-1], local + carry
+
+    _, out = lax.scan(scan_tile, jnp.zeros((), x.dtype), x.reshape(-1, TILE))
+    return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def prefix_resample_ref(
+    key: jax.Array, weights: jnp.ndarray, *, kind: str = "systematic"
+) -> jnp.ndarray:
+    """int32[N] ancestors; must equal ``prefix_resample_tpu`` exactly."""
+    from repro.kernels.prefix_sum.ops import kind_draws
+
+    n = weights.shape[0]
+    if kind == "residual":
+        total = prefix_sum_tiled_ref(weights)[-1]
+        w = weights / total
+        counts = jnp.floor(n * w)
+        n_det = jnp.sum(counts).astype(jnp.int32)
+        resid = n * w - counts
+        cc = prefix_sum_tiled_ref(counts)
+        c = prefix_sum_tiled_ref(resid)
+        slots = jnp.arange(n, dtype=jnp.int32)
+        det = jnp.searchsorted(cc, slots.astype(weights.dtype), side="right")
+        u = jax.random.uniform(key, (n,), weights.dtype) * c[-1]
+        rnd = jnp.searchsorted(c, u, side="right")
+        k = jnp.where(slots < n_det, jnp.minimum(det, n - 1), jnp.minimum(rnd, n - 1))
+    else:
+        c = prefix_sum_tiled_ref(weights)
+        u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
+        k = jnp.minimum(jnp.searchsorted(c, u, side=side), n - 1)
+    return k.astype(jnp.int32)

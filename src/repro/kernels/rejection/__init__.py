@@ -1,0 +1,2 @@
+from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch  # noqa: F401
+from repro.kernels.rejection.ref import rejection_ref  # noqa: F401

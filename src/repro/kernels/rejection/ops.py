@@ -1,0 +1,54 @@
+"""Public wrappers for the rejection TPU kernel (VMEM-resident baseline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.resamplers.batched import split_batch_keys
+from repro.kernels.common import check_tile_aligned, check_vmem_resident, key_to_seed
+from repro.kernels.rejection.rejection import (
+    LANES,
+    rejection_pallas,
+    rejection_pallas_batch,
+)
+
+
+def _check(n: int, who: str):
+    # Same residency cap as the Metropolis strawman (random full-array gather).
+    check_tile_aligned(n, who)
+    check_vmem_resident(n, who)
+
+
+def rejection_tpu(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n = weights.shape[0]
+    _check(n, "rejection_tpu")
+    seed = key_to_seed(key).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    k2 = rejection_pallas(w2, seed, max_iters=max_iters, interpret=interpret)
+    return k2.reshape(n)
+
+
+def rejection_tpu_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One ``[B, R, 128]`` launch; row b == ``rejection_tpu(split(key,B)[b],
+    weights[b])`` bit-exactly (the §4 split-key contract, held on-kernel)."""
+    if weights.ndim != 2:
+        raise ValueError(f"rejection_tpu_batch expects weights[B, N]; got {weights.shape}")
+    bsz, n = weights.shape
+    _check(n, "rejection_tpu_batch")
+    seeds = key_to_seed(split_batch_keys(key, bsz))
+    w3 = weights.reshape(bsz, n // LANES, LANES)
+    k3 = rejection_pallas_batch(w3, seeds, max_iters=max_iters, interpret=interpret)
+    return k3.reshape(bsz, n)

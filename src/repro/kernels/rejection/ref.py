@@ -1,0 +1,38 @@
+"""Pure-jnp bit-exact oracle for the rejection Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import hash_bits, hash_uniform
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def rejection_ref(
+    weights: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    max_iters: int,
+) -> jnp.ndarray:
+    n = weights.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    seed = jnp.asarray(seed).reshape(-1)[0]
+    w_max = jnp.max(weights)
+
+    u0 = hash_uniform(seed, i + n, 0, dtype=weights.dtype)
+    done0 = u0 * w_max <= weights
+    k0 = i
+
+    def body(t, state):
+        k, done = state
+        j = (hash_bits(seed, i, t) % jnp.uint32(n)).astype(jnp.int32)
+        w_j = weights[j]
+        u = hash_uniform(seed, i + n, t, dtype=weights.dtype)
+        accept = (~done) & (u * w_max <= w_j)
+        return jnp.where(accept, j, k), done | accept
+
+    k, _ = jax.lax.fori_loop(1, max_iters + 1, body, (k0, done0))
+    return k

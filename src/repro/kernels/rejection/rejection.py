@@ -1,0 +1,152 @@
+"""Rejection resampling — Pallas TPU kernel (Murray's unbiased baseline).
+
+The paper positions Metropolis/Megopolis against rejection (§1): rejection
+is unbiased but each particle's iteration count is a geometric random
+variable — divergent control flow on SIMD hardware.  The kernel reproduces
+that SIMD reality honestly: every lane runs the SAME fixed-trip proposal
+loop (capped at ``max_iters``) with a ``done`` mask, so a tile pays for its
+slowest lane — the divergence cost the paper describes, surfaced as wasted
+masked work instead of warp serialisation.
+
+Memory contract: proposals ``j ~ U{0, N-1}`` gather from the FULL weight
+array, so like the Metropolis strawman the weights must stay VMEM-resident
+(same cap, same scaling wall).  ``sup w`` is reduced in-register from the
+resident array.  RNG lane layout matches the Metropolis kernel —
+``hash_bits(seed, i, t)`` proposes, ``hash_uniform(seed, i + N, t)``
+accepts — with ``t = 0`` reserved for the self-proposal round (particle i
+first proposes itself, accepted w.p. ``w_i / sup w``), mirroring
+``repro.core.resamplers.rejection``.
+
+Grid = (num_tiles,) only: the proposal loop lives INSIDE the kernel body
+(a ``fori_loop``), because unlike the Metropolis family there is no
+carried cross-iteration memory schedule to coalesce — every iteration's
+gather is random anyway.
+
+Validated bit-exactly against ``ref.rejection_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
+
+SEG = SUBLANES * LANES
+
+
+def _rejection_loop(t, seed, w_max, w_full, w_own, max_iters: int):
+    """The whole per-tile rejection chain (shared with nothing — rejection
+    has no cross-iteration state beyond the done mask).  ``w_max`` (sup w)
+    is scalar-prefetched: reduced ONCE by the wrapper, not once per grid
+    step."""
+    n_total = w_full.shape[0] * LANES
+    i_global = tile_lane_ids(t)
+
+    w_flat = w_full.reshape(n_total)
+
+    # Round 0: particle i proposes itself (accept w.p. w_i / sup w).
+    u0 = hash_uniform(seed, i_global + n_total, 0, dtype=w_own.dtype)
+    done0 = u0 * w_max <= w_own
+    k0 = i_global
+
+    def body(tt, state):
+        k, done = state
+        j = (hash_bits(seed, i_global, tt) % jnp.uint32(n_total)).astype(jnp.int32)
+        w_j = jnp.take(w_flat, j.reshape(-1), axis=0).reshape(SUBLANES, LANES)
+        u = hash_uniform(seed, i_global + n_total, tt, dtype=w_j.dtype)
+        accept = (~done) & (u * w_max <= w_j)
+        return jnp.where(accept, j, k), done | accept
+
+    k, _ = lax.fori_loop(1, max_iters + 1, body, (k0, done0))
+    return k
+
+
+def _make_kernel(max_iters: int):
+    def _kernel(seed_ref, wmax_ref, w_full_ref, w_own_ref, k_ref):
+        t = pl.program_id(0)
+        k_ref[...] = _rejection_loop(
+            t, seed_ref[0], wmax_ref[0], w_full_ref[...], w_own_ref[...], max_iters
+        )
+
+    return _kernel
+
+
+def _make_kernel_batch(max_iters: int):
+    def _kernel(seeds_ref, wmax_ref, w_full_ref, w_own_ref, k_ref):
+        s = pl.program_id(0)
+        t = pl.program_id(1)
+        k_ref[0] = _rejection_loop(
+            t, seeds_ref[s], wmax_ref[s], w_full_ref[0], w_own_ref[0], max_iters
+        )
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def rejection_pallas(
+    weights2d: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    max_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``weights2d``: f32[R, 128] with R % 8 == 0; ``seed``: uint32[1].
+    Returns int32[R, 128] ancestors (last proposal kept past the cap)."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+    w_max = jnp.max(weights2d).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # seed + sup w (reduced once, host of the grid)
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t, seed, wmax: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, seed, wmax: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, seed, wmax: (t, 0)),
+    )
+    return pl.pallas_call(
+        _make_kernel(max_iters),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(seed, w_max, weights2d, weights2d)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def rejection_pallas_batch(
+    weights3d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    max_iters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched launch over a ``[Bz, R, 128]`` bank (leading batch grid dim);
+    row s is bit-identical to ``rejection_pallas(weights3d[s], seeds[s:s+1])``."""
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    num_tiles = rows // SUBLANES
+    w_max = jnp.max(weights3d, axis=(1, 2))  # per-row sup w, reduced once
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, num_tiles),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda s, t, seeds, wmax: (s, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, seeds, wmax: (s, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, seeds, wmax: (s, t, 0)),
+    )
+    return pl.pallas_call(
+        _make_kernel_batch(max_iters),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(seeds, w_max, weights3d, weights3d)

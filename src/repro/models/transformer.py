@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import keystr_simple
 from repro.models.attention import attention, decode_attention, init_attention
 from repro.models.layers import embed, init_embedding, init_linear, init_rmsnorm, linear, rmsnorm
 from repro.models.mamba2 import (
@@ -122,7 +123,7 @@ def _named_shapes(cfg: ModelConfig):
     shapes = _shapes_only(cfg)
     flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
     for path, leaf in flat:
-        yield jax.tree_util.keystr(path, simple=True, separator="/"), leaf
+        yield keystr_simple(path), leaf
 
 
 # --------------------------------------------------------------------- init

@@ -28,13 +28,12 @@ from repro.core.metrics import mse, offspring_counts  # noqa: E402
 from repro.core.weightgen import gaussian_weights  # noqa: E402
 from repro.core import megopolis as core_megopolis, select_iterations  # noqa: E402
 from repro.kernels.common import key_to_seed  # noqa: E402
+from repro.compat import make_mesh, shard_map  # noqa: E402
 
 
 def main():
     assert jax.device_count() == 8, jax.device_count()
-    mesh = jax.make_mesh(
-        (8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,), devices=jax.devices()
-    )
+    mesh = make_mesh((8,), ("data",), devices=jax.devices())
     n = 8 * 2048
     num_iters = 24
     key = jax.random.PRNGKey(0)
@@ -83,7 +82,7 @@ def main():
     x = jax.random.normal(jax.random.PRNGKey(7), (n, 3))
     anc = res(k_call, w)
     gathered = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda xl, al: gather_ancestors(xl, al, axis_name="data"),
             mesh=mesh,
             in_specs=(P("data"), P("data")),
@@ -95,7 +94,7 @@ def main():
 
     # ---- island exchange: preserves multiset of particles
     mixed = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda xl: island_exchange(xl, axis_name="data", fraction=0.25),
             mesh=mesh,
             in_specs=(P("data"),),
@@ -109,7 +108,7 @@ def main():
 
     # ---- ESS psum
     ess = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda wl: effective_sample_size(wl, axis_name="data"),
             mesh=mesh,
             in_specs=(P("data"),),
@@ -126,7 +125,11 @@ def main():
 
     def n_permutes(fn):
         txt = jax.jit(fn).lower(k_call, w).compile().as_text()
-        return len(re.findall(r"collective-permute(?!-(start|done))", txt))
+        # Count instruction call sites only ("collective-permute(" — the
+        # async start/done forms spell "collective-permute-start(").  A bare
+        # name match over-counts: HLO text repeats each instruction name at
+        # every operand reference, which varies by XLA version.
+        return len(re.findall(r"\bcollective-permute\(", txt))
 
     cp_static = n_permutes(res)
     cp_dynamic = n_permutes(res_d)

@@ -18,6 +18,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.compat import make_mesh  # noqa: E402
 from repro.configs import ShapeSpec, get_arch  # noqa: E402
 from repro.launch import steps as S  # noqa: E402
 from repro.models import init_params  # noqa: E402
@@ -26,8 +27,7 @@ from repro.optim import adamw_init  # noqa: E402
 
 def main():
     assert jax.device_count() == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     arch0 = get_arch("qwen3-0.6b")
     # smoke model, dims divisible by the 4-way model axis

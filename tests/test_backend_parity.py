@@ -1,0 +1,278 @@
+"""Backend-parity harness: family × backend × single/batch (the kernel
+matrix's quality gate).
+
+Every ``ResamplerSpec`` family must build and run on every backend.  Three
+parity levels, each over the full matrix:
+
+  1. **construction** — every (family, backend) pair constructs with
+     kernel-legal geometry and returns valid ancestors from ``__call__``
+     and ``.batch``;
+  2. **xla ≡ reference** — bit-parity, single and batch (jit must not
+     change the stream);
+  3. **pallas_interpret ≡ kernel oracle** — bit-parity on CPU, single and
+     batch, against the pure-jnp ``ref.py`` oracle composed with the SAME
+     key-derivation the ops wrapper uses.  This pins both the kernel
+     arithmetic and the wrapper's key/offset-derivation contract.
+
+The §5.1 statistical gate (MSE / bias contribution per backend) lives in
+``tests/test_resampler_stats.py::test_kernel_backend_statistical_parity``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import (
+    BACKENDS,
+    KERNEL_PARTITION_BYTES,
+    KERNEL_SEGMENT,
+    MegopolisSpec,
+    MetropolisC1Spec,
+    MetropolisC2Spec,
+    MetropolisSpec,
+    PrefixSumSpec,
+    RejectionSpec,
+)
+from repro.kernels.common import TILE, key_to_seed
+from repro.kernels.megopolis.ref import megopolis_ref
+from repro.kernels.metropolis.ref import metropolis_c1_ref, metropolis_c2_ref, metropolis_ref
+from repro.kernels.prefix_sum.ref import prefix_resample_ref
+from repro.kernels.rejection.ref import rejection_ref
+
+N = 2 * TILE
+BATCH = 3
+ITERS = 8
+MAX_ITERS = 24  # rejection cap in this harness
+
+PREFIX_KINDS = ("multinomial", "systematic", "improved_systematic", "stratified", "residual")
+
+
+def _spec(name: str, backend: str):
+    """Kernel-legal spec for every (family, backend) cell of the matrix."""
+    pallas = backend in ("pallas", "pallas_interpret")
+    if name == "megopolis":
+        return MegopolisSpec(
+            num_iters=ITERS, segment=KERNEL_SEGMENT if pallas else 32, backend=backend
+        )
+    if name == "metropolis":
+        return MetropolisSpec(num_iters=ITERS, backend=backend)
+    if name == "metropolis_c1":
+        return MetropolisC1Spec(
+            num_iters=ITERS,
+            partition_size_bytes=KERNEL_PARTITION_BYTES if pallas else 128,
+            backend=backend,
+        )
+    if name == "metropolis_c2":
+        return MetropolisC2Spec(
+            num_iters=ITERS,
+            partition_size_bytes=KERNEL_PARTITION_BYTES if pallas else 128,
+            backend=backend,
+        )
+    if name == "rejection":
+        return RejectionSpec(max_iters=MAX_ITERS, backend=backend)
+    return PrefixSumSpec(kind=name, backend=backend)
+
+
+FAMILIES = ("megopolis", "metropolis", "metropolis_c1", "metropolis_c2", "rejection") + (
+    PREFIX_KINDS
+)
+
+
+# ------------------------------------------------------ kernel-oracle adapters
+# Each adapter replays the ops wrapper's key derivation, then calls the
+# pure-jnp ref.py oracle — the (key, weights) -> ancestors ground truth the
+# pallas_interpret backend must match bit-for-bit.
+
+def _megopolis_oracle(key, w):
+    n = w.shape[0]
+    key_off, key_seed = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (ITERS,), 0, n, dtype=jnp.int32)
+    seed = key_to_seed(key_seed).reshape(1)
+    return megopolis_ref(w, offsets, seed, num_iters=ITERS)
+
+
+def _megopolis_oracle_batch(key, w):
+    # The bank kernel's documented contract: ONE offset table bank-wide,
+    # per-row RNG seeds (DESIGN.md §4).
+    bsz, n = w.shape
+    key_off, key_rows = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (ITERS,), 0, n, dtype=jnp.int32)
+    seeds = key_to_seed(jax.random.split(key_rows, bsz))
+    return jnp.stack(
+        [megopolis_ref(w[b], offsets, seeds[b].reshape(1), num_iters=ITERS)
+         for b in range(bsz)]
+    )
+
+
+def _metropolis_oracle(key, w):
+    return metropolis_ref(w, key_to_seed(key).reshape(1), num_iters=ITERS)
+
+
+def _c1_oracle(key, w):
+    num_tiles = w.shape[0] // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(kp, (num_tiles,), 0, num_tiles, dtype=jnp.int32)
+    return metropolis_c1_ref(w, partitions, key_to_seed(kloop).reshape(1), num_iters=ITERS)
+
+
+def _c2_oracle(key, w):
+    num_tiles = w.shape[0] // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(
+        kp, (num_tiles * ITERS,), 0, num_tiles, dtype=jnp.int32
+    )
+    return metropolis_c2_ref(w, partitions, key_to_seed(kloop).reshape(1), num_iters=ITERS)
+
+
+def _rejection_oracle(key, w):
+    return rejection_ref(w, key_to_seed(key).reshape(1), max_iters=MAX_ITERS)
+
+
+def _prefix_oracle(kind):
+    def oracle(key, w):
+        return prefix_resample_ref(key, w, kind=kind)
+
+    return oracle
+
+
+ORACLES = {
+    "megopolis": _megopolis_oracle,
+    "metropolis": _metropolis_oracle,
+    "metropolis_c1": _c1_oracle,
+    "metropolis_c2": _c2_oracle,
+    "rejection": _rejection_oracle,
+    **{kind: _prefix_oracle(kind) for kind in PREFIX_KINDS},
+}
+
+
+def _split_key_batch_oracle(single_oracle):
+    """The §4 contract: row b == single with split(key, B)[b]."""
+
+    def oracle(key, w):
+        keys = split_batch_keys(key, w.shape[0])
+        return jnp.stack([single_oracle(keys[b], w[b]) for b in range(w.shape[0])])
+
+    return oracle
+
+
+BATCH_ORACLES = {
+    name: (_megopolis_oracle_batch if name == "megopolis"
+           else _split_key_batch_oracle(ORACLES[name]))
+    for name in FAMILIES
+}
+
+
+@pytest.fixture(scope="module")
+def w_single():
+    return jax.random.uniform(jax.random.PRNGKey(101), (N,)) + 1e-3
+
+
+@pytest.fixture(scope="module")
+def w_bank():
+    return jax.random.uniform(jax.random.PRNGKey(102), (BATCH, N)) + 1e-3
+
+
+# --------------------------------------------------------- 1. construction
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_every_family_constructs_on_every_backend(name, backend):
+    spec = _spec(name, backend)
+    r = spec.build()
+    assert r.name == name
+    assert spec.backend == backend
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_pallas_interpret_returns_valid_ancestors(name, w_single, w_bank, base_key):
+    r = _spec(name, "pallas_interpret").build()
+    a = r(base_key, w_single)
+    ab = r.batch(base_key, w_bank)
+    assert a.shape == (N,) and a.dtype == jnp.int32
+    assert ab.shape == (BATCH, N) and ab.dtype == jnp.int32
+    assert bool(jnp.all((a >= 0) & (a < N)))
+    assert bool(jnp.all((ab >= 0) & (ab < N)))
+
+
+# --------------------------------------------------- 2. xla == reference
+@pytest.mark.parametrize("name", FAMILIES)
+def test_xla_bit_identical_to_reference(name, w_single, w_bank, base_key):
+    ref = _spec(name, "reference").build()
+    xla = _spec(name, "xla").build()
+    np.testing.assert_array_equal(
+        np.asarray(ref(base_key, w_single)), np.asarray(xla(base_key, w_single))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ref.batch(base_key, w_bank)), np.asarray(xla.batch(base_key, w_bank))
+    )
+
+
+# ------------------------------------- 3. pallas_interpret == kernel oracle
+@pytest.mark.parametrize("name", FAMILIES)
+def test_pallas_interpret_bit_identical_to_oracle_single(name, w_single, base_key):
+    r = _spec(name, "pallas_interpret").build()
+    got = r(base_key, w_single)
+    want = ORACLES[name](base_key, w_single)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_pallas_interpret_bit_identical_to_oracle_batch(name, w_bank, base_key):
+    r = _spec(name, "pallas_interpret").build()
+    got = r.batch(base_key, w_bank)
+    want = BATCH_ORACLES[name](base_key, w_bank)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------- 'auto' batch contract
+@pytest.mark.parametrize("name", ["metropolis", "metropolis_c1", "metropolis_c2"])
+def test_pallas_auto_batch_resolves_eq3_per_row(name, base_key):
+    """num_iters='auto' .batch must give each row ITS OWN eq. (3) count —
+    bit-identical to the single call with split key b — not one bank-level
+    resolve (which under-iterates concentrated rows)."""
+    from repro.core.weightgen import gaussian_weights
+
+    spec = _spec(name, "pallas_interpret").replace(num_iters="auto")
+    r = spec.build()
+    # rows with wildly different degeneracy -> different per-row B
+    w = jnp.stack(
+        [gaussian_weights(jax.random.PRNGKey(1), N, y=0.0),
+         gaussian_weights(jax.random.PRNGKey(2), N, y=4.0)]
+    )
+    got = r.batch(base_key, w)
+    keys = split_batch_keys(base_key, 2)
+    want = jnp.stack([r(keys[b], w[b]) for b in range(2)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", ["metropolis", "metropolis_c1", "metropolis_c2"])
+def test_pallas_auto_batch_rejects_traced_weights(name, base_key, w_bank):
+    r = _spec(name, "pallas_interpret").replace(num_iters="auto").build()
+    with pytest.raises(TypeError, match="concrete"):
+        jax.jit(r.batch)(base_key, w_bank)
+
+
+# ---------------------------------------------- oracle-independent sanity
+@pytest.mark.parametrize("name", FAMILIES)
+def test_pallas_interpret_offspring_track_weights(name, base_key):
+    """Mean offspring must track N*w/sum(w) on the kernel lane — a ground
+    truth the ref.py oracles do NOT define, so an index-map error shared by
+    kernel and oracle still fails here.  Correlation (not per-particle
+    tolerance) keeps the Monte Carlo cheap."""
+    from repro.core.metrics import offspring_counts
+    from repro.core.weightgen import gaussian_weights
+
+    w = gaussian_weights(jax.random.PRNGKey(9), N, y=2.0)
+    spec = _spec(name, "pallas_interpret")
+    if hasattr(spec, "num_iters"):
+        spec = spec.replace(num_iters=24)  # ~ eq. (3) at y=2
+    r = spec.build()
+    offs = []
+    for t in range(8):
+        a = r(jax.random.fold_in(base_key, 900 + t), w)
+        offs.append(np.asarray(offspring_counts(a, N)))
+    mean_off = np.stack(offs).mean(axis=0)
+    want = N * np.asarray(w / jnp.sum(w))
+    assert np.corrcoef(mean_off, want)[0, 1] > 0.8, name
+    np.testing.assert_allclose(mean_off.sum(), N, rtol=1e-6)

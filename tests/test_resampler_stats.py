@@ -106,3 +106,119 @@ def test_systematic_lowest_variance(weights):
     m_mult = float(mse(_offsprings(multinomial, key, weights, 0), weights))
     m_mego = float(mse(_offsprings(megopolis, key, weights, num_iters), weights))
     assert m_sys < m_mego < m_mult, (m_sys, m_mego, m_mult)
+
+
+# ------------------------------------------------- kernel-lane quality gate
+# §5.1 metrics recomputed per backend: every family's pallas_interpret lane
+# must match its geometry-matched reference lane in MSE (and stay low-bias
+# where the algorithm is unbiased).  This is what makes kernel quality
+# GATED, not assumed — the bit-parity harness (test_backend_parity.py) pins
+# arithmetic, this pins statistics.
+
+KN = 2048  # kernel-aligned N (2 VMEM tiles)
+KK = 16
+
+
+def _spec_offsprings(spec, key, w, k_runs=KK):
+    r = spec.build()
+    outs = []
+    for t in range(k_runs):
+        outs.append(np.asarray(offspring_counts(r(jax.random.fold_in(key, t), w), KN)))
+    return jnp.asarray(np.stack(outs))
+
+
+@pytest.fixture(scope="module")
+def kweights():
+    return gaussian_weights(jax.random.PRNGKey(43), KN, y=2.0)
+
+
+def _kernel_vs_reference_specs(kweights):
+    from repro.core.spec import (
+        KERNEL_PARTITION_BYTES,
+        KERNEL_SEGMENT,
+        MegopolisSpec,
+        MetropolisC1Spec,
+        MetropolisC2Spec,
+        MetropolisSpec,
+        PrefixSumSpec,
+        RejectionSpec,
+    )
+
+    b = int(select_iterations(kweights, 0.01))
+    pairs = {
+        "megopolis": (
+            MegopolisSpec(num_iters=b, segment=KERNEL_SEGMENT, backend="pallas_interpret"),
+            MegopolisSpec(num_iters=b, segment=KERNEL_SEGMENT),
+        ),
+        "metropolis": (
+            MetropolisSpec(num_iters=b, backend="pallas_interpret"),
+            MetropolisSpec(num_iters=b),
+        ),
+        # geometry-matched reference: the kernel shares its partition at
+        # TILE granularity (1024 lanes), so the reference warp must match —
+        # warp=32 at the same partition bytes is a finer sharing unit with
+        # materially lower variance (the Fig. 7 granularity effect).
+        "metropolis_c1": (
+            MetropolisC1Spec(
+                num_iters=b, partition_size_bytes=KERNEL_PARTITION_BYTES,
+                backend="pallas_interpret",
+            ),
+            MetropolisC1Spec(
+                num_iters=b, partition_size_bytes=KERNEL_PARTITION_BYTES,
+                warp=KERNEL_SEGMENT,
+            ),
+        ),
+        "metropolis_c2": (
+            MetropolisC2Spec(
+                num_iters=b, partition_size_bytes=KERNEL_PARTITION_BYTES,
+                backend="pallas_interpret",
+            ),
+            MetropolisC2Spec(
+                num_iters=b, partition_size_bytes=KERNEL_PARTITION_BYTES,
+                warp=KERNEL_SEGMENT,
+            ),
+        ),
+        "rejection": (
+            RejectionSpec(max_iters=64, backend="pallas_interpret"),
+            RejectionSpec(max_iters=64),
+        ),
+    }
+    for kind in ("multinomial", "systematic", "improved_systematic", "stratified", "residual"):
+        pairs[kind] = (
+            PrefixSumSpec(kind=kind, backend="pallas_interpret"),
+            PrefixSumSpec(kind=kind),
+        )
+    return pairs
+
+
+@pytest.mark.parametrize(
+    "family",
+    [
+        "megopolis",
+        "metropolis",
+        "metropolis_c1",
+        "metropolis_c2",
+        "rejection",
+        "multinomial",
+        "systematic",
+        "improved_systematic",
+        "stratified",
+        "residual",
+    ],
+)
+def test_kernel_backend_statistical_parity(family, kweights):
+    kernel_spec, ref_spec = _kernel_vs_reference_specs(kweights)[family]
+    key = jax.random.PRNGKey(14)
+    o_kern = _spec_offsprings(kernel_spec, key, kweights)
+    o_ref = _spec_offsprings(ref_spec, jax.random.fold_in(key, 999), kweights)
+    m_kern = float(mse(o_kern, kweights)) / KN
+    m_ref = float(mse(o_ref, kweights)) / KN
+    assert abs(m_kern - m_ref) < 0.4 * m_ref, (family, m_kern, m_ref)
+    # bias gate where the algorithm is (near-)unbiased
+    if family in ("rejection", "multinomial", "systematic", "improved_systematic",
+                  "stratified", "residual"):
+        b_kern = float(bias_contribution(o_kern, kweights))
+        assert b_kern < 0.1, (family, b_kern)
+    else:
+        b_kern = float(bias_contribution(o_kern, kweights))
+        assert b_kern < 0.25, (family, b_kern)

@@ -110,10 +110,12 @@ def test_replace_sweeps_revalidate():
         (lambda: MegopolisSpec(backend="cuda"), "backend"),
         (lambda: MegopolisSpec(num_iters=4, backend="pallas_interpret"), "segment=1024"),
         (lambda: MetropolisC1Spec(partition_size_bytes=-1), "partition_size_bytes"),
-        (lambda: MetropolisC1Spec(backend="pallas"), "no Pallas kernel"),
+        # C1/C2 pallas kernels partition at one VMEM tile: the spec must say so
+        (lambda: MetropolisC1Spec(backend="pallas"), "4096"),
+        (lambda: MetropolisC2Spec(backend="pallas_interpret", partition_size_bytes=2048), "4096"),
         (lambda: RejectionSpec(max_iters=0), "max_iters"),
         (lambda: PrefixSumSpec(kind="sistematic"), "systematic"),
-        (lambda: PrefixSumSpec(backend="pallas_interpret"), "no Pallas kernel"),
+        (lambda: PrefixSumSpec(backend="cuda"), "backend"),
     ],
 )
 def test_validation_is_eager(ctor, match):

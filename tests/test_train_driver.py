@@ -21,10 +21,13 @@ def test_resume_reproduces_uninterrupted_run(tmp_path):
     second = run(TrainRun(steps=8, ckpt_dir=rdir, ckpt_every=100, resume=True, **base))
     got = first["losses"] + second["losses"]
     # rtol: XLA-CPU matmul reductions are load-dependent (threadpool work
-    # splitting), so even identical replays drift ~1e-4/step — the check is
-    # that the resumed trajectory tracks the uninterrupted one, which a
-    # wrong data position or state restore would break by whole units.
-    np.testing.assert_allclose(got, full["losses"], rtol=5e-3)
+    # splitting), so even identical replays drift per step — and with the
+    # learnable token stream the drift compounds through real gradients
+    # (observed up to ~7e-3 over 8 steps on a loaded CI box).  The check is
+    # that the resumed trajectory tracks the uninterrupted one: a state
+    # re-init jumps back to the random-init loss (~3% off) and a wrong
+    # restore breaks by whole units.
+    np.testing.assert_allclose(got, full["losses"], rtol=1e-2)
 
 
 def test_heartbeat_written(tmp_path):
