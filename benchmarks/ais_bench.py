@@ -1,0 +1,120 @@
+"""AIS quality × speed: logZ bias/variance per resampler family × backend.
+
+The sampler workload (DESIGN.md §10) is the first suite where resampler
+quality has an ANALYTIC answer: annealed SMC on a closed-form target
+estimates logZ, and the estimator's bias/variance over Monte-Carlo
+repeats is the quality metric (Murray, Lee & Jacob's framing — resampler
+noise shows up directly in the normalising constant).  The repeats run as
+ONE sampler bank (`run_smc_sampler_bank`, the §4 scenario axis), so each
+(family, backend) cell is a single jitted scan with one batched resample
+launch per temperature.
+
+    PYTHONPATH=src python -m benchmarks.ais_bench [--quick] [--backend pallas_interpret]
+
+Writes ``ais_bench.csv`` + ``BENCH_ais.json`` into ``BENCH_OUT`` (default
+benchmarks/out/) — `benchmarks/run.py --json` folds the JSON's logZ stats
+into the per-run trajectory file (EXPERIMENTS.md §AIS).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import ensure_out, print_table, time_fn, write_csv
+from repro.ais import SMCSamplerConfig, gaussian_mixture, isotropic_gaussian, run_smc_sampler_bank
+from repro.core.spec import spec_for_backend
+
+FAMILIES = ("megopolis", "metropolis", "rejection", "systematic")
+
+
+def bench_one(name: str, backend: str, target, repeats: int, particles: int,
+              temps: int, num_iters: int, timing_repeats: int) -> dict:
+    cfg = SMCSamplerConfig(num_particles=particles, num_temps=temps,
+                           resampler=spec_for_backend(name, backend,
+                                                      num_iters=num_iters))
+    key = jax.random.PRNGKey(0)
+    bank = jax.jit(
+        lambda k: run_smc_sampler_bank(k, target, cfg, num_scenarios=repeats)
+    )
+    wall = time_fn(bank, key, warmup=1, repeats=timing_repeats)
+    out = bank(key)
+    logz = np.asarray(out["log_z"], np.float64)
+    bias = float(np.mean(logz) - target.log_z)
+    # ddof=1 std is undefined (NaN) for a single repeat; keep the JSON
+    # strictly parseable under --repeats 1.
+    std = float(np.std(logz, ddof=1)) if logz.size > 1 else 0.0
+    return {
+        "resampler": name,
+        "backend": backend,
+        "target": target.name,
+        "repeats": repeats,
+        "particles": particles,
+        "temps": temps,
+        "wall_s": wall,
+        "wall_per_run_s": wall / repeats,
+        "logz_true": float(target.log_z),
+        "logz_mean": float(np.mean(logz)),
+        "logz_bias": bias,
+        "logz_std": std,
+        "logz_rmse": float(np.sqrt(np.mean((logz - target.log_z) ** 2))),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sweep for CI smoke")
+    ap.add_argument("--full", action="store_true", help="paper-scale sweep")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "xla", "pallas_interpret", "pallas"),
+                    help="resampler backend for the whole sweep")
+    ap.add_argument("--repeats", type=int, default=0, help="override MC repeats")
+    ap.add_argument("--iters", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    if args.full:
+        particles, temps, repeats = 4096, 24, 32
+        families = FAMILIES
+    elif args.quick:
+        particles, temps, repeats = 1024, 10, 8
+        families = ("megopolis", "systematic")
+    else:
+        particles, temps, repeats = 2048, 16, 16
+        families = FAMILIES
+    if args.backend in ("pallas", "pallas_interpret"):
+        # kernel tile contract: N % 1024 == 0 (already true above); keep the
+        # interpret-mode sweep tractable
+        repeats = min(repeats, 8)
+    repeats = args.repeats or repeats
+    timing_repeats = 2 if args.backend in ("pallas", "pallas_interpret") else 5
+
+    targets = [isotropic_gaussian(dim=2), gaussian_mixture()]
+    if args.quick:
+        targets = targets[:1]
+
+    rows = []
+    for target in targets:
+        for name in families:
+            rows.append(bench_one(name, args.backend, target, repeats,
+                                  particles, temps, args.iters, timing_repeats))
+            print_table(rows[-1:])
+
+    csv_path = write_csv("ais_bench.csv", rows)
+    json_path = os.path.join(ensure_out(), "BENCH_ais.json")
+    with open(json_path, "w") as f:
+        json.dump({"config": {"particles": particles, "temps": temps,
+                              "repeats": repeats, "num_iters": args.iters,
+                              "backend": args.backend},
+                   "rows": rows}, f, indent=2)
+    print(f"\nwrote {csv_path} and {json_path}")
+    worst = max(rows, key=lambda r: abs(r["logz_bias"]))
+    print(f"largest |logZ bias|: {abs(worst['logz_bias']):.4f} "
+          f"({worst['resampler']} on {worst['target']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,11 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--skip NAME ...]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip NAME ...] [--json PATH]
 
 CI scale by default (~minutes on CPU); ``--full`` restores paper sizes.
+``--json PATH`` writes the per-suite wall-times (plus the ais suite's logZ
+quality stats) to a machine-readable trajectory file — accrete one
+``BENCH_<date>.json`` per run into the perf history (EXPERIMENTS.md §Perf).
 The dry-run / roofline pipeline is separate (launch/dryrun.py) because it
 re-initialises jax with 512 virtual devices.
 """
@@ -10,8 +13,12 @@ re-initialises jax with 512 virtual devices.
 from __future__ import annotations
 
 import argparse
+import difflib
+import json
+import os
 import sys
 import time
+from datetime import date
 
 SUITES = [
     ("transactions", "benchmarks.transactions_bench", []),
@@ -22,9 +29,47 @@ SUITES = [
     ("fig10", "benchmarks.fig10_gamma", []),
     ("table2", "benchmarks.table2_e2e_pf", []),
     ("filter_bank", "benchmarks.filter_bank_bench", ["--quick"]),
+    ("ais", "benchmarks.ais_bench", ["--quick"]),
     ("smc", "benchmarks.smc_decode_bench", ["--particles", "32", "--new-tokens", "8",
                                             "--archs", "qwen3-0.6b"]),
 ]
+# Suites whose CLI has no --full flag (or whose scale is pinned above).
+_NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais")
+
+
+def _check_suite_names(names, flag: str):
+    """Unknown suite names error with a difflib nearest-match hint (the
+    same UX as the spec registry's KeyErrors) instead of being silently
+    ignored — a typo in --skip used to run the suite anyway."""
+    known = [name for name, _, _ in SUITES]
+    for name in names:
+        if name not in known:
+            hint = difflib.get_close_matches(name, known, n=1)
+            did_you_mean = f" — did you mean {hint[0]!r}?" if hint else ""
+            raise SystemExit(
+                f"benchmarks.run: unknown suite {name!r} in {flag}"
+                f"{did_you_mean}; choices: {known}"
+            )
+
+
+def _ais_stats():
+    """Fold the ais suite's logZ quality rows into the trajectory JSON
+    (written by benchmarks.ais_bench as BENCH_ais.json)."""
+    from benchmarks.common import OUT_DIR
+
+    path = os.path.join(OUT_DIR, "BENCH_ais.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        "config": payload.get("config"),
+        "logz": [
+            {k: r[k] for k in ("resampler", "backend", "target", "logz_bias",
+                               "logz_std", "logz_rmse", "wall_per_run_s")}
+            for r in payload.get("rows", [])
+        ],
+    }
 
 
 def main(argv=None):
@@ -32,26 +77,53 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[])
     ap.add_argument("--only", nargs="*", default=[])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-suite wall-times (+ ais logZ stats) to PATH; "
+                         "pass a directory to get BENCH_<date>.json inside it")
     args = ap.parse_args(argv)
+    _check_suite_names(args.skip, "--skip")
+    _check_suite_names(args.only, "--only")
 
     failures = []
+    suite_times = {}
     for name, module, extra in SUITES:
         if name in args.skip or (args.only and name not in args.only):
             continue
         print(f"\n======== {name} ({module}) ========")
         t0 = time.time()
-        argv_m = list(extra) + (["--full"] if args.full and name not in ("transactions", "kernel", "smc") else [])
+        argv_m = list(extra) + (["--full"] if args.full and name not in _NO_FULL else [])
         try:
             mod = __import__(module, fromlist=["main"])
             mod.main(argv_m)
-            print(f"[{name}] OK in {time.time()-t0:.1f}s")
+            suite_times[name] = time.time() - t0
+            print(f"[{name}] OK in {suite_times[name]:.1f}s")
         except SystemExit as e:
             if e.code not in (0, None):
                 failures.append(name)
-        except Exception as e:
+            else:
+                suite_times[name] = time.time() - t0
+        except Exception:
             import traceback
             traceback.print_exc()
             failures.append(name)
+
+    if args.json:
+        path = args.json
+        if os.path.isdir(path):
+            path = os.path.join(path, f"BENCH_{date.today().isoformat()}.json")
+        payload = {
+            "date": date.today().isoformat(),
+            "full": args.full,
+            "suite_wall_s": {k: round(v, 3) for k, v in suite_times.items()},
+            "failures": failures,
+        }
+        ais = _ais_stats() if "ais" in suite_times else None
+        if ais:
+            payload["ais"] = ais
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote trajectory {path}")
+
     if failures:
         print(f"\nFAILED suites: {failures}")
         sys.exit(1)

@@ -1,0 +1,112 @@
+"""Annealed SMC sampling with analytic logZ ground truth (DESIGN.md §10).
+
+The paper's AIS workload end-to-end: anneal N particles from a broad
+Gaussian base to each target family in ``repro.ais.targets``, resampling
+with a chosen ``ResamplerSpec``, and compare the estimated log-normalising
+constant against the closed form — the first workload in the repo where
+resampler quality is scored against an exact answer.
+
+    PYTHONPATH=src python examples/ais_sampler.py [--particles 4096]
+    PYTHONPATH=src python examples/ais_sampler.py --schedule adaptive --move mala
+
+``--bank S`` instead runs a SCENARIO BANK (DESIGN.md §4): S differently
+parameterised Gaussian posteriors annealed side by side in one jitted
+scan — a single batched resampler launch per temperature — with per-row
+analytic logZ.
+
+    PYTHONPATH=src python examples/ais_sampler.py --bank 8
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ais import (
+    SMCSamplerConfig,
+    banana,
+    correlated_gaussian,
+    gaussian_family,
+    gaussian_mixture,
+    gaussian_theta,
+    isotropic_gaussian,
+    logistic_regression,
+    run_smc_sampler,
+    run_smc_sampler_bank,
+)
+
+
+def run_bank_demo(args):
+    fam = gaussian_family(dim=2)
+    scenarios = [
+        gaussian_theta(mean=0.5 * s, sigma=0.75 + 0.25 * s) for s in range(args.bank)
+    ]
+    thetas = jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+    cfg = SMCSamplerConfig(
+        num_particles=args.particles, num_temps=args.temps,
+        resampler=args.resampler, schedule=args.schedule, move=args.move,
+    )
+    key = jax.random.PRNGKey(args.seed)
+
+    bank = jax.jit(lambda k: run_smc_sampler_bank(k, fam, cfg, thetas=thetas))
+    jax.block_until_ready(bank(key))  # compile
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(bank(key))
+    t_bank = time.perf_counter() - t0
+
+    print(f"Gaussian-family bank: S={args.bank}, {args.particles} particles, "
+          f"{args.temps} temps, {args.resampler} / {args.schedule} / {args.move}\n")
+    print(f"{'scenario':>8s} {'sigma':>6s} {'logZ est':>10s} {'logZ true':>10s} "
+          f"{'|err|':>8s} {'resamples':>10s}")
+    for s, th in enumerate(scenarios):
+        true = float(fam.log_z_fn(th))
+        est = float(out["log_z"][s])
+        print(f"{s:8d} {float(th['sigma']):6.2f} {est:10.4f} {true:10.4f} "
+              f"{abs(est - true):8.4f} {int(out['num_resamples'][s]):10d}")
+    print(f"\nbank wall: {t_bank * 1e3:.1f} ms "
+          f"(one batched resampler launch per temperature)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--particles", type=int, default=1 << 12)
+    ap.add_argument("--temps", type=int, default=24)
+    ap.add_argument("--resampler", default="megopolis")
+    ap.add_argument("--schedule", default="geometric", choices=("geometric", "adaptive"))
+    ap.add_argument("--move", default="rwm", choices=("rwm", "mala"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bank", type=int, default=0,
+                    help="run S Gaussian scenarios as one batched sampler bank")
+    args = ap.parse_args()
+    if args.bank:
+        return run_bank_demo(args)
+
+    cfg = SMCSamplerConfig(
+        num_particles=args.particles, num_temps=args.temps,
+        resampler=args.resampler, schedule=args.schedule, move=args.move,
+    )
+    key = jax.random.PRNGKey(args.seed)
+    print(f"annealed SMC: {args.particles} particles, {args.temps} temps, "
+          f"{args.resampler} / {args.schedule} / {args.move}\n")
+    print(f"{'target':24s} {'logZ est':>10s} {'logZ true':>10s} {'|err|':>8s} "
+          f"{'resamples':>10s} {'accept':>7s} {'wall':>8s}")
+    for target in (isotropic_gaussian(), correlated_gaussian(), gaussian_mixture(),
+                   banana(), logistic_regression()):
+        run = jax.jit(lambda k, t=target: run_smc_sampler(k, t, cfg))
+        jax.block_until_ready(run(key))  # compile
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(run(key))
+        wall = time.perf_counter() - t0
+        est = float(out["log_z"])
+        true_s = f"{target.log_z:10.4f}" if target.log_z is not None else "       n/a"
+        err_s = (f"{abs(est - target.log_z):8.4f}"
+                 if target.log_z is not None else "     n/a")
+        print(f"{target.name:24s} {est:10.4f} {true_s} {err_s} "
+              f"{int(out['num_resamples']):10d} "
+              f"{float(np.mean(np.asarray(out['accept']))):7.2f} {wall * 1e3:6.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

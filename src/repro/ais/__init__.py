@@ -1,0 +1,31 @@
+# AIS — the paper's adaptive-importance-sampling workload (DESIGN.md §10):
+# annealed SMC over jittable tempered targets with analytic logZ ground
+# truth, resampling through ANY ResamplerSpec on any backend.
+
+from repro.ais.moves import (  # noqa: F401
+    MOVES,
+    TARGET_ACCEPT,
+    adapt_step_size,
+    mala,
+    random_walk_metropolis,
+)
+from repro.ais.sampler import (  # noqa: F401
+    SMCSamplerConfig,
+    run_smc_sampler,
+    run_smc_sampler_bank,
+)
+from repro.ais.schedule import (  # noqa: F401
+    conditional_ess,
+    geometric_schedule,
+    next_temperature,
+)
+from repro.ais.targets import (  # noqa: F401
+    Target,
+    banana,
+    correlated_gaussian,
+    gaussian_family,
+    gaussian_mixture,
+    gaussian_theta,
+    isotropic_gaussian,
+    logistic_regression,
+)

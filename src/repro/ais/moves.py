@@ -1,0 +1,88 @@
+"""Jittable MCMC move kernels for the SMC sampler (DESIGN.md §10).
+
+Each kernel rejuvenates N particles IN PARALLEL against a fixed
+log-density (the current tempered target π_β): particles are independent
+chains, so the whole sweep is one vectorised accept/reject per step — the
+same "many independent decisions on the particle axis" shape the
+resamplers exploit.  Both return the mean acceptance rate, which the
+sampler feeds back into a per-temperature Robbins–Monro step-size
+adaptation (``adapt_step_size``).
+
+Signatures match so the sampler dispatches by name::
+
+    x, accept = move(key, x, log_prob, step_size, num_steps)
+
+``step_size`` may be a traced scalar (it is carried and adapted inside the
+sampler's ``lax.scan``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Optimal-scaling acceptance targets (Roberts-Rosenthal asymptotics).
+RWM_TARGET_ACCEPT = 0.234
+MALA_TARGET_ACCEPT = 0.574
+
+
+def random_walk_metropolis(key, x, log_prob, step_size, num_steps: int):
+    """``num_steps`` RWM sweeps over x[N, d]; returns (x', mean_accept)."""
+
+    def sweep(carry, k):
+        x, lp = carry
+        k_prop, k_acc = jax.random.split(k)
+        prop = x + step_size * jax.random.normal(k_prop, x.shape)
+        lp_prop = log_prob(prop)
+        log_u = jnp.log(jax.random.uniform(k_acc, lp.shape))
+        accept = log_u < lp_prop - lp
+        x = jnp.where(accept[:, None], prop, x)
+        lp = jnp.where(accept, lp_prop, lp)
+        return (x, lp), jnp.mean(accept.astype(jnp.float32))
+
+    keys = jax.random.split(key, num_steps)
+    (x, _), accepts = jax.lax.scan(sweep, (x, log_prob(x)), keys)
+    return x, jnp.mean(accepts)
+
+
+def mala(key, x, log_prob, step_size, num_steps: int):
+    """Metropolis-adjusted Langevin: gradient-informed proposal + exact MH
+    correction.  Particles are independent, so ∇ of the summed log-density
+    is the per-particle gradient — one reverse pass for the whole bank."""
+
+    grad = jax.grad(lambda y: jnp.sum(log_prob(y)))
+
+    def log_q(to, frm, g_frm):
+        # log N(to; frm + (ε²/2)·∇logπ(frm), ε²·I), per particle
+        mean = frm + 0.5 * jnp.square(step_size) * g_frm
+        return -0.5 * jnp.sum(jnp.square((to - mean) / step_size), axis=-1)
+
+    def sweep(carry, k):
+        x, lp, g = carry
+        k_prop, k_acc = jax.random.split(k)
+        noise = jax.random.normal(k_prop, x.shape)
+        prop = x + 0.5 * jnp.square(step_size) * g + step_size * noise
+        lp_prop = log_prob(prop)
+        g_prop = grad(prop)
+        log_alpha = lp_prop - lp + log_q(x, prop, g_prop) - log_q(prop, x, g)
+        log_u = jnp.log(jax.random.uniform(k_acc, lp.shape))
+        accept = log_u < log_alpha
+        x = jnp.where(accept[:, None], prop, x)
+        lp = jnp.where(accept, lp_prop, lp)
+        g = jnp.where(accept[:, None], g_prop, g)
+        return (x, lp, g), jnp.mean(accept.astype(jnp.float32))
+
+    keys = jax.random.split(key, num_steps)
+    (x, _, _), accepts = jax.lax.scan(sweep, (x, log_prob(x), grad(x)), keys)
+    return x, jnp.mean(accepts)
+
+
+MOVES = {"rwm": random_walk_metropolis, "mala": mala}
+TARGET_ACCEPT = {"rwm": RWM_TARGET_ACCEPT, "mala": MALA_TARGET_ACCEPT}
+
+
+def adapt_step_size(step_size, accept, target_accept, rate: float = 0.5,
+                    lo: float = 1e-4, hi: float = 1e3):
+    """Robbins–Monro-style log-scale update toward the target acceptance:
+    ε ← ε·exp(rate·(accept − target)), clipped to [lo, hi]."""
+    return jnp.clip(step_size * jnp.exp(rate * (accept - target_accept)), lo, hi)

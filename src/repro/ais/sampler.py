@@ -1,0 +1,351 @@
+"""Adaptive SMC sampler — the paper's AIS workload (DESIGN.md §10).
+
+The canonical adaptive-importance-sampling consumer of a resampler (Syed
+et al., *Optimised Annealed SMC*): N particles anneal from a normalised
+base π0 to an unnormalised target γ along the geometric path, with the
+classic reweight → (ESS-triggered) resample → MCMC-move step per
+temperature, all inside ONE jitted ``lax.scan``.  The resampling stage is
+ANY ``ResamplerSpec`` on any backend (DESIGN.md §9) — which is the point:
+the sampler's logZ estimate has an analytic ground truth on the
+``ais/targets.py`` families, so resampler quality (bias/variance of logZ,
+cf. Murray, Lee & Jacob) is finally SCORED, not eyeballed
+(benchmarks/ais_bench.py, EXPERIMENTS.md §AIS).
+
+``run_smc_sampler_bank`` lifts the whole sampler onto the §4 scenario
+axis: S independent targets (a theta family of posteriors) run under one
+jitted scan with a single batched resampler launch per temperature —
+row ``b`` is bit-identical to the single-scenario call with split key
+``b`` (the DESIGN.md §4 contract, gated by tests/test_ais.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.ais.moves import MOVES, TARGET_ACCEPT, adapt_step_size
+from repro.ais.schedule import geometric_schedule, next_temperature
+from repro.ais.targets import Target
+from repro.core.metrics import effective_sample_size
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import ResamplerSpec, coerce_spec
+
+SCHEDULES = ("geometric", "adaptive")
+
+
+def _check_choice(value, choices, field: str):
+    if value not in choices:
+        hint = difflib.get_close_matches(str(value), choices, n=1)
+        did_you_mean = f" — did you mean {hint[0]!r}?" if hint else ""
+        raise ValueError(
+            f"SMCSamplerConfig.{field} must be one of {sorted(choices)}; "
+            f"got {value!r}{did_you_mean}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SMCSamplerConfig:
+    """Annealed-SMC configuration.  ``resampler`` accepts a registry name or
+    a typed ``ResamplerSpec`` (DESIGN.md §9); with a spec, ``num_iters``
+    below is not consulted.  ``schedule='adaptive'`` selects the next
+    temperature by CESS bisection at each step (``ais/schedule.py``), with
+    ``num_temps`` as the cap — once β saturates at 1 the remaining steps
+    are pure rejuvenation at the target (Δβ = 0 contributes nothing to
+    logZ)."""
+
+    num_particles: int
+    num_temps: int = 24
+    schedule: str = "geometric"  # 'geometric' | 'adaptive'
+    beta_min: float = 1e-2  # geometric ladder start
+    target_cess: float = 0.9  # adaptive: conditional-ESS fraction per step
+    resampler: Union[str, ResamplerSpec] = "megopolis"
+    num_iters: Union[int, str] = 16  # B (paper eq. 3; fixed application prior)
+    ess_threshold: float = 0.5  # resample when normalised ESS < threshold
+    move: str = "rwm"  # 'rwm' | 'mala'
+    num_move_steps: int = 2
+    step_size: float = 0.5  # initial ε, adapted per temperature
+    target_accept: Optional[float] = None  # None -> per-move optimal scaling
+    adapt_rate: float = 0.5
+
+    def __post_init__(self):
+        _check_choice(self.schedule, SCHEDULES, "schedule")
+        _check_choice(self.move, tuple(MOVES), "move")
+        if self.num_temps < 1:
+            raise ValueError(
+                f"SMCSamplerConfig.num_temps must be >= 1; got {self.num_temps}"
+            )
+        if self.num_particles < 1:
+            raise ValueError(
+                f"SMCSamplerConfig.num_particles must be >= 1; got {self.num_particles}"
+            )
+        if self.num_move_steps < 1:
+            raise ValueError(
+                "SMCSamplerConfig.num_move_steps must be >= 1 (the rejuvenation "
+                f"sweep is what keeps the anneal mixing); got {self.num_move_steps}"
+            )
+        if not 0.0 < self.ess_threshold <= 1.0:
+            raise ValueError(
+                "SMCSamplerConfig.ess_threshold must be in (0, 1]; "
+                f"got {self.ess_threshold}"
+            )
+        if not 0.0 < self.target_cess < 1.0:
+            raise ValueError(
+                "SMCSamplerConfig.target_cess must be in (0, 1); "
+                f"got {self.target_cess}"
+            )
+
+    def resampler_spec(self) -> ResamplerSpec:
+        if isinstance(self.resampler, ResamplerSpec):
+            return self.resampler
+        return coerce_spec(self.resampler, num_iters=self.num_iters)
+
+    def resolved_target_accept(self) -> float:
+        return (
+            TARGET_ACCEPT[self.move]
+            if self.target_accept is None
+            else self.target_accept
+        )
+
+
+def _call(fn, *args, theta=None):
+    """Invoke a target callable, appending ``theta`` only when given (the
+    pf/filter.py scenario idiom)."""
+    return fn(*args) if theta is None else fn(*args, theta)
+
+
+def _logz_increment(log_w: jnp.ndarray, n: int) -> jnp.ndarray:
+    """log( (1/N) Σ exp(log_w) ) over the particle axis — the normalising
+    constant absorbed at each resample (and at the end).  Shared by the
+    single and bank paths so the two stay bit-identical."""
+    return jax.nn.logsumexp(log_w, axis=-1) - jnp.log(jnp.float32(n))
+
+
+def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
+    """Anneal π0 → γ; returns a dict pytree:
+
+    * ``particles`` f32[N, d] — final-temperature particle system;
+    * ``log_w`` f32[N] — residual (since-last-resample) log-weights;
+    * ``log_z`` f32[] — the logZ = log ∫γ estimate;
+    * ``betas`` / ``ess`` / ``accept`` f32[T] — per-temperature schedule,
+      normalised pre-resampling ESS, and move acceptance;
+    * ``num_resamples`` i32[].
+
+    Fully jittable (wrap in ``jax.jit``; the config and target are closed
+    over as static).  ``theta`` selects a scenario of a theta-family
+    target and is what ``run_smc_sampler_bank`` maps over.
+    """
+    n = cfg.num_particles
+    resampler = cfg.resampler_spec().build()
+    move = MOVES[cfg.move]
+    target_accept = cfg.resolved_target_accept()
+    adaptive = cfg.schedule == "adaptive"
+    betas_in = (
+        jnp.zeros((cfg.num_temps,), jnp.float32)
+        if adaptive
+        else geometric_schedule(cfg.num_temps, cfg.beta_min)
+    )
+
+    def body(carry, beta_in):
+        x, log_w, log_z, beta_prev, step_size, k, n_res = carry
+        k, ks = jax.random.split(k)
+        k_res, k_move = jax.random.split(ks)
+        # 1. reweight: geometric-path tilt at the current particles
+        delta = _call(target.log_target, x, theta=theta) - _call(
+            target.log_base, x, theta=theta
+        )
+        if adaptive:
+            beta = next_temperature(log_w, delta, beta_prev, cfg.target_cess)
+        else:
+            beta = beta_in
+        log_w = log_w + (beta - beta_prev) * delta
+        ess_norm = effective_sample_size(log_w) / n
+        # 2. ESS-triggered resample (absorbs the running logZ increment)
+        def do(args):
+            x, log_w, log_z = args
+            w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
+            ancestors = resampler(k_res, w)
+            return (
+                jnp.take(x, ancestors, axis=0),
+                jnp.zeros_like(log_w),
+                log_z + _logz_increment(log_w, n),
+                jnp.int32(1),
+            )
+
+        def dont(args):
+            x, log_w, log_z = args
+            return x, log_w, log_z, jnp.int32(0)
+
+        x, log_w, log_z, did = jax.lax.cond(
+            ess_norm < cfg.ess_threshold, do, dont, (x, log_w, log_z)
+        )
+        # 3. rejuvenate against π_β, then adapt the step size
+        def log_prob(y):
+            return (1.0 - beta) * _call(target.log_base, y, theta=theta) + (
+                beta
+            ) * _call(target.log_target, y, theta=theta)
+
+        x, accept = move(k_move, x, log_prob, step_size, cfg.num_move_steps)
+        step_size = adapt_step_size(
+            step_size, accept, target_accept, cfg.adapt_rate
+        )
+        carry = (x, log_w, log_z, beta, step_size, k, n_res + did)
+        return carry, (beta, ess_norm, accept)
+
+    k0, key = jax.random.split(key)
+    x0 = _call(target.sample_base, k0, n, theta=theta)
+    carry0 = (
+        x0,
+        jnp.zeros((n,), jnp.float32),
+        jnp.float32(0.0),
+        jnp.float32(0.0),
+        jnp.float32(cfg.step_size),
+        key,
+        jnp.int32(0),
+    )
+    carry, (betas, ess_hist, accepts) = jax.lax.scan(body, carry0, betas_in)
+    x, log_w, log_z, _, _, _, n_res = carry
+    return {
+        "particles": x,
+        "log_w": log_w,
+        "log_z": log_z + _logz_increment(log_w, n),
+        "betas": betas,
+        "ess": ess_hist,
+        "accept": accepts,
+        "num_resamples": n_res,
+    }
+
+
+def run_smc_sampler_bank(
+    key,
+    target: Target,
+    cfg: SMCSamplerConfig,
+    thetas=None,
+    num_scenarios: Optional[int] = None,
+):
+    """S independent samplers under ONE jitted scan (the §4 scenario axis).
+
+    ``thetas`` is a pytree whose leaves carry a leading [S] axis of
+    per-scenario target parameters (see ``targets.gaussian_theta``); pass
+    ``num_scenarios`` instead for S i.i.d. repeats of a fixed target (the
+    Monte-Carlo axis of benchmarks/ais_bench.py).  The key is split once
+    along the scenario axis, every stage is vmapped, and resampling is a
+    SINGLE batched launch per temperature (``Resampler.batch_rows``), so
+    row ``b`` of every output equals ``run_smc_sampler(split(key, S)[b],
+    target, cfg, theta=thetas[b])`` bit-for-bit — the same contract as
+    ``run_filter_bank``.  Returns the ``run_smc_sampler`` dict with a
+    leading [S] axis on every leaf.
+    """
+    if thetas is None and num_scenarios is None:
+        raise ValueError(
+            "run_smc_sampler_bank: pass per-scenario `thetas` (leading [S] "
+            "leaves) or `num_scenarios` for i.i.d. repeats"
+        )
+    if thetas is not None:
+        num_s = jax.tree.leaves(thetas)[0].shape[0]
+        if num_scenarios is not None and num_scenarios != num_s:
+            raise ValueError(
+                f"run_smc_sampler_bank: num_scenarios={num_scenarios} disagrees "
+                f"with the thetas leading axis [{num_s}]"
+            )
+    else:
+        num_s = num_scenarios
+    n = cfg.num_particles
+    resampler = cfg.resampler_spec().build()
+    move = MOVES[cfg.move]
+    target_accept = cfg.resolved_target_accept()
+    adaptive = cfg.schedule == "adaptive"
+    betas_in = (
+        jnp.zeros((cfg.num_temps,), jnp.float32)
+        if adaptive
+        else geometric_schedule(cfg.num_temps, cfg.beta_min)
+    )
+    theta_axes = None if thetas is None else jax.tree.map(lambda _: 0, thetas)
+    keys = split_batch_keys(key, num_s)
+
+    def init_one(k, th):
+        k0, kc = jax.random.split(k)
+        return _call(target.sample_base, k0, n, theta=th), kc
+
+    x0, carry_keys = jax.vmap(init_one, in_axes=(0, theta_axes))(keys, thetas)
+
+    def body(carry, beta_in):
+        xs, log_w, log_z, beta_prev, step_size, ks, n_res = carry
+        step = jax.vmap(jax.random.split)(ks)
+        ks_next, step_keys = step[:, 0], step[:, 1]
+        rr = jax.vmap(jax.random.split)(step_keys)
+        k_res, k_move = rr[:, 0], rr[:, 1]
+        # 1. reweight (vmapped tilt; per-row adaptive β via the batched
+        #    while_loop — converged rows hold their carry, so each row's
+        #    bisection equals its unbatched run)
+        delta = jax.vmap(
+            lambda x, th: _call(target.log_target, x, theta=th)
+            - _call(target.log_base, x, theta=th),
+            in_axes=(0, theta_axes),
+        )(xs, thetas)
+        if adaptive:
+            beta = jax.vmap(next_temperature, in_axes=(0, 0, 0, None))(
+                log_w, delta, beta_prev, cfg.target_cess
+            )
+        else:
+            beta = jnp.full((num_s,), beta_in, jnp.float32)
+        log_w = log_w + (beta - beta_prev)[:, None] * delta
+        ess_norm = effective_sample_size(log_w, axis=-1) / n
+        trigger = ess_norm < cfg.ess_threshold
+        # 2. ONE batched resampler launch; per-row select keeps the single
+        #    path's lax.cond semantics (untaken rows keep their state)
+        w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
+        ancestors = resampler.batch_rows(k_res, w)
+        x_res = jnp.take_along_axis(xs, ancestors[:, :, None], axis=1)
+        xs = jnp.where(trigger[:, None, None], x_res, xs)
+        log_z = jnp.where(trigger, log_z + _logz_increment(log_w, n), log_z)
+        log_w = jnp.where(trigger[:, None], 0.0, log_w)
+        # 3. rejuvenate + adapt, per row
+        def move_one(k, x, sz, b, th):
+            def log_prob(y):
+                return (1.0 - b) * _call(target.log_base, y, theta=th) + (
+                    b
+                ) * _call(target.log_target, y, theta=th)
+
+            return move(k, x, log_prob, sz, cfg.num_move_steps)
+
+        xs, accept = jax.vmap(move_one, in_axes=(0, 0, 0, 0, theta_axes))(
+            k_move, xs, step_size, beta, thetas
+        )
+        step_size = adapt_step_size(
+            step_size, accept, target_accept, cfg.adapt_rate
+        )
+        carry = (
+            xs,
+            log_w,
+            log_z,
+            beta,
+            step_size,
+            ks_next,
+            n_res + trigger.astype(jnp.int32),
+        )
+        return carry, (beta, ess_norm, accept)
+
+    carry0 = (
+        x0,
+        jnp.zeros((num_s, n), jnp.float32),
+        jnp.zeros((num_s,), jnp.float32),
+        jnp.zeros((num_s,), jnp.float32),
+        jnp.full((num_s,), cfg.step_size, jnp.float32),
+        carry_keys,
+        jnp.zeros((num_s,), jnp.int32),
+    )
+    carry, (betas, ess_hist, accepts) = jax.lax.scan(body, carry0, betas_in)
+    xs, log_w, log_z, _, _, _, n_res = carry
+    return {
+        "particles": xs,
+        "log_w": log_w,
+        "log_z": log_z + _logz_increment(log_w, n),
+        "betas": betas.T,
+        "ess": ess_hist.T,
+        "accept": accepts.T,
+        "num_resamples": n_res,
+    }

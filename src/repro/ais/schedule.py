@@ -1,0 +1,90 @@
+"""Tempering schedules: fixed geometric + adaptive CESS bisection (DESIGN.md §10).
+
+Two ways to walk β from 0 to 1:
+
+* ``geometric_schedule`` — β log-spaced between ``beta_min`` and 1.  The
+  classic fixed ladder; cheap, but blind to where the path actually
+  deforms.
+* ``next_temperature`` — the adaptive rule of Zhou, Johansen & Aston (and
+  Syed et al.'s optimised-annealing line): pick the LARGEST Δβ whose
+  incremental weights keep the conditional ESS at a target fraction of N,
+  found by bisection inside a ``lax.while_loop`` (jittable, fixed-point
+  carry, runs under vmap for the scenario bank).
+
+The conditional ESS (``conditional_ess``) is measured against the CURRENT
+normalised weights, so it equals N at Δβ = 0 regardless of how degenerate
+the accumulated weights already are — which is what guarantees the
+bisection always finds a strictly positive step (the hypothesis property
+test in tests/test_ais.py pins exactly this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def geometric_schedule(num_temps: int, beta_min: float = 1e-2) -> jnp.ndarray:
+    """β_t = beta_min^(1 − t/T) for t = 1..T: log-spaced, ends exactly at 1."""
+    if num_temps < 1:
+        raise ValueError(f"geometric_schedule: num_temps must be >= 1; got {num_temps}")
+    if not 0.0 < beta_min < 1.0:
+        raise ValueError(f"geometric_schedule: beta_min must be in (0, 1); got {beta_min}")
+    t = jnp.arange(1, num_temps + 1, dtype=jnp.float32) / num_temps
+    betas = beta_min ** (1.0 - t)
+    return betas.at[-1].set(1.0)  # exact endpoint, no float pow residue
+
+
+def conditional_ess(log_w: jnp.ndarray, log_u: jnp.ndarray) -> jnp.ndarray:
+    """CESS = N·(Σ W·u)² / Σ W·u²  with W the normalised current weights.
+
+    ``log_w`` are the accumulated log-weights, ``log_u`` the candidate
+    incremental log-weights.  Equals N when u is constant (Δβ = 0).
+    """
+    n = log_w.shape[-1]
+    log_norm_w = log_w - jax.nn.logsumexp(log_w, axis=-1, keepdims=True)
+    a = jax.nn.logsumexp(log_norm_w + log_u, axis=-1)  # log Σ W u
+    b = jax.nn.logsumexp(log_norm_w + 2.0 * log_u, axis=-1)  # log Σ W u²
+    return n * jnp.exp(2.0 * a - b)
+
+
+def next_temperature(
+    log_w: jnp.ndarray,
+    delta: jnp.ndarray,
+    beta_prev: jnp.ndarray,
+    target_cess: float,
+    *,
+    tol: float = 1e-6,
+    max_iters: int = 60,
+) -> jnp.ndarray:
+    """Largest β ∈ (beta_prev, 1] keeping CESS/N at ``target_cess``.
+
+    ``delta[i] = log γ(x_i) − log π0(x_i)`` is the geometric-path tilt, so
+    the incremental log-weight of a step to β is (β − beta_prev)·delta.
+    CESS/N is 1 at β = beta_prev and (generically) decreasing in β, so the
+    bisection bracket [beta_prev, 1] always contains the crossing; if even
+    the full jump to 1 keeps CESS above target, returns exactly 1.0.  The
+    returned β is the lower bracket end — realised CESS/N ≥ target up to
+    the bisection ``tol``.
+    """
+    n = log_w.shape[-1]
+    beta_prev = jnp.asarray(beta_prev, jnp.float32)
+
+    def cess_frac(beta):
+        return conditional_ess(log_w, (beta - beta_prev) * delta) / n
+
+    def cond(state):
+        lo, hi, it = state
+        return (it < max_iters) & (hi - lo > tol)
+
+    def body(state):
+        lo, hi, it = state
+        mid = 0.5 * (lo + hi)
+        ok = cess_frac(mid) >= target_cess
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid), it + 1
+
+    lo, _, _ = jax.lax.while_loop(
+        cond, body, (beta_prev, jnp.float32(1.0), jnp.int32(0))
+    )
+    full_ok = cess_frac(jnp.float32(1.0)) >= target_cess
+    return jnp.where(full_ok, jnp.float32(1.0), lo)

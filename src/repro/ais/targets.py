@@ -1,0 +1,204 @@
+"""Jittable annealing targets with analytic logZ ground truth (DESIGN.md §10).
+
+An adaptive-SMC sampler anneals from a NORMALISED base density π0 to an
+UNNORMALISED target γ along the geometric path
+
+    log π_β(x) = (1 − β) · log π0(x) + β · log γ(x),      β: 0 → 1,
+
+and its output logZ estimates log ∫ γ(x) dx.  Each family here carries that
+integral in closed form where one exists (``Target.log_z``), which is what
+lets resampler quality be SCORED against ground truth instead of eyeballed
+— the first workload in the repo with an analytic answer (EXPERIMENTS.md
+§AIS; cf. Murray, Lee & Jacob on logZ bias/variance as the resampler
+quality metric).
+
+All callables are jittable and vectorised over the particle axis:
+``log_base(x[N, d]) -> f32[N]``, ``log_target(x[N, d]) -> f32[N]``,
+``sample_base(key, n) -> f32[n, d]``.  Scenario families (the §4 batched
+engine's theta axis) take a trailing ``theta`` pytree, mirroring
+``repro.pf.models.ungm_family``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One annealing problem: normalised base π0, unnormalised target γ.
+
+    ``log_z`` is the analytic log ∫ γ when known (None otherwise — e.g. the
+    logistic-regression posterior); ``log_z_fn(theta)`` is the per-scenario
+    form for theta families.
+    """
+
+    dim: int
+    log_base: Callable  # (x[N, d][, theta]) -> f32[N]   normalised log π0
+    sample_base: Callable  # (key, n[, theta]) -> f32[n, d]
+    log_target: Callable  # (x[N, d][, theta]) -> f32[N]  unnormalised log γ
+    log_z: Optional[float] = None
+    log_z_fn: Optional[Callable] = None  # (theta) -> f32  for theta families
+    name: str = "target"
+
+
+def _normal_base(dim: int, scale: float):
+    """Normalised N(0, scale²·I_dim) base: (log_base, sample_base)."""
+    log_norm = -0.5 * dim * np.log(2.0 * np.pi * scale**2)
+
+    def log_base(x):
+        return log_norm - 0.5 * jnp.sum(jnp.square(x / scale), axis=-1)
+
+    def sample_base(key, n):
+        return scale * jax.random.normal(key, (n, dim))
+
+    return log_base, sample_base
+
+
+def isotropic_gaussian(dim: int = 2, mean: float = 1.0, sigma: float = 1.0,
+                       base_scale: float = 3.0) -> Target:
+    """γ(x) = exp(−‖x − μ‖² / 2σ²); logZ = (d/2)·log(2πσ²) exactly."""
+    mu = jnp.full((dim,), mean, jnp.float32)
+    log_base, sample_base = _normal_base(dim, base_scale)
+
+    def log_target(x):
+        return -0.5 * jnp.sum(jnp.square((x - mu) / sigma), axis=-1)
+
+    return Target(
+        dim=dim, log_base=log_base, sample_base=sample_base,
+        log_target=log_target,
+        log_z=float(0.5 * dim * np.log(2.0 * np.pi * sigma**2)),
+        name="isotropic_gaussian",
+    )
+
+
+def correlated_gaussian(dim: int = 4, rho: float = 0.7,
+                        base_scale: float = 3.0) -> Target:
+    """γ(x) = exp(−½ xᵀ Σ⁻¹ x), Σ_ij = ρ^|i−j|; logZ = ½·log det(2πΣ)."""
+    idx = np.arange(dim)
+    cov = rho ** np.abs(idx[:, None] - idx[None, :])
+    prec = jnp.asarray(np.linalg.inv(cov), jnp.float32)
+    sign, logdet = np.linalg.slogdet(2.0 * np.pi * cov)
+    assert sign > 0
+    log_base, sample_base = _normal_base(dim, base_scale)
+
+    def log_target(x):
+        return -0.5 * jnp.einsum("ni,ij,nj->n", x, prec, x)
+
+    return Target(
+        dim=dim, log_base=log_base, sample_base=sample_base,
+        log_target=log_target, log_z=float(0.5 * logdet),
+        name="correlated_gaussian",
+    )
+
+
+def gaussian_mixture(means=((-2.0, -2.0), (2.0, 2.0)), sigma: float = 1.0,
+                     mass: float = 2.5, base_scale: float = 4.0) -> Target:
+    """γ(x) = mass · Σ_k (1/K)·N(x; μ_k, σ²I): components normalised and
+    equally weighted, so logZ = log(mass) exactly regardless of geometry."""
+    mus = jnp.asarray(means, jnp.float32)  # [K, d]
+    k_comp, dim = mus.shape
+    log_norm = -0.5 * dim * np.log(2.0 * np.pi * sigma**2)
+    log_base, sample_base = _normal_base(dim, base_scale)
+
+    def log_target(x):
+        # [N, K] component log-densities -> logsumexp over components
+        d2 = jnp.sum(jnp.square(x[:, None, :] - mus[None, :, :]), axis=-1)
+        comp = log_norm - 0.5 * d2 / sigma**2
+        return jax.nn.logsumexp(comp, axis=-1) + jnp.log(mass / k_comp)
+
+    return Target(
+        dim=dim, log_base=log_base, sample_base=sample_base,
+        log_target=log_target, log_z=float(np.log(mass)),
+        name="gaussian_mixture",
+    )
+
+
+def banana(bend: float = 0.1, sigma1: float = 2.0,
+           base_scale: float = 4.0) -> Target:
+    """The 2-d banana: a unit-Jacobian shear of a product Gaussian.
+
+    γ(x) = exp(−x₁²/2σ₁² − ½·(x₂ + b·x₁² − b·σ₁²)²).  The shear
+    x₂ ↦ x₂ + b·x₁² − b·σ₁² preserves volume, so logZ = log(2π·σ₁)
+    exactly even though the density is strongly non-Gaussian.
+    """
+    log_base, sample_base = _normal_base(2, base_scale)
+
+    def log_target(x):
+        x1, x2 = x[:, 0], x[:, 1]
+        y2 = x2 + bend * jnp.square(x1) - bend * sigma1**2
+        return -0.5 * jnp.square(x1 / sigma1) - 0.5 * jnp.square(y2)
+
+    return Target(
+        dim=2, log_base=log_base, sample_base=sample_base,
+        log_target=log_target, log_z=float(np.log(2.0 * np.pi * sigma1)),
+        name="banana",
+    )
+
+
+def logistic_regression(key=None, num_data: int = 64, dim: int = 4,
+                        base_scale: float = 2.0) -> Target:
+    """Bayesian logistic regression on synthetic data: γ(θ) = N(θ; 0, I) ·
+    Π_i σ(y_i·x_iᵀθ).  No analytic logZ (``log_z=None``) — the realistic
+    end of the target spectrum, scored on wall-time only."""
+    key = jax.random.PRNGKey(7) if key is None else key
+    kx, kw, ky = jax.random.split(key, 3)
+    x_data = jax.random.normal(kx, (num_data, dim))
+    w_true = jax.random.normal(kw, (dim,))
+    logits = x_data @ w_true
+    y = jnp.where(jax.random.uniform(ky, (num_data,)) < jax.nn.sigmoid(logits),
+                  1.0, -1.0)
+    log_base, sample_base = _normal_base(dim, base_scale)
+
+    def log_target(theta):
+        # prior N(0, I) + Bernoulli likelihood, both unnormalised-friendly
+        prior = -0.5 * dim * jnp.log(2.0 * jnp.pi) - 0.5 * jnp.sum(
+            jnp.square(theta), axis=-1)
+        margins = theta @ x_data.T * y[None, :]  # [N, num_data]
+        loglik = jnp.sum(jax.nn.log_sigmoid(margins), axis=-1)
+        return prior + loglik
+
+    return Target(
+        dim=dim, log_base=log_base, sample_base=sample_base,
+        log_target=log_target, log_z=None, name="logistic_regression",
+    )
+
+
+# ------------------------------------------------------------ theta families
+
+def gaussian_family(dim: int = 2, base_scale: float = 3.0) -> Target:
+    """A theta-family of isotropic Gaussians for the §4 scenario axis.
+
+    ``theta = {'mean': f32[d], 'sigma': f32[]}`` selects the scenario;
+    stack leaves with a leading [S] axis for ``run_smc_sampler_bank``
+    (see ``gaussian_theta``).  logZ per scenario via ``log_z_fn(theta)``.
+    """
+    log_base, sample_base = _normal_base(dim, base_scale)
+
+    def log_target(x, theta):
+        return -0.5 * jnp.sum(
+            jnp.square((x - theta["mean"]) / theta["sigma"]), axis=-1)
+
+    def log_z_fn(theta):
+        return 0.5 * dim * jnp.log(2.0 * jnp.pi * jnp.square(theta["sigma"]))
+
+    return Target(
+        dim=dim,
+        log_base=lambda x, theta: log_base(x),
+        sample_base=lambda key, n, theta: sample_base(key, n),
+        log_target=log_target, log_z_fn=log_z_fn,
+        name="gaussian_family",
+    )
+
+
+def gaussian_theta(mean, sigma: float = 1.0, dim: int = 2):
+    """One scenario of ``gaussian_family`` (stack leaves for a bank)."""
+    return {
+        "mean": jnp.full((dim,), mean, jnp.float32),
+        "sigma": jnp.asarray(sigma, jnp.float32),
+    }

@@ -20,6 +20,7 @@ from repro.core.resamplers import (  # noqa: F401
     get_resampler,
     get_resampler_batch,
     list_resamplers,
+    spec_for_backend,
     spec_from_name,
     megopolis,
     megopolis_batch,

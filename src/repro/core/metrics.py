@@ -10,6 +10,21 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def effective_sample_size(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """ESS = (Σw)² / Σw² from log-weights, shift-by-max stabilised.
+
+    THE single-host ESS helper (the resampling trigger of `smc/decode.py`,
+    `pf/filter.py` diagnostics, and the `ais/` sampler).  Weights need not
+    be normalised — ESS depends only on ratios, the same property the
+    Metropolis-family resamplers rely on.  The multi-host psum form lives
+    in ``repro.core.distributed.effective_sample_size``.
+    """
+    w = jnp.exp(log_w - jnp.max(log_w, axis=axis, keepdims=True))
+    s1 = jnp.sum(w, axis=axis)
+    s2 = jnp.sum(w * w, axis=axis)
+    return jnp.square(s1) / jnp.maximum(s2, 1e-30)
+
+
 def offspring_counts(ancestors: jnp.ndarray, n: int) -> jnp.ndarray:
     """o[i] = #{j : ancestors[j] == i}."""
     return jnp.bincount(ancestors, length=n)

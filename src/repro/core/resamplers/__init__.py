@@ -69,5 +69,6 @@ from repro.core.spec import (  # noqa: F401,E402
     get_resampler,
     get_resampler_batch,
     list_resamplers,
+    spec_for_backend,
     spec_from_name,
 )

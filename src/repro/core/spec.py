@@ -655,6 +655,38 @@ def spec_from_name(name: str, **kwargs) -> ResamplerSpec:
     return fam.spec_cls(**dict(fam.spec_fixed), **kwargs)
 
 
+def spec_for_backend(
+    name: str, backend: str, *, num_iters: Union[int, str] = 16, max_iters: int = 64
+) -> ResamplerSpec:
+    """A kernel-legal spec for any (family, backend) cell of the matrix.
+
+    Sweep-driver convenience: fills in the tile-fixed geometry the pallas
+    kernels require (``segment=KERNEL_SEGMENT`` for Megopolis,
+    ``partition_size_bytes=KERNEL_PARTITION_BYTES`` for C1/C2) so drivers
+    iterating family × backend (benchmarks/ais_bench.py, tests/test_ais.py)
+    don't each re-encode the legality table.  ``tests/test_backend_parity.py``
+    deliberately keeps its own copy — the parity gate pins the contract
+    independently of this helper.
+    """
+    pallas = backend in PALLAS_BACKENDS
+    fam = _family(name)
+    if fam.spec_cls is MegopolisSpec:
+        return MegopolisSpec(num_iters=num_iters,
+                             segment=KERNEL_SEGMENT if pallas else DEFAULT_SEGMENT,
+                             backend=backend)
+    if fam.spec_cls in (MetropolisC1Spec, MetropolisC2Spec):
+        return fam.spec_cls(
+            num_iters=num_iters,
+            partition_size_bytes=KERNEL_PARTITION_BYTES if pallas else 128,
+            backend=backend,
+        )
+    if fam.spec_cls is RejectionSpec:
+        return RejectionSpec(max_iters=max_iters, backend=backend)
+    if fam.spec_cls is MetropolisSpec:
+        return MetropolisSpec(num_iters=num_iters, backend=backend)
+    return PrefixSumSpec(kind=name, backend=backend)
+
+
 def coerce_spec(resampler: Union[str, ResamplerSpec], /, **defaults) -> ResamplerSpec:
     """Normalise ``str | ResamplerSpec`` to a spec, applying ``defaults`` only
     where the family actually has the field.

@@ -27,6 +27,7 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.metrics import effective_sample_size
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import ResamplerSpec, coerce_spec
 
@@ -127,21 +128,33 @@ def simulate(key, model: StateSpaceModel, num_steps: int, theta=None):
     return xs, zs
 
 
-def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None):
-    """Jitted scan over time; returns estimates f32[T]."""
+def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
+               with_ess: bool = False):
+    """Jitted scan over time; returns estimates f32[T].
+
+    ``with_ess=True`` additionally returns the normalised pre-resampling ESS
+    per step (f32[T] in [0, 1]) — the standard degeneracy diagnostic,
+    computed with the shared ``repro.core.metrics.effective_sample_size``
+    helper.  Alg. 6 resamples unconditionally, so ESS here is a health
+    signal, not a trigger (the triggered form lives in smc/decode.py and
+    ais/sampler.py).
+    """
 
     def body(carry, inp):
         particles, k = carry
         t, z = inp
         k, ks = jax.random.split(k)
-        particles, est, _ = pf.step(ks, particles, z, t, theta=theta)
-        return (particles, k), est
+        particles, est, w = pf.step(ks, particles, z, t, theta=theta)
+        # floor must stay in float32 normal range: subnormals (e.g. 1e-38)
+        # flush to zero under XLA and the log would reintroduce -inf
+        ess_norm = effective_sample_size(jnp.log(jnp.maximum(w, 1e-30))) / w.shape[0]
+        return (particles, k), (est, ess_norm)
 
     k0, key = jax.random.split(key)
     particles = pf.model.init(k0, pf.num_particles)
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
-    _, ests = jax.lax.scan(body, (particles, key), (ts, observations))
-    return ests
+    _, (ests, ess_hist) = jax.lax.scan(body, (particles, key), (ts, observations))
+    return (ests, ess_hist) if with_ess else ests
 
 
 def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=None):

@@ -29,6 +29,7 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.metrics import effective_sample_size
 from repro.core.spec import ResamplerSpec, coerce_spec
 from repro.models import ModelConfig, decode_step
 
@@ -54,10 +55,9 @@ class SMCDecodeConfig:
         return coerce_spec(self.resampler, num_iters=self.num_iters, segment=self.segment)
 
 
-def ess(log_w: jnp.ndarray) -> jnp.ndarray:
-    """Effective sample size from log-weights (numerically shifted)."""
-    w = jnp.exp(log_w - jnp.max(log_w))
-    return jnp.square(jnp.sum(w)) / jnp.maximum(jnp.sum(w * w), 1e-30)
+# Kept as the module's public name; the implementation is the shared
+# repro.core.metrics helper (used identically by pf/filter.py and ais/).
+ess = effective_sample_size
 
 
 def _default_twist(logits: jnp.ndarray, token: jnp.ndarray, cfg: SMCDecodeConfig):

@@ -1,0 +1,295 @@
+"""Adaptive SMC sampler (repro/ais, DESIGN.md §10): logZ quality gate,
+schedule properties, move kernels, and the §4 bank bit-identity contract.
+
+The headline gate: ``run_smc_sampler`` must recover the ANALYTIC log
+normalising constant of the closed-form targets for every resampler
+family on both the reference and the interpret-mode kernel backends —
+the first test in the repo that scores resampling quality against ground
+truth rather than against another resampler.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ais import (
+    SMCSamplerConfig,
+    banana,
+    conditional_ess,
+    correlated_gaussian,
+    gaussian_family,
+    gaussian_mixture,
+    gaussian_theta,
+    geometric_schedule,
+    isotropic_gaussian,
+    logistic_regression,
+    mala,
+    next_temperature,
+    random_walk_metropolis,
+    run_smc_sampler,
+    run_smc_sampler_bank,
+)
+from repro.core.metrics import effective_sample_size
+from repro.core.spec import (
+    KERNEL_SEGMENT,
+    MegopolisSpec,
+    MetropolisSpec,
+    spec_for_backend,
+)
+
+# Kernel tile contract: pallas backends need N % 1024 == 0.
+N = 1024
+
+FAMILIES = ("megopolis", "metropolis", "rejection", "systematic")
+
+
+# ----------------------------------------------------------- logZ quality gate
+
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+@pytest.mark.parametrize("family", FAMILIES)
+def test_logz_recovers_analytic_truth(family, backend):
+    """Every resampler family, on the reference AND the interpret-mode
+    kernel backend, must anneal to the analytic logZ of the Gaussian and
+    mixture targets within the rtol gate."""
+    temps = 12 if backend == "reference" else 8
+    cfg = SMCSamplerConfig(num_particles=N, num_temps=temps,
+                           resampler=spec_for_backend(family, backend))
+    for target in (isotropic_gaussian(dim=2), gaussian_mixture()):
+        out = jax.jit(lambda k, t=target: run_smc_sampler(k, t, cfg))(
+            jax.random.PRNGKey(0)
+        )
+        np.testing.assert_allclose(
+            float(out["log_z"]), target.log_z, rtol=0.1, atol=0.1,
+            err_msg=f"{family}/{backend} missed logZ on {target.name}",
+        )
+        assert float(np.asarray(out["betas"])[-1]) == 1.0
+        a = np.asarray(out["particles"])
+        assert a.shape == (N, target.dim) and np.all(np.isfinite(a))
+
+
+def test_logz_on_banana_and_correlated():
+    """The non-Gaussian closed forms (volume-preserving shear, correlated
+    precision) hold too — the analytic-logZ story is not Gaussian-only."""
+    cfg = SMCSamplerConfig(num_particles=N, num_temps=16, resampler="systematic")
+    for target in (banana(), correlated_gaussian()):
+        out = jax.jit(lambda k, t=target: run_smc_sampler(k, t, cfg))(
+            jax.random.PRNGKey(1)
+        )
+        np.testing.assert_allclose(float(out["log_z"]), target.log_z,
+                                   rtol=0.1, atol=0.15)
+
+
+def test_adaptive_schedule_and_mala_recover_logz():
+    """The adaptive (CESS-bisection) ladder and the MALA move kernel are
+    drop-in quality-equivalent on the analytic target."""
+    target = isotropic_gaussian(dim=2)
+    for kw in ({"schedule": "adaptive"}, {"move": "mala"}):
+        cfg = SMCSamplerConfig(num_particles=N, num_temps=16,
+                               resampler="systematic", **kw)
+        out = jax.jit(lambda k: run_smc_sampler(k, target, cfg))(
+            jax.random.PRNGKey(2)
+        )
+        np.testing.assert_allclose(float(out["log_z"]), target.log_z,
+                                   rtol=0.1, atol=0.1)
+        assert float(np.asarray(out["betas"])[-1]) == 1.0
+
+
+def test_logistic_regression_target_runs():
+    """The no-analytic-logZ end of the spectrum: finite estimate, finite
+    particles, schedule completes."""
+    target = logistic_regression(num_data=32, dim=3)
+    cfg = SMCSamplerConfig(num_particles=256, num_temps=10, resampler="systematic")
+    out = jax.jit(lambda k: run_smc_sampler(k, target, cfg))(jax.random.PRNGKey(3))
+    assert np.isfinite(float(out["log_z"]))
+    assert np.all(np.isfinite(np.asarray(out["particles"])))
+    assert out["particles"].shape == (256, 3)
+
+
+# ------------------------------------------------------- bank bit-identity (§4)
+
+@pytest.mark.parametrize("schedule", ("geometric", "adaptive"))
+def test_bank_rows_bit_identical_to_single(schedule):
+    """run_smc_sampler_bank row b == run_smc_sampler with split key b and
+    theta row b — every output leaf, bit-for-bit (the DESIGN.md §4
+    contract, same as run_filter_bank)."""
+    fam = gaussian_family(dim=2)
+    scenarios = [gaussian_theta(mean=0.5 * s, sigma=1.0 + 0.25 * s) for s in range(3)]
+    thetas = jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+    cfg = SMCSamplerConfig(num_particles=256, num_temps=8,
+                           resampler="megopolis", schedule=schedule)
+    key = jax.random.PRNGKey(7)
+    bank = jax.jit(lambda k: run_smc_sampler_bank(k, fam, cfg, thetas=thetas))(key)
+    keys = jax.random.split(key, 3)
+    for b in range(3):
+        th = jax.tree.map(lambda leaf: leaf[b], thetas)
+        single = jax.jit(lambda k: run_smc_sampler(k, fam, cfg, theta=th))(keys[b])
+        for name, leaf in single.items():
+            np.testing.assert_array_equal(
+                np.asarray(bank[name][b]), np.asarray(leaf),
+                err_msg=f"bank row {b} diverged from single call on {name!r}",
+            )
+
+
+def test_bank_iid_repeats_bit_identical_on_kernel_backend():
+    """The num_scenarios (Monte-Carlo repeats) path, with the resampling
+    stage on the interpret-mode kernel: still bit-identical per row."""
+    target = isotropic_gaussian(dim=2)
+    spec = MegopolisSpec(num_iters=16, segment=KERNEL_SEGMENT,
+                         backend="pallas_interpret")
+    cfg = SMCSamplerConfig(num_particles=N, num_temps=6, resampler=spec)
+    key = jax.random.PRNGKey(11)
+    bank = jax.jit(lambda k: run_smc_sampler_bank(k, target, cfg, num_scenarios=2))(key)
+    keys = jax.random.split(key, 2)
+    single = jax.jit(lambda k: run_smc_sampler(k, target, cfg))(keys[1])
+    for name, leaf in single.items():
+        np.testing.assert_array_equal(np.asarray(bank[name][1]), np.asarray(leaf))
+
+
+def test_bank_argument_validation():
+    target = isotropic_gaussian(dim=2)
+    cfg = SMCSamplerConfig(num_particles=64, num_temps=2, resampler="systematic")
+    with pytest.raises(ValueError, match="thetas.*or.*num_scenarios"):
+        run_smc_sampler_bank(jax.random.PRNGKey(0), target, cfg)
+    thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[gaussian_theta(0.0), gaussian_theta(1.0)])
+    with pytest.raises(ValueError, match="disagrees"):
+        run_smc_sampler_bank(jax.random.PRNGKey(0), gaussian_family(), cfg,
+                             thetas=thetas, num_scenarios=3)
+
+
+# ----------------------------------------------------------------- schedules
+
+def test_geometric_schedule_shape_and_endpoint():
+    betas = np.asarray(geometric_schedule(16, beta_min=1e-2))
+    assert betas.shape == (16,)
+    assert np.all(np.diff(betas) > 0)
+    assert betas[-1] == 1.0
+    assert betas[0] == pytest.approx(1e-2 ** (1 - 1 / 16))
+    with pytest.raises(ValueError, match="num_temps"):
+        geometric_schedule(0)
+    with pytest.raises(ValueError, match="beta_min"):
+        geometric_schedule(8, beta_min=1.5)
+
+
+def test_conditional_ess_is_n_at_zero_step():
+    """CESS is measured against the CURRENT weights, so a zero incremental
+    step always scores N — even when the accumulated weights are already
+    degenerate.  This is what makes the bisection step strictly positive."""
+    log_w = jnp.asarray([0.0, -50.0, -50.0, -50.0])
+    cess = float(conditional_ess(log_w, jnp.zeros(4)))
+    assert cess == pytest.approx(4.0)
+
+
+def test_sampler_config_validation():
+    with pytest.raises(ValueError, match="did you mean 'adaptive'"):
+        SMCSamplerConfig(num_particles=8, schedule="adaptve")
+    with pytest.raises(ValueError, match="did you mean 'mala'"):
+        SMCSamplerConfig(num_particles=8, move="malla")
+    with pytest.raises(ValueError, match="ess_threshold"):
+        SMCSamplerConfig(num_particles=8, ess_threshold=0.0)
+    with pytest.raises(ValueError, match="num_temps"):
+        SMCSamplerConfig(num_particles=8, num_temps=0)
+    with pytest.raises(ValueError, match="target_cess"):
+        SMCSamplerConfig(num_particles=8, target_cess=1.0)
+    with pytest.raises(ValueError, match="num_move_steps"):
+        SMCSamplerConfig(num_particles=8, num_move_steps=0)
+    # spec coercion: a typed spec rides through untouched; a name picks up
+    # num_iters only where the family has the field
+    spec = MetropolisSpec(num_iters=4)
+    assert SMCSamplerConfig(num_particles=8, resampler=spec).resampler_spec() is spec
+    assert SMCSamplerConfig(num_particles=8, resampler="megopolis",
+                            num_iters=9).resampler_spec().num_iters == 9
+    assert SMCSamplerConfig(num_particles=8,
+                            resampler="systematic").resampler_spec().name == "systematic"
+
+
+# ------------------------------------------------------------------ move kernels
+
+@pytest.mark.parametrize("move", (random_walk_metropolis, mala))
+def test_moves_preserve_gaussian_invariant_distribution(move):
+    """A long chain of sweeps against a standard normal keeps first/second
+    moments (the kernels are π-invariant MH corrections, not heuristics)."""
+    def log_prob(x):
+        return -0.5 * jnp.sum(jnp.square(x), axis=-1)
+
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (2048, 2))
+    x, accept = jax.jit(
+        lambda k, x: move(k, x, log_prob, jnp.float32(0.8), 20)
+    )(jax.random.PRNGKey(1), x0)
+    a = np.asarray(x)
+    assert 0.05 < float(accept) <= 1.0
+    assert abs(a.mean()) < 0.1
+    assert abs(a.std() - 1.0) < 0.1
+
+
+# ------------------------------------------------- ESS helper (the dedup hoist)
+
+def test_effective_sample_size_shared_helper():
+    """One ESS implementation (core/metrics.py) serves decode, the filter
+    diagnostic, and the sampler."""
+    from repro.pf.filter import ParticleFilter, run_filter, simulate
+    from repro.pf.models import ungm
+    from repro.smc import ess as decode_ess
+
+    assert decode_ess is effective_sample_size
+    assert float(effective_sample_size(jnp.zeros(10))) == pytest.approx(10.0)
+    concentrated = jnp.log(jnp.asarray([1e-8] * 9 + [1.0]))
+    assert float(effective_sample_size(concentrated)) == pytest.approx(1.0, abs=1e-3)
+    # batched axis semantics (the bank path)
+    batch = jnp.stack([jnp.zeros(8), jnp.log(jnp.asarray([1e-9] * 7 + [1.0]))])
+    got = np.asarray(effective_sample_size(batch, axis=-1))
+    np.testing.assert_allclose(got, [8.0, 1.0], atol=1e-3)
+    # the filter's opt-in ESS diagnostic rides the same helper
+    model = ungm()
+    _, obs = simulate(jax.random.PRNGKey(0), model, 5)
+    pf = ParticleFilter(model, 128, resampler="systematic")
+    ests, ess_hist = run_filter(jax.random.PRNGKey(1), pf, obs, with_ess=True)
+    assert ests.shape == (5,) and ess_hist.shape == (5,)
+    assert np.all(np.asarray(ess_hist) > 0) and np.all(np.asarray(ess_hist) <= 1.0)
+
+
+# ------------------------------------- adaptive-schedule property test (hypothesis)
+
+def _check_adaptive_ladder(seed: int, scale: float, target: float):
+    """For a random tilt/weight profile the ESS-bisection ladder is strictly
+    increasing, reaches exactly 1.0, and every intermediate step realises a
+    conditional ESS within tolerance of the target fraction."""
+    k = jax.random.PRNGKey(seed)
+    n = 256
+    delta = scale * jax.random.normal(k, (n,))
+    log_w = 0.5 * jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    beta = 0.0
+    for _ in range(500):
+        nxt = float(next_temperature(log_w, delta, beta, target))
+        assert nxt > beta, "schedule must be strictly increasing"
+        assert nxt <= 1.0
+        cess = float(conditional_ess(log_w, (nxt - beta) * delta)) / n
+        # bisection invariant: realised CESS never below target (up to tol)
+        assert cess >= target - 1e-3
+        if nxt < 1.0:
+            # and not meaningfully above it either — the step is maximal
+            assert cess <= target + 0.1
+        beta = nxt
+        if beta == 1.0:
+            break
+    assert beta == 1.0, "schedule must reach the target temperature"
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**30), scale=st.floats(0.1, 16.0),
+           target=st.sampled_from([0.75, 0.9, 0.95]))
+    @settings(max_examples=25, deadline=None)
+    def test_adaptive_temperatures_increase_and_hit_target_cess(seed, scale, target):
+        _check_adaptive_ladder(seed, scale, target)
+
+except ImportError:
+    # hypothesis absent (CI installs it): exercise the same property over a
+    # pinned profile grid instead of skipping the invariant entirely.
+    @pytest.mark.parametrize("seed,scale,target",
+                             [(0, 0.1, 0.9), (1, 4.0, 0.75), (2, 16.0, 0.95),
+                              (3, 8.0, 0.9)])
+    def test_adaptive_temperatures_increase_and_hit_target_cess(seed, scale, target):
+        _check_adaptive_ladder(seed, scale, target)
