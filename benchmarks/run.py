@@ -32,9 +32,10 @@ SUITES = [
     ("ais", "benchmarks.ais_bench", ["--quick"]),
     ("smc", "benchmarks.smc_decode_bench", ["--particles", "32", "--new-tokens", "8",
                                             "--archs", "qwen3-0.6b"]),
+    ("fused_gather", "benchmarks.fused_gather_bench", ["--quick"]),
 ]
 # Suites whose CLI has no --full flag (or whose scale is pinned above).
-_NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais")
+_NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais", "fused_gather")
 
 
 def _check_suite_names(names, flag: str):
@@ -67,6 +68,27 @@ def _ais_stats():
         "logz": [
             {k: r[k] for k in ("resampler", "backend", "target", "logz_bias",
                                "logz_std", "logz_rmse", "wall_per_run_s")}
+            for r in payload.get("rows", [])
+        ],
+    }
+
+
+def _fused_gather_stats():
+    """Fold the fused-vs-unfused suite's rows into the trajectory JSON
+    (written by benchmarks.fused_gather_bench as BENCH_fused_gather.json)."""
+    from benchmarks.common import OUT_DIR
+
+    path = os.path.join(OUT_DIR, "BENCH_fused_gather.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        "config": payload.get("config"),
+        "cells": [
+            {k: r[k] for k in ("family", "backend", "state_dim", "fused_ms",
+                               "unfused_ms", "speedup", "model_speedup",
+                               "parity", "perf_gated", "identical_program")}
             for r in payload.get("rows", [])
         ],
     }
@@ -120,6 +142,9 @@ def main(argv=None):
         ais = _ais_stats() if "ais" in suite_times else None
         if ais:
             payload["ais"] = ais
+        fused = _fused_gather_stats() if "fused_gather" in suite_times else None
+        if fused:
+            payload["fused_gather"] = fused
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"\nwrote trajectory {path}")

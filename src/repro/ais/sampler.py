@@ -163,13 +163,15 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
             beta = beta_in
         log_w = log_w + (beta - beta_prev) * delta
         ess_norm = effective_sample_size(log_w) / n
-        # 2. ESS-triggered resample (absorbs the running logZ increment)
+        # 2. ESS-triggered resample (absorbs the running logZ increment):
+        #    the FUSED resample+gather path (Resampler.apply, DESIGN.md §11)
+        #    — no ancestor round-trip between selection and state copy
         def do(args):
             x, log_w, log_z = args
             w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
-            ancestors = resampler(k_res, w)
+            x_res, _ = resampler.apply(k_res, w, x)
             return (
-                jnp.take(x, ancestors, axis=0),
+                x_res,
                 jnp.zeros_like(log_w),
                 log_z + _logz_increment(log_w, n),
                 jnp.int32(1),
@@ -295,11 +297,11 @@ def run_smc_sampler_bank(
         log_w = log_w + (beta - beta_prev)[:, None] * delta
         ess_norm = effective_sample_size(log_w, axis=-1) / n
         trigger = ess_norm < cfg.ess_threshold
-        # 2. ONE batched resampler launch; per-row select keeps the single
-        #    path's lax.cond semantics (untaken rows keep their state)
+        # 2. ONE batched FUSED resample+gather launch (apply_rows, DESIGN.md
+        #    §11); per-row select keeps the single path's lax.cond semantics
+        #    (untaken rows keep their state)
         w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
-        ancestors = resampler.batch_rows(k_res, w)
-        x_res = jnp.take_along_axis(xs, ancestors[:, :, None], axis=1)
+        x_res, _ = resampler.apply_rows(k_res, w, xs)
         xs = jnp.where(trigger[:, None, None], x_res, xs)
         log_z = jnp.where(trigger, log_z + _logz_increment(log_w, n), log_z)
         log_w = jnp.where(trigger[:, None], 0.0, log_w)

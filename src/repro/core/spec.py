@@ -116,6 +116,11 @@ def _check_backend(value, cls: str):
         raise ValueError(f"{cls}.backend must be one of {BACKENDS}; got {value!r}")
 
 
+def _take_rows(particles: jnp.ndarray, ancestors: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise ancestor gather: ``out[b] = particles[b][ancestors[b]]``."""
+    return jax.vmap(lambda p, a: jnp.take(p, a, axis=0))(particles, ancestors)
+
+
 class Resampler:
     """A built resampler: the ONE callable surface every family shares.
 
@@ -125,19 +130,68 @@ class Resampler:
         r(key, weights)            # int32[N]     over f32[N]
         r.batch(key, weights)      # int32[B, N]  over f32[B, N]
         r.batch_rows(keys, weights)  # explicit per-row keys (filter banks)
+        r.apply(key, weights, particles)        # -> (particles', ancestors)
+        r.apply_batch(key, weights, particles)  # bank form of apply
+        r.apply_rows(keys, weights, particles)  # explicit per-row keys
         r.name, r.spec             # registry name / originating spec
 
     ``batch`` follows the DESIGN.md §4 contract: the key is split once
     along the batch axis and row ``b`` is bit-identical to the single call
     with ``split(key, B)[b]`` (the pallas batched Megopolis kernel instead
     shares the offset table bank-wide — its own documented contract).
+
+    ``apply`` is the fused resample+gather data path (DESIGN.md §11):
+    select ancestors AND copy each ancestor's particle state in one step,
+    ``particles`` being ``[N]``/``[N, ...]`` (``[B, N, ...]`` for the bank
+    forms).  On the reference/xla backends it IS the index + ``jnp.take``
+    composition (the bit-identical oracle); on the pallas backends the
+    state copy happens inside the kernel — the ancestor vector never
+    round-trips through HBM between selection and gather.  Every form
+    returns ``(particles', ancestors)`` with ancestors bit-identical to the
+    corresponding index-only call.
     """
 
-    def __init__(self, spec: "ResamplerSpec", single: Callable, batch: Callable):
+    def __init__(
+        self,
+        spec: "ResamplerSpec",
+        single: Callable,
+        batch: Callable,
+        *,
+        apply: Callable = None,
+        apply_batch: Callable = None,
+        apply_rows: Callable = None,
+    ):
         self.spec = spec
         self.name = spec.name
         self._single = single
         self._batch = batch
+
+        # Derived (reference/xla) apply forms compose the SAME single/batch
+        # callables the index path runs — deliberately NOT re-jitted as one
+        # program: a separately compiled composition may constant-fold the
+        # prefix-sum family's f32 cumsum differently and shift a searchsorted
+        # boundary, breaking the bit-identical-oracle contract.  Callers
+        # wanting one fused XLA program jit the call site (consumers do:
+        # the filter/sampler scans are jitted wholesale).
+        if apply is None:
+            def apply(key, w, p):
+                ancestors = single(key, w)
+                return jnp.take(p, ancestors, axis=0), ancestors
+
+        if apply_batch is None:
+            def apply_batch(key, w, p):
+                ancestors = batch(key, w)
+                return _take_rows(p, ancestors), ancestors
+
+        if apply_rows is None:
+            inner = apply
+
+            def apply_rows(keys, w, p):
+                return jax.vmap(inner)(keys, w, p)
+
+        self._apply = apply
+        self._apply_batch = apply_batch
+        self._apply_rows = apply_rows
         self.__name__ = f"{self.name}_resampler"
         self.__qualname__ = self.__name__
 
@@ -168,6 +222,58 @@ class Resampler:
                 f"{self.name}.batch_rows: expected weights[B, N]; got shape {weights.shape}"
             )
         return jax.vmap(self._single)(keys, weights)
+
+    def _check_state(self, weights, particles, who: str, lead: int = 1):
+        if particles.ndim < lead or particles.shape[:lead] != weights.shape[:lead]:
+            raise ValueError(
+                f"{self.name}.{who}: particles must lead with the "
+                f"{'[B, N]' if lead == 2 else '[N]'} axes of weights; got "
+                f"particles {particles.shape} for weights {weights.shape}"
+            )
+
+    def apply(self, key: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
+        """Fused resample+gather: ``(particles', ancestors)`` over one
+        population (DESIGN.md §11).  ``particles'[i] = particles[a[i]]``
+        with ``a`` bit-identical to ``self(key, weights)``."""
+        if weights.ndim != 1:
+            raise ValueError(
+                f"{self.name}.apply: expected weights[N]; got shape {weights.shape} "
+                "(use .apply_batch for weights[B, N])"
+            )
+        self._check_state(weights, particles, "apply")
+        return self._apply(key, weights, particles)
+
+    def apply_batch(self, key: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
+        """Bank form of ``apply`` under the §4 split-key contract."""
+        if weights.ndim != 2:
+            raise ValueError(
+                f"{self.name}.apply_batch: expected weights[B, N]; got shape "
+                f"{weights.shape}"
+            )
+        self._check_state(weights, particles, "apply_batch", lead=2)
+        return self._apply_batch(key, weights, particles)
+
+    def apply_rows(self, keys: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
+        """``apply`` over explicit per-row keys (the filter-bank path): row
+        ``b`` is bit-identical to ``self.apply(keys[b], weights[b],
+        particles[b])``; on kernel backends with a leading-batch-grid fused
+        kernel (Megopolis, Metropolis, rejection) this is ONE launch."""
+        if weights.ndim != 2:
+            raise ValueError(
+                f"{self.name}.apply_rows: expected weights[B, N]; got shape "
+                f"{weights.shape}"
+            )
+        if keys.shape[0] != weights.shape[0]:
+            # The fused bank kernels size their grid from weights; a short
+            # key array would read out-of-bounds seeds instead of failing
+            # like the vmap-derived batch_rows does — check here, once,
+            # for every backend.
+            raise ValueError(
+                f"{self.name}.apply_rows: expected one key per row; got "
+                f"{keys.shape[0]} keys for weights[{weights.shape[0]}, ...]"
+            )
+        self._check_state(weights, particles, "apply_rows", lead=2)
+        return self._apply_rows(keys, weights, particles)
 
     def __repr__(self):
         return f"Resampler({self.spec!r})"
@@ -232,6 +338,25 @@ def _per_row_auto_batch(spec, single):
     return batch
 
 
+def _per_row_auto_apply(spec, apply_single, *, explicit_keys: bool):
+    """The ``apply`` analogue of ``_per_row_auto_batch``: eq. (3) resolves
+    per row, so 'auto' bank applies launch row-by-row over concrete
+    weights; inside jit pass an int ``num_iters``."""
+
+    def fn(key_or_keys, w, p):
+        if _is_traced(w):
+            raise TypeError(
+                f"{spec.name}: num_iters='auto' under a pallas backend needs "
+                "concrete weights (eq. 3 resolves per row); pass an int "
+                "num_iters to use the bank apply forms inside jit."
+            )
+        keys = key_or_keys if explicit_keys else split_batch_keys(key_or_keys, w.shape[0])
+        outs = [apply_single(keys[b], w[b], p[b]) for b in range(w.shape[0])]
+        return jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs])
+
+    return fn
+
+
 def _maybe_jit(single, batch, backend: str):
     """backend='xla' is the reference algorithm jit-wrapped (bit-identical)."""
     if backend == "xla":
@@ -279,7 +404,13 @@ class MegopolisSpec(ResamplerSpec):
     def build(self) -> Resampler:
         if self.backend in ("pallas", "pallas_interpret"):
             # Lazy import: kernels are only a dependency of pallas specs.
-            from repro.kernels.megopolis.ops import megopolis_tpu, megopolis_tpu_batch
+            from repro.kernels.megopolis.ops import (
+                megopolis_tpu,
+                megopolis_tpu_apply,
+                megopolis_tpu_apply_batch,
+                megopolis_tpu_apply_rows,
+                megopolis_tpu_batch,
+            )
 
             interpret = self.backend == "pallas_interpret"
 
@@ -291,7 +422,28 @@ class MegopolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
                 return megopolis_tpu_batch(key, w, b, interpret=interpret)
 
-            return Resampler(self, single, batch)
+            def apply(key, w, p):
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return megopolis_tpu_apply(key, w, p, b, interpret=interpret)
+
+            def apply_batch(key, w, p):
+                # Same bank-level resolve + shared-offset contract as .batch,
+                # so apply_batch ancestors == .batch ancestors under 'auto'.
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return megopolis_tpu_apply_batch(key, w, p, b, interpret=interpret)
+
+            if self.num_iters == AUTO:
+                # batch_rows' per-row contract needs eq. (3) PER ROW.
+                apply_rows = _per_row_auto_apply(self, apply, explicit_keys=True)
+            else:
+
+                def apply_rows(keys, w, p):
+                    return megopolis_tpu_apply_rows(
+                        keys, w, p, self.num_iters, interpret=interpret
+                    )
+
+            return Resampler(self, single, batch, apply=apply,
+                             apply_batch=apply_batch, apply_rows=apply_rows)
 
         seg = self.segment
 
@@ -346,7 +498,13 @@ class MetropolisSpec(ResamplerSpec):
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
-            from repro.kernels.metropolis.ops import metropolis_tpu, metropolis_tpu_batch
+            from repro.kernels.metropolis.ops import (
+                metropolis_tpu,
+                metropolis_tpu_apply,
+                metropolis_tpu_apply_batch,
+                metropolis_tpu_apply_rows,
+                metropolis_tpu_batch,
+            )
 
             interpret = self.backend == "pallas_interpret"
 
@@ -354,8 +512,14 @@ class MetropolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
                 return metropolis_tpu(key, w, b, interpret=interpret)
 
+            def apply(key, w, p):
+                b = _resolve_iters_static(self.num_iters, w, self.name)
+                return metropolis_tpu_apply(key, w, p, b, interpret=interpret)
+
             if self.num_iters == AUTO:
                 batch = _per_row_auto_batch(self, single)
+                apply_batch = _per_row_auto_apply(self, apply, explicit_keys=False)
+                apply_rows = _per_row_auto_apply(self, apply, explicit_keys=True)
             else:
 
                 def batch(key, w):
@@ -366,7 +530,18 @@ class MetropolisSpec(ResamplerSpec):
                         key, w, self.num_iters, interpret=interpret
                     )
 
-            return Resampler(self, single, batch)
+                def apply_batch(key, w, p):
+                    return metropolis_tpu_apply_batch(
+                        key, w, p, self.num_iters, interpret=interpret
+                    )
+
+                def apply_rows(keys, w, p):
+                    return metropolis_tpu_apply_rows(
+                        keys, w, p, self.num_iters, interpret=interpret
+                    )
+
+            return Resampler(self, single, batch, apply=apply,
+                             apply_batch=apply_batch, apply_rows=apply_rows)
         return _metropolis_family_build(self, metropolis, {})
 
 
@@ -382,12 +557,14 @@ def _check_kernel_partition(spec, cls: str):
         )
 
 
-def _c1c2_pallas_build(spec, tpu_fn) -> Resampler:
+def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn) -> Resampler:
     """Shared pallas build for the segment-local variants: single kernel
     call, batch via lax.map over split keys (row b == single with key b —
     the same §4 contract the reference lane derives by vmap).  'auto'
     batches resolve eq. (3) per row (see ``_per_row_auto_batch``: lax.map
-    would hand ``single`` traced rows and a bank-level B would be wrong)."""
+    would hand ``single`` traced rows and a bank-level B would be wrong).
+    The fused ``apply`` forms compose the same way: C1/C2 have no
+    leading-batch-grid kernel, so the bank forms map the fused single."""
 
     interpret = spec.backend == "pallas_interpret"
 
@@ -395,15 +572,29 @@ def _c1c2_pallas_build(spec, tpu_fn) -> Resampler:
         b = _resolve_iters_static(spec.num_iters, w, spec.name)
         return tpu_fn(key, w, b, interpret=interpret)
 
+    def apply(key, w, p):
+        b = _resolve_iters_static(spec.num_iters, w, spec.name)
+        return tpu_apply_fn(key, w, p, b, interpret=interpret)
+
     if spec.num_iters == AUTO:
         batch = _per_row_auto_batch(spec, single)
+        apply_batch = _per_row_auto_apply(spec, apply, explicit_keys=False)
+        apply_rows = _per_row_auto_apply(spec, apply, explicit_keys=True)
     else:
 
         def batch(key, w):
             keys = split_batch_keys(key, w.shape[0])
             return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
 
-    return Resampler(spec, single, batch)
+        def apply_batch(key, w, p):
+            keys = split_batch_keys(key, w.shape[0])
+            return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
+
+        def apply_rows(keys, w, p):
+            return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
+
+    return Resampler(spec, single, batch, apply=apply,
+                     apply_batch=apply_batch, apply_rows=apply_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,9 +622,12 @@ class MetropolisC1Spec(ResamplerSpec):
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
-            from repro.kernels.metropolis.ops import metropolis_c1_tpu
+            from repro.kernels.metropolis.ops import (
+                metropolis_c1_tpu,
+                metropolis_c1_tpu_apply,
+            )
 
-            return _c1c2_pallas_build(self, metropolis_c1_tpu)
+            return _c1c2_pallas_build(self, metropolis_c1_tpu, metropolis_c1_tpu_apply)
         return _metropolis_family_build(
             self,
             metropolis_c1,
@@ -465,9 +659,12 @@ class MetropolisC2Spec(ResamplerSpec):
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
-            from repro.kernels.metropolis.ops import metropolis_c2_tpu
+            from repro.kernels.metropolis.ops import (
+                metropolis_c2_tpu,
+                metropolis_c2_tpu_apply,
+            )
 
-            return _c1c2_pallas_build(self, metropolis_c2_tpu)
+            return _c1c2_pallas_build(self, metropolis_c2_tpu, metropolis_c2_tpu_apply)
         return _metropolis_family_build(
             self,
             metropolis_c2,
@@ -490,7 +687,13 @@ class RejectionSpec(ResamplerSpec):
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
-            from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch
+            from repro.kernels.rejection.ops import (
+                rejection_tpu,
+                rejection_tpu_apply,
+                rejection_tpu_apply_batch,
+                rejection_tpu_apply_rows,
+                rejection_tpu_batch,
+            )
 
             interpret = self.backend == "pallas_interpret"
 
@@ -502,7 +705,23 @@ class RejectionSpec(ResamplerSpec):
                     key, w, max_iters=self.max_iters, interpret=interpret
                 )
 
-            return Resampler(self, single, batch)
+            def apply(key, w, p):
+                return rejection_tpu_apply(
+                    key, w, p, max_iters=self.max_iters, interpret=interpret
+                )
+
+            def apply_batch(key, w, p):
+                return rejection_tpu_apply_batch(
+                    key, w, p, max_iters=self.max_iters, interpret=interpret
+                )
+
+            def apply_rows(keys, w, p):
+                return rejection_tpu_apply_rows(
+                    keys, w, p, max_iters=self.max_iters, interpret=interpret
+                )
+
+            return Resampler(self, single, batch, apply=apply,
+                             apply_batch=apply_batch, apply_rows=apply_rows)
 
         def single(key, w):
             return rejection(key, w, max_iters=self.max_iters)
@@ -546,7 +765,10 @@ class PrefixSumSpec(ResamplerSpec):
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
-            from repro.kernels.prefix_sum.ops import prefix_resample_tpu
+            from repro.kernels.prefix_sum.ops import (
+                prefix_resample_tpu,
+                prefix_resample_tpu_apply,
+            )
 
             interpret = self.backend == "pallas_interpret"
             kind = self.kind
@@ -560,7 +782,18 @@ class PrefixSumSpec(ResamplerSpec):
                 keys = split_batch_keys(key, w.shape[0])
                 return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
 
-            return Resampler(self, single, batch)
+            def apply(key, w, p):
+                return prefix_resample_tpu_apply(key, w, p, kind, interpret=interpret)
+
+            def apply_batch(key, w, p):
+                keys = split_batch_keys(key, w.shape[0])
+                return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
+
+            def apply_rows(keys, w, p):
+                return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
+
+            return Resampler(self, single, batch, apply=apply,
+                             apply_batch=apply_batch, apply_rows=apply_rows)
 
         fn = _PREFIX_SUM_KINDS[self.kind]
 

@@ -12,16 +12,34 @@ Each package ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
 surface ``tests/test_backend_parity.py`` pins).
 """
 
-from repro.kernels.megopolis.ops import megopolis_tpu, megopolis_tpu_batch  # noqa: F401
+from repro.kernels.megopolis.ops import (  # noqa: F401
+    megopolis_tpu,
+    megopolis_tpu_apply,
+    megopolis_tpu_apply_batch,
+    megopolis_tpu_apply_rows,
+    megopolis_tpu_batch,
+)
 from repro.kernels.metropolis.ops import (  # noqa: F401
     metropolis_c1_tpu,
+    metropolis_c1_tpu_apply,
     metropolis_c2_tpu,
+    metropolis_c2_tpu_apply,
     metropolis_tpu,
+    metropolis_tpu_apply,
+    metropolis_tpu_apply_batch,
+    metropolis_tpu_apply_rows,
     metropolis_tpu_batch,
 )
 from repro.kernels.prefix_sum.ops import (  # noqa: F401
     prefix_resample_tpu,
+    prefix_resample_tpu_apply,
     prefix_sum_tpu,
     searchsorted_tpu,
 )
-from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch  # noqa: F401
+from repro.kernels.rejection.ops import (  # noqa: F401
+    rejection_tpu,
+    rejection_tpu_apply,
+    rejection_tpu_apply_batch,
+    rejection_tpu_apply_rows,
+    rejection_tpu_batch,
+)

@@ -39,6 +39,128 @@ def tile_lane_ids(t) -> jnp.ndarray:
 # cites it, three ops modules enforce it.
 MAX_VMEM_PARTICLES = 1 << 20
 
+# ---------------------------------------------------------------------------
+# Fused resample+gather state layout (DESIGN.md §11)
+#
+# The fused ``apply`` kernels keep the particle STATE resident in VMEM as a
+# stack of flat (R, 128) planes — one plane per (padded) state component —
+# so the post-selection copy ``x[k]`` is an in-register gather, never an
+# HBM index round-trip.  Helpers below are shared by every family's fused
+# kernel AND its wrapper so pack/gather/unpack can never disagree.
+# ---------------------------------------------------------------------------
+
+# Plane-stack padding granularity: state planes are padded to whole sublane
+# groups so every per-tile state copy ([d_pad, 8, 128] block) is an integral
+# number of (8, 128) VMEM tiles with full-stride DMAs on hardware.  A scalar
+# state (state_dim == 1) is exempt — it degenerates to the weights' own
+# (R, 128) layout and needs no padding.
+STATE_PLANE_TILE = SUBLANES
+
+# Resident-state budget in f32 words (n * d_pad): ~8 MB, alongside at most
+# ~4 MB of resident weights (MAX_VMEM_PARTICLES) still inside a 16 MB core.
+MAX_VMEM_STATE = 2 * MAX_VMEM_PARTICLES
+
+
+def pad_state_dim(state_dim: int) -> int:
+    """Padded plane count for a ``state_dim``-component particle state."""
+    if state_dim <= 1:
+        return 1
+    return -(-state_dim // STATE_PLANE_TILE) * STATE_PLANE_TILE
+
+
+def check_state_resident(n: int, state_dim: int, who: str):
+    """Raise when the fused kernels' resident plane stack exceeds the VMEM
+    state budget (``n * pad_state_dim(state_dim)`` f32 words)."""
+    d_pad = pad_state_dim(state_dim)
+    if n * d_pad > MAX_VMEM_STATE:
+        raise ValueError(
+            f"{who} keeps the whole particle state VMEM-resident and caps "
+            f"N * pad_state_dim(state_dim) at {MAX_VMEM_STATE} (got N={n}, "
+            f"state_dim={state_dim} -> {n * d_pad}). Use apply on the "
+            "reference/xla backend (index + XLA gather) above this size."
+        )
+
+
+def state_dim_of(particles: jnp.ndarray, n: int, who: str, lead: int = 1) -> int:
+    """Flattened state component count of ``particles``, validating that the
+    particle axis (``lead``-th axis: 1 = ``[N, ...]``, 2 = ``[B, N, ...]``)
+    matches ``n``.  The ONE lead-axis/state-dim check every fused ops
+    wrapper shares."""
+    if particles.ndim < lead or particles.shape[lead - 1] != n:
+        raise ValueError(
+            f"{who}: particles must carry the particle axis at position "
+            f"{lead - 1} ({'[B, N, ...]' if lead == 2 else '[N, ...]'}); got "
+            f"{particles.shape} for N={n}"
+        )
+    d = 1
+    for s in particles.shape[lead:]:
+        d *= s
+    return d
+
+
+def run_fused_bank(launch, weights: jnp.ndarray, particles: jnp.ndarray, who: str):
+    """Shared bank scaffolding for every family's fused apply launch:
+    residency check, per-row plane pack, ``launch(w3, planes4d) -> (k3,
+    out4d)``, per-row unpack.  Returns ``(particles'[B, N, ...],
+    ancestors int32[B, N])``."""
+    import jax
+
+    bsz, n = weights.shape
+    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who)
+    w3 = weights.reshape(bsz, n // LANES, LANES)
+    planes = jax.vmap(lambda p: pack_state_planes(p)[0])(particles)
+    k3, out = launch(w3, planes)
+    state_shape = particles.shape[2:]
+    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(out)
+    return out_rows, k3.reshape(bsz, n)
+
+
+def pack_state_planes(particles: jnp.ndarray):
+    """``[N]`` or ``[N, ...]`` particles -> ``[d_pad, N // 128, 128]`` plane
+    stack (zero-padded), plus the trailing state shape for ``unpack``.
+
+    Plane ``d`` holds component ``d`` of every particle in the SAME flat
+    row-major (R, 128) layout the weight kernels use, so ``tile_lane_ids``
+    indexes state exactly like it indexes weights.
+    """
+    n = particles.shape[0]
+    state_shape = particles.shape[1:]
+    d = 1
+    for s in state_shape:
+        d *= s
+    d_pad = pad_state_dim(d)
+    flat = particles.reshape(n, d).T  # [d, N]
+    if d_pad != d:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((d_pad - d, n), flat.dtype)], axis=0
+        )
+    return flat.reshape(d_pad, n // LANES, LANES), state_shape
+
+
+def unpack_state_planes(planes: jnp.ndarray, state_shape) -> jnp.ndarray:
+    """Invert ``pack_state_planes``: ``[d_pad, R, 128]`` -> ``[N, *shape]``."""
+    d_pad = planes.shape[0]
+    n = planes.shape[-2] * planes.shape[-1]
+    d = 1
+    for s in state_shape:
+        d *= s
+    out = planes.reshape(d_pad, n)[:d].T  # [N, d]
+    return out.reshape((n,) + tuple(state_shape))
+
+
+def gather_state(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray:
+    """In-register state copy: ``out[:, i] = planes[:, k_global[i]]``.
+
+    ``planes``: the resident ``[d_pad, rows, 128]`` plane-stack VALUE;
+    ``k_global``: int32[8, 128] ancestor ids of one output tile.  Returns
+    the gathered ``[d_pad, 8, 128]`` state block — the tile the fused
+    kernels write straight to the output ref (Alg. 5's state copy, fused)."""
+    d_pad, rows, lanes = planes.shape
+    flat = planes.reshape(d_pad, rows * lanes)
+    return jnp.take(flat, k_global.reshape(-1), axis=1).reshape(
+        d_pad, SUBLANES, LANES
+    )
+
 
 def check_tile_aligned(n: int, who: str):
     """Raise unless N is whole (8, 128) f32 VMEM tiles."""

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import TILE, flat_roll, hash_uniform, tile_lane_ids
+from repro.kernels.common import TILE, flat_roll, gather_state, hash_uniform, tile_lane_ids
 
 SUBLANES = 8
 LANES = 128
@@ -91,6 +91,50 @@ def _kernel_batch(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
+
+
+def _kernel_fused(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, planes_ref,
+                  k_ref, out_ref, wk_ref):
+    """Fused resample+gather grid step (t, b): the Alg. 5 sweep, then — at
+    the LAST iteration only — the ancestor's state tile is copied from the
+    resident plane stack straight to the output ref (DESIGN.md §11).  The
+    ancestor index never round-trips through HBM between selection and
+    copy; it is the VMEM carry ``k_ref`` itself."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = pl.num_programs(0) * SEG
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[b], seed_ref[0],
+        w_own_ref[...], w_cmp_ref[...], k_ref[...], wk_ref[...], n_total,
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _copy_state():
+        out_ref[...] = gather_state(planes_ref[...], k_new)
+
+
+def _kernel_fused_rows(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref,
+                       planes_ref, k_ref, out_ref, wk_ref):
+    """Fused grid step (s, t, b) over a bank: per-row offset TABLE rows
+    ``offsets[s]`` + per-row seed, so row s is bit-identical to the fused
+    single kernel with that row's table (passing identical rows recovers
+    the shared-offset bank contract of ``_kernel_batch``)."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    n_total = pl.num_programs(1) * SEG
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[s, b], seeds_ref[s],
+        w_own_ref[0], w_cmp_ref[0], k_ref[0], wk_ref[...], n_total,
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(2) - 1)
+    def _copy_state():
+        out_ref[0] = gather_state(planes_ref[0], k_new)
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -179,3 +223,114 @@ def megopolis_pallas_batch(
         out_shape=jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
         interpret=interpret,
     )(offsets, seeds, weights3d, weights3d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas_fused(
+    weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    offsets: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused resample+gather pallas_call (DESIGN.md §11).  ``planes``:
+    particle state as a ``[d_pad, R, 128]`` plane stack (VMEM-resident);
+    other arguments as for ``megopolis_pallas``.  Returns ``(ancestors
+    int32[R, 128], state [d_pad, R, 128])`` — the ancestor stream is
+    identical to the unfused kernel's (same sweep arithmetic, same RNG)."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    def _cmp_index(t, b, offs, seed):
+        return (t + offs[b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
+            pl.BlockSpec((SUBLANES, LANES), _cmp_index),
+            # whole state plane stack resident; block index constant in
+            # (t, b) -> fetched once per launch
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, offs, seed: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, offs, seed: (0, t, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_fused,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(offsets, seed, weights2d, weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas_fused_rows(
+    weights3d: jnp.ndarray,
+    planes4d: jnp.ndarray,
+    offsets2d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused bank launch: grid (Bz, num_tiles, num_iters) with PER-ROW
+    offset tables ``offsets2d`` int32[Bz, num_iters] and per-row seeds.
+
+    Row s is bit-identical to ``megopolis_pallas_fused(weights3d[s],
+    planes4d[s], offsets2d[s], seeds[s:s+1], ...)`` — the explicit-key bank
+    path (``apply_rows``).  Passing identical table rows recovers the
+    shared-offset ``apply``-bank contract (one scalar-prefetch schedule,
+    row-invariant comparison blocks).  Returns ``(int32[Bz, R, 128],
+    [Bz, d_pad, R, 128])``."""
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes4d.shape[1]
+    assert planes4d.shape == (bsz, d_pad, rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    def _own_index(s, t, b, offs, seeds):
+        return s, t, 0
+
+    def _cmp_index(s, t, b, offs, seeds):
+        return s, (t + offs[s, b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+            pl.BlockSpec((1, SUBLANES, LANES), _cmp_index),
+            pl.BlockSpec(
+                (1, d_pad, rows, LANES), lambda s, t, b, offs, seeds: (s, 0, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+            pl.BlockSpec(
+                (1, d_pad, SUBLANES, LANES), lambda s, t, b, offs, seeds: (s, 0, t, 0)
+            ),
+        ],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_fused_rows,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
+        ],
+        interpret=interpret,
+    )(offsets2d, seeds, weights3d, weights3d, planes4d)

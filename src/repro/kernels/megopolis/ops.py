@@ -13,8 +13,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import TILE, key_to_seed
-from repro.kernels.megopolis.megopolis import LANES, megopolis_pallas, megopolis_pallas_batch
+from repro.kernels.common import (
+    TILE,
+    check_state_resident,
+    key_to_seed,
+    pack_state_planes,
+    run_fused_bank,
+    state_dim_of,
+    unpack_state_planes,
+)
+from repro.kernels.megopolis.megopolis import (
+    LANES,
+    megopolis_pallas,
+    megopolis_pallas_batch,
+    megopolis_pallas_fused,
+    megopolis_pallas_fused_rows,
+)
 
 
 def megopolis_tpu(
@@ -71,3 +85,105 @@ def megopolis_tpu_batch(
     w3 = weights.reshape(bsz, n // LANES, LANES)
     k3 = megopolis_pallas_batch(w3, offsets, seeds, num_iters=num_iters, interpret=interpret)
     return k3.reshape(bsz, n)
+
+
+def megopolis_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused resample+gather (DESIGN.md §11): ONE kernel launch selects the
+    ancestors (identical stream to ``megopolis_tpu``) and copies each
+    ancestor's state tile in VMEM.  ``particles``: ``[N]`` or ``[N, ...]``
+    (trailing dims are the state).  Returns ``(particles' , ancestors)``."""
+    n = weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_apply requires N % {TILE} == 0 (one f32 VMEM tile); got N={n}."
+        )
+    check_state_resident(n, state_dim_of(particles, n, "megopolis_tpu_apply"),
+                         "megopolis_tpu_apply")
+    key_off, key_seed = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
+    seed = key_to_seed(key_seed).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    planes, state_shape = pack_state_planes(particles)
+    k2, out = megopolis_pallas_fused(
+        w2, planes, offsets, seed, num_iters=num_iters, interpret=interpret
+    )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def megopolis_tpu_apply_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused bank launch under the ``megopolis_tpu_batch`` contract: the
+    offset table is drawn ONCE (same key derivation) and shared by every
+    row, per-row RNG seeds.  ``particles``: ``[B, N, ...]``.  Returns
+    ``(particles'[B, N, ...], ancestors int32[B, N])``."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"megopolis_tpu_apply_batch expects weights[B, N]; got {weights.shape}"
+        )
+    bsz, n = weights.shape
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_apply_batch requires N % {TILE} == 0; got N={n}."
+        )
+    key_off, key_rows = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
+    offsets2d = jnp.broadcast_to(offsets[None, :], (bsz, num_iters))
+    seeds = key_to_seed(jax.random.split(key_rows, bsz))
+    return _apply_rows_launch(weights, particles, offsets2d, seeds,
+                              num_iters=num_iters, interpret=interpret,
+                              who="megopolis_tpu_apply_batch")
+
+
+def megopolis_tpu_apply_rows(
+    keys: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused bank launch over EXPLICIT per-row keys (the filter-bank path):
+    each row derives its own offset table and seed exactly as the single
+    ``megopolis_tpu_apply`` would, so row b is bit-identical to the single
+    call with ``keys[b]`` — in ONE leading-batch-grid launch."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"megopolis_tpu_apply_rows expects weights[B, N]; got {weights.shape}"
+        )
+    bsz, n = weights.shape
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_apply_rows requires N % {TILE} == 0; got N={n}."
+        )
+    split = jax.vmap(jax.random.split)(keys)
+    keys_off, keys_seed = split[:, 0], split[:, 1]
+    offsets2d = jax.vmap(
+        lambda k: jax.random.randint(k, (num_iters,), 0, n, dtype=jnp.int32)
+    )(keys_off)
+    seeds = key_to_seed(keys_seed)
+    return _apply_rows_launch(weights, particles, offsets2d, seeds,
+                              num_iters=num_iters, interpret=interpret,
+                              who="megopolis_tpu_apply_rows")
+
+
+def _apply_rows_launch(weights, particles, offsets2d, seeds, *, num_iters,
+                       interpret, who):
+    return run_fused_bank(
+        lambda w3, planes: megopolis_pallas_fused_rows(
+            w3, planes, offsets2d, seeds, num_iters=num_iters, interpret=interpret
+        ),
+        weights, particles, who,
+    )

@@ -34,7 +34,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
+from repro.kernels.common import (
+    LANES,
+    SUBLANES,
+    gather_state,
+    hash_bits,
+    hash_uniform,
+    tile_lane_ids,
+)
 
 SEG = SUBLANES * LANES
 # One (8,128) f32 VMEM tile — the kernel's partition, in bytes (Algs. 3-4
@@ -89,6 +96,122 @@ def _make_kernel_c2(num_iters: int):
         wk_ref[...] = wk_new
 
     return _kernel_c2
+
+
+def _kernel_c1_fused(p_ref, seed_ref, w_own_ref, w_part_ref, planes_ref,
+                     k_ref, out_ref, wk_ref):
+    """Fused C1 grid step: segment-local sweep + last-iteration state copy
+    (DESIGN.md §11).  The partition keeps C1's one-fetch contract; the
+    state plane stack is resident because the SELECTED ancestor may live in
+    any tile (``j_global`` ranges over all N across iterations)."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = pl.num_programs(0) * SEG
+    k_new, wk_new = _sweep_partition(
+        t, b, p_ref[t], seed_ref[0],
+        w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _copy_state():
+        out_ref[...] = gather_state(planes_ref[...], k_new)
+
+
+def _make_kernel_c2_fused(num_iters: int):
+    def _kernel_c2_fused(p_ref, seed_ref, w_own_ref, w_part_ref, planes_ref,
+                         k_ref, out_ref, wk_ref):
+        t = pl.program_id(0)
+        b = pl.program_id(1)
+        n_total = pl.num_programs(0) * SEG
+        k_new, wk_new = _sweep_partition(
+            t, b, p_ref[t * num_iters + b], seed_ref[0],
+            w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+        )
+        k_ref[...] = k_new
+        wk_ref[...] = wk_new
+
+        @pl.when(b == pl.num_programs(1) - 1)
+        def _copy_state():
+            out_ref[...] = gather_state(planes_ref[...], k_new)
+
+    return _kernel_c2_fused
+
+
+def _c1c2_fused_call(kernel, weights2d, planes, partitions, seed, *,
+                     num_iters, part_index, interpret):
+    """Shared fused pallas_call builder for the C1/C2 pair — identical
+    except for the partition BlockSpec index map."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+            pl.BlockSpec((SUBLANES, LANES), part_index),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, p, seed: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, p, seed: (0, t, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(partitions, seed, weights2d, weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c1_pallas_fused(
+    weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused C1: ancestors identical to ``metropolis_c1_pallas``; returns
+    ``(int32[R, 128], [d_pad, R, 128])``."""
+    return _c1c2_fused_call(
+        _kernel_c1_fused, weights2d, planes, partitions, seed,
+        num_iters=num_iters,
+        part_index=lambda t, b, p, seed: (p[t], 0),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c2_pallas_fused(
+    weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused C2: ancestors identical to ``metropolis_c2_pallas``; returns
+    ``(int32[R, 128], [d_pad, R, 128])``."""
+    return _c1c2_fused_call(
+        _make_kernel_c2_fused(num_iters), weights2d, planes, partitions, seed,
+        num_iters=num_iters,
+        part_index=lambda t, b, p, seed: (p[t * num_iters + b], 0),
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))

@@ -19,7 +19,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
+from repro.kernels.common import (
+    LANES,
+    SUBLANES,
+    gather_state,
+    hash_bits,
+    hash_uniform,
+    tile_lane_ids,
+)
 
 SEG = SUBLANES * LANES
 
@@ -69,6 +76,43 @@ def _kernel_batch(seeds_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
+
+
+def _kernel_fused(seed_ref, w_full_ref, w_own_ref, planes_ref, k_ref, out_ref,
+                  wk_ref):
+    """Fused grid step (t, b): Alg. 2 sweep + last-iteration state copy from
+    the resident plane stack (DESIGN.md §11) — the weights AND the state
+    are both VMEM-resident here (the strawman's residency cost, now paid
+    once for selection and copy together)."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    k_new, wk_new = _sweep(
+        t, b, seed_ref[0], w_full_ref[...], w_own_ref[...], k_ref[...], wk_ref[...]
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _copy_state():
+        out_ref[...] = gather_state(planes_ref[...], k_new)
+
+
+def _kernel_fused_batch(seeds_ref, w_full_ref, w_own_ref, planes_ref, k_ref,
+                        out_ref, wk_ref):
+    """Fused grid step (s, t, b): row s of the bank, per-row seed — row s is
+    bit-identical to the fused single kernel with ``seeds[s]``."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    k_new, wk_new = _sweep(
+        t, b, seeds_ref[s], w_full_ref[0], w_own_ref[0], k_ref[0], wk_ref[...]
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(2) - 1)
+    def _copy_state():
+        out_ref[0] = gather_state(planes_ref[0], k_new)
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -140,3 +184,93 @@ def metropolis_pallas_batch(
         out_shape=jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
         interpret=interpret,
     )(seeds, weights3d, weights3d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas_fused(
+    weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused resample+gather pallas_call: ancestors identical to
+    ``metropolis_pallas``; ``planes`` ``[d_pad, R, 128]`` resident.  Returns
+    ``(int32[R, 128], [d_pad, R, 128])``."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t, b, seed: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, seed: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, seed: (0, t, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_fused,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(seed, weights2d, weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas_fused_batch(
+    weights3d: jnp.ndarray,
+    planes4d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused bank launch: one leading-batch-grid pallas_call; row s is
+    bit-identical to ``metropolis_pallas_fused(weights3d[s], planes4d[s],
+    seeds[s:s+1], ...)``.  Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128])``."""
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes4d.shape[1]
+    assert planes4d.shape == (bsz, d_pad, rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda s, t, b, seeds: (s, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, rows, LANES), lambda s, t, b, seeds: (s, 0, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, SUBLANES, LANES), lambda s, t, b, seeds: (s, 0, t, 0)
+            ),
+        ],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+    )
+    return pl.pallas_call(
+        _kernel_fused_batch,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
+        ],
+        interpret=interpret,
+    )(seeds, weights3d, weights3d, planes4d)

@@ -17,19 +17,28 @@ from repro.core.resamplers.batched import split_batch_keys
 from repro.kernels.common import (  # noqa: F401  (MAX_VMEM_PARTICLES re-export)
     MAX_VMEM_PARTICLES,
     TILE,
+    check_state_resident,
     check_tile_aligned,
     check_vmem_resident,
     key_to_seed,
+    pack_state_planes,
+    run_fused_bank,
+    state_dim_of,
+    unpack_state_planes,
 )
 from repro.kernels.metropolis.c1c2 import (
     PARTITION_BYTES,
     metropolis_c1_pallas,
+    metropolis_c1_pallas_fused,
     metropolis_c2_pallas,
+    metropolis_c2_pallas_fused,
 )
 from repro.kernels.metropolis.metropolis import (
     LANES,
     metropolis_pallas,
     metropolis_pallas_batch,
+    metropolis_pallas_fused,
+    metropolis_pallas_fused_batch,
 )
 
 
@@ -67,6 +76,89 @@ def metropolis_tpu_batch(
     w3 = weights.reshape(bsz, n // LANES, LANES)
     k3 = metropolis_pallas_batch(w3, seeds, num_iters=num_iters, interpret=interpret)
     return k3.reshape(bsz, n)
+
+
+def _pack_single(weights, particles, who, *, weights_resident: bool = True):
+    n = weights.shape[0]
+    check_tile_aligned(n, who)
+    if weights_resident:  # C1/C2 only keep partition tiles resident
+        check_vmem_resident(n, who)
+    check_state_resident(n, state_dim_of(particles, n, who), who)
+    planes, state_shape = pack_state_planes(particles)
+    return n, weights.reshape(n // LANES, LANES), planes, state_shape
+
+
+def metropolis_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused resample+gather (DESIGN.md §11): ancestors identical to
+    ``metropolis_tpu``; the state copy happens in VMEM.  Returns
+    ``(particles', ancestors)``."""
+    n, w2, planes, state_shape = _pack_single(weights, particles, "metropolis_tpu_apply")
+    seed = key_to_seed(key).reshape(1)
+    k2, out = metropolis_pallas_fused(
+        w2, planes, seed, num_iters=num_iters, interpret=interpret
+    )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def _metropolis_apply_bank(seeds, weights, particles, num_iters, *, interpret, who):
+    n = weights.shape[1]
+    check_tile_aligned(n, who)
+    check_vmem_resident(n, who)
+    return run_fused_bank(
+        lambda w3, planes: metropolis_pallas_fused_batch(
+            w3, planes, seeds, num_iters=num_iters, interpret=interpret
+        ),
+        weights, particles, who,
+    )
+
+
+def metropolis_tpu_apply_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused ``[B, R, 128]`` bank launch under the §4 split-key contract;
+    row b == ``metropolis_tpu_apply(split(key, B)[b], ...)`` bit-exactly."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"metropolis_tpu_apply_batch expects weights[B, N]; got {weights.shape}"
+        )
+    seeds = key_to_seed(split_batch_keys(key, weights.shape[0]))
+    return _metropolis_apply_bank(
+        seeds, weights, particles, num_iters, interpret=interpret,
+        who="metropolis_tpu_apply_batch",
+    )
+
+
+def metropolis_tpu_apply_rows(
+    keys: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused bank launch over EXPLICIT per-row keys (the filter-bank path);
+    row b == ``metropolis_tpu_apply(keys[b], ...)`` bit-exactly, in ONE
+    leading-batch-grid launch."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"metropolis_tpu_apply_rows expects weights[B, N]; got {weights.shape}"
+        )
+    return _metropolis_apply_bank(
+        key_to_seed(keys), weights, particles, num_iters, interpret=interpret,
+        who="metropolis_tpu_apply_rows",
+    )
 
 
 def metropolis_c1_tpu(
@@ -111,3 +203,51 @@ def metropolis_c2_tpu(
     w2 = weights.reshape(n // LANES, LANES)
     k2 = metropolis_c2_pallas(w2, partitions, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
+
+
+def metropolis_c1_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused C1 resample+gather; same key split as ``metropolis_c1_tpu``.
+    Returns ``(particles', ancestors)``."""
+    n, w2, planes, state_shape = _pack_single(
+        weights, particles, "metropolis_c1_tpu_apply", weights_resident=False
+    )
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(kp, (num_tiles,), 0, num_tiles, dtype=jnp.int32)
+    seed = key_to_seed(kloop).reshape(1)
+    k2, out = metropolis_c1_pallas_fused(
+        w2, planes, partitions, seed, num_iters=num_iters, interpret=interpret
+    )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def metropolis_c2_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused C2 resample+gather; same key split as ``metropolis_c2_tpu``.
+    Returns ``(particles', ancestors)``."""
+    n, w2, planes, state_shape = _pack_single(
+        weights, particles, "metropolis_c2_tpu_apply", weights_resident=False
+    )
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(
+        kp, (num_tiles * num_iters,), 0, num_tiles, dtype=jnp.int32
+    )
+    seed = key_to_seed(kloop).reshape(1)
+    k2, out = metropolis_c2_pallas_fused(
+        w2, planes, partitions, seed, num_iters=num_iters, interpret=interpret
+    )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)

@@ -25,9 +25,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import TILE, check_tile_aligned, check_vmem_resident
+from repro.kernels.common import (
+    TILE,
+    check_state_resident,
+    check_tile_aligned,
+    check_vmem_resident,
+    pack_state_planes,
+    state_dim_of,
+    unpack_state_planes,
+)
 from repro.kernels.prefix_sum.prefix_sum import LANES, prefix_sum_pallas
-from repro.kernels.prefix_sum.search import searchsorted_pallas
+from repro.kernels.prefix_sum.search import (
+    residual_select_gather_pallas,
+    searchsorted_gather_pallas,
+    searchsorted_pallas,
+)
 
 PREFIX_KINDS = (
     "multinomial",
@@ -109,6 +121,67 @@ def prefix_resample_tpu(
     c = prefix_sum_tpu(weights, interpret=interpret)
     u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
     return searchsorted_tpu(c, u, side=side, interpret=interpret)
+
+
+def prefix_resample_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    kind: str = "systematic",
+    *,
+    interpret: bool = True,
+):
+    """Fused resample+gather for the prefix-sum family (DESIGN.md §11): the
+    final search kernel also copies each slot's ancestor state from the
+    resident plane stack — indices identical to ``prefix_resample_tpu``.
+    ``particles``: ``[N]`` or ``[N, ...]``.  Returns ``(particles',
+    ancestors)``."""
+    if kind not in PREFIX_KINDS:
+        raise ValueError(f"kind must be one of {PREFIX_KINDS}; got {kind!r}")
+    n = weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"prefix_resample_tpu_apply requires N % {TILE} == 0 (one f32 VMEM "
+            f"tile); got N={n}. Use the reference backend for unaligned N."
+        )
+    check_vmem_resident(
+        n, "prefix_resample_tpu_apply", what="CDF",
+        remedy="Use backend='reference'/'xla' for this family at larger N.",
+    )
+    check_state_resident(
+        n, state_dim_of(particles, n, "prefix_resample_tpu_apply"),
+        "prefix_resample_tpu_apply",
+    )
+    planes, state_shape = pack_state_planes(particles)
+    if kind == "residual":
+        k2, out = _residual_tpu_fused(key, weights, planes, interpret=interpret)
+    else:
+        c = prefix_sum_tpu(weights, interpret=interpret)
+        u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
+        k2, out = searchsorted_gather_pallas(
+            c.reshape(n // LANES, LANES), u.reshape(n // LANES, LANES), planes,
+            side=side, interpret=interpret,
+        )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *, interpret):
+    """The fused form of ``_residual_tpu``: same three block-scans, then ONE
+    kernel runs both searches, the slot select and the state gather."""
+    n = weights.shape[0]
+    total = prefix_sum_tpu(weights, interpret=interpret)[-1]
+    w = weights / total
+    counts = jnp.floor(n * w)
+    n_det = jnp.sum(counts).astype(jnp.int32).reshape(1)
+    resid = n * w - counts
+
+    cc = prefix_sum_tpu(counts, interpret=interpret)
+    c = prefix_sum_tpu(resid, interpret=interpret)
+    u = jax.random.uniform(key, (n,), weights.dtype) * c[-1]
+    return residual_select_gather_pallas(
+        cc.reshape(n // LANES, LANES), c.reshape(n // LANES, LANES),
+        u.reshape(n // LANES, LANES), n_det, planes, interpret=interpret,
+    )
 
 
 def _residual_tpu(key: jax.Array, weights: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:

@@ -30,32 +30,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import gather_state, tile_lane_ids
+
 SUBLANES = 8
 LANES = 128
 SEG = SUBLANES * LANES
 
 
-def _make_kernel(n_total: int, side: str):
+def _bisect(c_flat, u, side: str, n_total: int):
+    """The tile-parallel bisection every search kernel shares: int32[8, 128]
+    first index with ``c[idx] >= u`` ('left') / ``c[idx] > u`` ('right'),
+    clipped to N-1.  One in-register gather per step."""
     n_steps = max(1, math.ceil(math.log2(n_total + 1)))
+    lo = jnp.zeros((SUBLANES, LANES), jnp.int32)
+    hi = jnp.full((SUBLANES, LANES), n_total, jnp.int32)
 
+    def step(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) // 2
+        cm = jnp.take(c_flat, mid.reshape(-1), axis=0).reshape(SUBLANES, LANES)
+        pred = (cm < u) if side == "left" else (cm <= u)
+        lo = jnp.where(active & pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, n_steps, step, (lo, hi))
+    return jnp.minimum(lo, n_total - 1)
+
+
+def _make_kernel(n_total: int, side: str):
     def _kernel(c_ref, u_ref, k_ref):
         c_flat = c_ref[...].reshape(n_total)
-        u = u_ref[...]
-        lo = jnp.zeros((SUBLANES, LANES), jnp.int32)
-        hi = jnp.full((SUBLANES, LANES), n_total, jnp.int32)
-
-        def step(_, state):
-            lo, hi = state
-            active = lo < hi
-            mid = (lo + hi) // 2
-            cm = jnp.take(c_flat, mid.reshape(-1), axis=0).reshape(SUBLANES, LANES)
-            pred = (cm < u) if side == "left" else (cm <= u)
-            lo = jnp.where(active & pred, mid + 1, lo)
-            hi = jnp.where(active & ~pred, mid, hi)
-            return lo, hi
-
-        lo, _ = jax.lax.fori_loop(0, n_steps, step, (lo, hi))
-        k_ref[...] = jnp.minimum(lo, n_total - 1)
+        k_ref[...] = _bisect(c_flat, u_ref[...], side, n_total)
 
     return _kernel
 
@@ -90,3 +97,123 @@ def searchsorted_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
         interpret=interpret,
     )(cdf2d, u2d)
+
+
+def _make_kernel_fused(n_total: int, side: str):
+    def _kernel(c_ref, u_ref, planes_ref, k_ref, out_ref):
+        c_flat = c_ref[...].reshape(n_total)
+        k = _bisect(c_flat, u_ref[...], side, n_total)
+        k_ref[...] = k
+        out_ref[...] = gather_state(planes_ref[...], k)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("side", "interpret"))
+def searchsorted_gather_pallas(
+    cdf2d: jnp.ndarray,
+    u2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    *,
+    side: str = "left",
+    interpret: bool = True,
+):
+    """Fused search+gather (DESIGN.md §11): the bisection result indexes the
+    resident state plane stack in the SAME grid step — the prefix-sum
+    family's ancestor indices never leave VMEM.  Returns ``(int32[R, 128],
+    [d_pad, R, 128])``; indices identical to ``searchsorted_pallas``."""
+    assert side in ("left", "right")
+    rows, lanes = cdf2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    assert u2d.shape == (rows, lanes)
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+    n_total = rows * lanes
+
+    return pl.pallas_call(
+        _make_kernel_fused(n_total, side),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t: (0, t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(cdf2d, u2d, planes)
+
+
+def _make_kernel_residual_fused(n_total: int):
+    def _kernel(ndet_ref, cc_ref, c_ref, u_ref, planes_ref, k_ref, out_ref):
+        t = pl.program_id(0)
+        slots = tile_lane_ids(t)
+        cc_flat = cc_ref[...].reshape(n_total)
+        c_flat = c_ref[...].reshape(n_total)
+        # Both searches of the residual composition run in ONE grid step:
+        # deterministic copies bisect the counts CDF at the slot index,
+        # stochastic slots bisect the residual CDF at their draw.
+        det = _bisect(cc_flat, slots.astype(c_flat.dtype), "right", n_total)
+        rnd = _bisect(c_flat, u_ref[...], "right", n_total)
+        k = jnp.where(slots < ndet_ref[0], det, rnd)
+        k_ref[...] = k
+        out_ref[...] = gather_state(planes_ref[...], k)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def residual_select_gather_pallas(
+    cc2d: jnp.ndarray,
+    c2d: jnp.ndarray,
+    u2d: jnp.ndarray,
+    n_det: jnp.ndarray,
+    planes: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """Fused residual tail (DESIGN.md §11): deterministic-copy search,
+    residual search, slot select and state gather in one kernel.  ``cc2d``:
+    the deterministic-count CDF; ``c2d``: the residual CDF; ``u2d``: the
+    residual draws (already scaled by the CDF total); ``n_det``: int32[1]
+    deterministic slot count (scalar-prefetched).  Index arithmetic is
+    bit-identical to the two-``searchsorted_pallas`` + ``jnp.where``
+    composition in ``ops._residual_tpu``."""
+    rows, lanes = cc2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    assert c2d.shape == (rows, lanes) and u2d.shape == (rows, lanes)
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+    n_total = rows * lanes
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t, nd: (0, 0)),
+            pl.BlockSpec((rows, LANES), lambda t, nd: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, nd: (t, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, nd: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, nd: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, nd: (0, t, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel_residual_fused(n_total),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(n_det, cc2d, c2d, u2d, planes)

@@ -6,11 +6,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.resamplers.batched import split_batch_keys
-from repro.kernels.common import check_tile_aligned, check_vmem_resident, key_to_seed
+from repro.kernels.common import (
+    check_state_resident,
+    check_tile_aligned,
+    check_vmem_resident,
+    key_to_seed,
+    pack_state_planes,
+    run_fused_bank,
+    state_dim_of,
+    unpack_state_planes,
+)
 from repro.kernels.rejection.rejection import (
     LANES,
     rejection_pallas,
     rejection_pallas_batch,
+    rejection_pallas_fused,
+    rejection_pallas_fused_batch,
 )
 
 
@@ -52,3 +63,78 @@ def rejection_tpu_batch(
     w3 = weights.reshape(bsz, n // LANES, LANES)
     k3 = rejection_pallas_batch(w3, seeds, max_iters=max_iters, interpret=interpret)
     return k3.reshape(bsz, n)
+
+
+def rejection_tpu_apply(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+):
+    """Fused resample+gather (DESIGN.md §11): ancestors identical to
+    ``rejection_tpu``.  Returns ``(particles', ancestors)``."""
+    n = weights.shape[0]
+    _check(n, "rejection_tpu_apply")
+    check_state_resident(
+        n, state_dim_of(particles, n, "rejection_tpu_apply"), "rejection_tpu_apply"
+    )
+    seed = key_to_seed(key).reshape(1)
+    w2 = weights.reshape(n // LANES, LANES)
+    planes, state_shape = pack_state_planes(particles)
+    k2, out = rejection_pallas_fused(
+        w2, planes, seed, max_iters=max_iters, interpret=interpret
+    )
+    return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def _rejection_apply_bank(seeds, weights, particles, *, max_iters, interpret, who):
+    _check(weights.shape[1], who)
+    return run_fused_bank(
+        lambda w3, planes: rejection_pallas_fused_batch(
+            w3, planes, seeds, max_iters=max_iters, interpret=interpret
+        ),
+        weights, particles, who,
+    )
+
+
+def rejection_tpu_apply_batch(
+    key: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+):
+    """Fused bank launch under the §4 split-key contract; row b ==
+    ``rejection_tpu_apply(split(key, B)[b], ...)`` bit-exactly."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"rejection_tpu_apply_batch expects weights[B, N]; got {weights.shape}"
+        )
+    seeds = key_to_seed(split_batch_keys(key, weights.shape[0]))
+    return _rejection_apply_bank(
+        seeds, weights, particles, max_iters=max_iters, interpret=interpret,
+        who="rejection_tpu_apply_batch",
+    )
+
+
+def rejection_tpu_apply_rows(
+    keys: jax.Array,
+    weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+):
+    """Fused bank launch over EXPLICIT per-row keys; row b ==
+    ``rejection_tpu_apply(keys[b], ...)`` bit-exactly, ONE launch."""
+    if weights.ndim != 2:
+        raise ValueError(
+            f"rejection_tpu_apply_rows expects weights[B, N]; got {weights.shape}"
+        )
+    return _rejection_apply_bank(
+        key_to_seed(keys), weights, particles, max_iters=max_iters,
+        interpret=interpret, who="rejection_tpu_apply_rows",
+    )

@@ -35,7 +35,14 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import LANES, SUBLANES, hash_bits, hash_uniform, tile_lane_ids
+from repro.kernels.common import (
+    LANES,
+    SUBLANES,
+    gather_state,
+    hash_bits,
+    hash_uniform,
+    tile_lane_ids,
+)
 
 SEG = SUBLANES * LANES
 
@@ -86,6 +93,124 @@ def _make_kernel_batch(max_iters: int):
         )
 
     return _kernel
+
+
+def _make_kernel_fused(max_iters: int):
+    def _kernel(seed_ref, wmax_ref, w_full_ref, w_own_ref, planes_ref, k_ref,
+                out_ref):
+        t = pl.program_id(0)
+        k = _rejection_loop(
+            t, seed_ref[0], wmax_ref[0], w_full_ref[...], w_own_ref[...], max_iters
+        )
+        k_ref[...] = k
+        out_ref[...] = gather_state(planes_ref[...], k)
+
+    return _kernel
+
+
+def _make_kernel_fused_batch(max_iters: int):
+    def _kernel(seeds_ref, wmax_ref, w_full_ref, w_own_ref, planes_ref, k_ref,
+                out_ref):
+        s = pl.program_id(0)
+        t = pl.program_id(1)
+        k = _rejection_loop(
+            t, seeds_ref[s], wmax_ref[s], w_full_ref[0], w_own_ref[0], max_iters
+        )
+        k_ref[0] = k
+        out_ref[0] = gather_state(planes_ref[0], k)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def rejection_pallas_fused(
+    weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    max_iters: int,
+    interpret: bool = True,
+):
+    """Fused resample+gather (DESIGN.md §11): the rejection chain runs
+    entirely inside the kernel body, so the state copy follows it in the
+    SAME grid step — rejection needs no last-iteration gating.  Ancestors
+    identical to ``rejection_pallas``; returns ``(int32[R, 128],
+    [d_pad, R, 128])``."""
+    rows, lanes = weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+    w_max = jnp.max(weights2d).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t, seed, wmax: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, seed, wmax: (t, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, seed, wmax: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, seed, wmax: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, seed, wmax: (0, t, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel_fused(max_iters),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+        ],
+        interpret=interpret,
+    )(seed, w_max, weights2d, weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))
+def rejection_pallas_fused_batch(
+    weights3d: jnp.ndarray,
+    planes4d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    max_iters: int,
+    interpret: bool = True,
+):
+    """Fused bank launch (leading batch grid dim); row s is bit-identical to
+    ``rejection_pallas_fused(weights3d[s], planes4d[s], seeds[s:s+1])``."""
+    bsz, rows, lanes = weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes4d.shape[1]
+    assert planes4d.shape == (bsz, d_pad, rows, lanes)
+    num_tiles = rows // SUBLANES
+    w_max = jnp.max(weights3d, axis=(1, 2))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, num_tiles),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda s, t, seeds, wmax: (s, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, seeds, wmax: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, rows, LANES), lambda s, t, seeds, wmax: (s, 0, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, seeds, wmax: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, SUBLANES, LANES), lambda s, t, seeds, wmax: (s, 0, t, 0)
+            ),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel_fused_batch(max_iters),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
+        ],
+        interpret=interpret,
+    )(seeds, w_max, weights3d, weights3d, planes4d)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "interpret"))

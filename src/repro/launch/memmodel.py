@@ -25,6 +25,33 @@ import numpy as np
 from repro.models import ModelConfig
 
 
+def resample_step_bytes(num_particles: int, state_dim: int = 1, *,
+                        fused: bool, batch: int = 1,
+                        state_bytes: int = 4) -> dict:
+    """Analytic peak HBM liveness of ONE resampling step (DESIGN.md §11).
+
+    The unfused path (index generation + XLA gather) holds, simultaneously
+    live at the gather: the pre-resample state, the gathered copy, the
+    int32 ancestor vector and the weight buffer — and the scan carry keeps
+    the dead pre-resample copy alive until the gather retires.  The fused
+    ``Resampler.apply`` path drops the materialised ancestor vector (it
+    never leaves VMEM) and writes the gathered state directly, so its peak
+    is two state buffers + weights.  Used by tests/test_fused_apply.py to
+    pin fused < unfused for every (N, state_dim).
+    """
+    state = float(batch * num_particles * state_dim * state_bytes)
+    weights = float(batch * num_particles * 4)
+    out = {
+        "state_in": state,
+        "state_out": state,
+        "weights": weights,
+    }
+    if not fused:
+        out["ancestors_i32"] = float(batch * num_particles * 4)
+    out["total"] = float(sum(out.values()))
+    return out
+
+
 def _layer_transient_train(cfg: ModelConfig, rows: int, seq: int, tp: int) -> float:
     """Peak transient bytes of ONE layer's fwd+bwd (f32 scores dominate)."""
     heads_loc = max(1, cfg.num_heads // tp)

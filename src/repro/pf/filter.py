@@ -90,18 +90,20 @@ class ParticleFilter:
         """The resolved resampler spec this filter runs."""
         return self._built.spec
 
-    def _resample(self, key, weights):
-        return self._built(key, weights)
-
     def step(self, key, particles, z, t, theta=None):
-        """One SIR step (Alg. 6): returns (particles', estimate, weights)."""
+        """One SIR step (Alg. 6): returns (particles', estimate, weights).
+
+        Stage 2 runs the FUSED resample+gather path (``Resampler.apply``,
+        DESIGN.md §11): on kernel backends the ancestor indices never
+        round-trip through HBM — the kernel selects the ancestor and copies
+        its state in VMEM; on reference/xla the same call is the classic
+        index-then-gather composition, bit-identically."""
         k_pred, k_res = jax.random.split(key)
         # Stage 1: predict + update
         x = _call(self.model.transition, k_pred, particles, t, theta=theta)
         w = _call(self.model.likelihood, z, x, t, theta=theta)
-        # Stage 2: resample
-        ancestors = self._resample(k_res, w)
-        x_bar = jnp.take(x, ancestors, axis=0)
+        # Stage 2: fused resample + ancestor gather
+        x_bar, _ = self._built.apply(k_res, w, x)
         # Stage 3: estimate (uniform post-resampling weights)
         return x_bar, jnp.mean(x_bar), w
 
@@ -138,6 +140,13 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
     helper.  Alg. 6 resamples unconditionally, so ESS here is a health
     signal, not a trigger (the triggered form lives in smc/decode.py and
     ais/sampler.py).
+
+    Peak-memory note (DESIGN.md §11): the resample stage is the fused
+    ``Resampler.apply``, so the scan body's live set at the resample
+    boundary is the in/out particle buffers only — no int32 ancestor
+    vector, and (unless ``with_ess`` asks for it) no weight buffer escapes
+    the step into the scan's stacked outputs.  The accounting lives in
+    ``launch/memmodel.py::resample_step_bytes``.
     """
 
     def body(carry, inp):
@@ -145,6 +154,10 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
         t, z = inp
         k, ks = jax.random.split(k)
         particles, est, w = pf.step(ks, particles, z, t, theta=theta)
+        if not with_ess:
+            # Don't thread the pre-resample weight buffer into the scan
+            # outputs when nobody consumes it — the diagnostic is opt-in.
+            return (particles, k), est
         # floor must stay in float32 normal range: subnormals (e.g. 1e-38)
         # flush to zero under XLA and the log would reintroduce -inf
         ess_norm = effective_sample_size(jnp.log(jnp.maximum(w, 1e-30))) / w.shape[0]
@@ -153,8 +166,8 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
     k0, key = jax.random.split(key)
     particles = pf.model.init(k0, pf.num_particles)
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
-    _, (ests, ess_hist) = jax.lax.scan(body, (particles, key), (ts, observations))
-    return (ests, ess_hist) if with_ess else ests
+    _, out = jax.lax.scan(body, (particles, key), (ts, observations))
+    return out
 
 
 def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=None):
@@ -201,9 +214,10 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
             lambda z, xr, th: _call(pf.model.likelihood, z, xr, t, theta=th),
             in_axes=(0, 0, theta_axes),
         )(zs, x, thetas)
-        # Stage 2: ONE batched resampling launch for the whole bank
-        ancestors = resampler.batch_rows(k_res, w)
-        x_bar = jnp.take_along_axis(x, ancestors, axis=1)
+        # Stage 2: ONE batched FUSED resample+gather launch for the whole
+        # bank (Resampler.apply_rows, DESIGN.md §11) — on the batch-grid
+        # kernel families this is a single fused launch per step
+        x_bar, _ = resampler.apply_rows(k_res, w, x)
         # Stage 3 (batched): estimate
         return (x_bar, ks_next), jnp.mean(x_bar, axis=1)
 
@@ -227,8 +241,8 @@ def run_filter_timed(key, pf: ParticleFilter, observations, warmup: int = 2):
 
     @jax.jit
     def stage2(k, x, w):
-        a = pf._resample(k, w)
-        return jnp.take(x, a, axis=0)
+        x_bar, _ = pf._built.apply(k, w, x)
+        return x_bar
 
     @jax.jit
     def stage3(x):

@@ -95,11 +95,14 @@ def smc_decode(
     def maybe_resample(k, log_w, caches, tokens_so_far):
         def do(_):
             # Metropolis-family resamplers consume unnormalised weights —
-            # shift in log space for stability, then exponentiate.
+            # shift in log space for stability, then exponentiate.  The
+            # token buffer rides the FUSED resample+gather path
+            # (Resampler.apply, DESIGN.md §11); the KV/SSM cache pytree —
+            # mixed dtypes/shapes per leaf — is gathered with the ancestors
+            # the fused call returns (the kernel computes them anyway).
             w = jnp.exp(log_w - jnp.max(log_w))
-            ancestors = resampler(k, w)
+            new_tokens, ancestors = resampler.apply(k, w, tokens_so_far)
             new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
-            new_tokens = jnp.take(tokens_so_far, ancestors, axis=0)
             return jnp.zeros_like(log_w), new_caches, new_tokens, jnp.int32(1)
 
         def dont(_):

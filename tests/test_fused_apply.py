@@ -1,0 +1,268 @@
+"""Fused resample+gather (``Resampler.apply``) quality gate (DESIGN.md §11).
+
+Contract under test, over the FULL family × backend matrix:
+
+  1. **composition parity** — ``apply(key, w, p)`` is bit-identical to
+     ``(take(p, r(key, w)), r(key, w))`` on the SAME backend, for single,
+     bank (``apply_batch`` vs ``batch``) and explicit-key rows
+     (``apply_rows`` vs ``batch_rows``) forms;
+  2. **state layout** — scalar ``[N]`` states, trailing multi-dim states,
+     a ``state_dim`` NOT divisible by the plane tile (padding path), and
+     4-byte integer states all gather exactly;
+  3. **state-column equivariance** (hypothesis) — permuting state columns
+     commutes with ``apply`` (pins that plane packing/padding never mixes
+     components);
+  4. **residency** — the fused kernels enforce the VMEM state budget with
+     a clear error;
+  5. **consumers** — the resample paths of ``ParticleFilter.step``,
+     ``run_filter_bank`` and the AIS sampler contain no ``jnp.take`` (the
+     HBM index round-trip the fused path exists to remove), and the
+     analytic memory model says fused < unfused.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import spec_for_backend
+from repro.kernels.common import (
+    MAX_VMEM_STATE,
+    STATE_PLANE_TILE,
+    TILE,
+    pack_state_planes,
+    pad_state_dim,
+    unpack_state_planes,
+)
+
+N = 2 * TILE
+BATCH = 3
+ITERS = 8
+MAX_ITERS = 24
+
+FAMILIES = (
+    "megopolis",
+    "metropolis",
+    "metropolis_c1",
+    "metropolis_c2",
+    "rejection",
+    "multinomial",
+    "systematic",
+    "improved_systematic",
+    "stratified",
+    "residual",
+)
+BACKENDS = ("reference", "xla", "pallas_interpret")
+
+
+def _build(name, backend):
+    return spec_for_backend(name, backend, num_iters=ITERS, max_iters=MAX_ITERS).build()
+
+
+@pytest.fixture(scope="module")
+def w_single():
+    return jax.random.uniform(jax.random.PRNGKey(11), (N,)) + 1e-3
+
+
+@pytest.fixture(scope="module")
+def w_bank():
+    return jax.random.uniform(jax.random.PRNGKey(12), (BATCH, N)) + 1e-3
+
+
+@pytest.fixture(scope="module")
+def p_single():
+    return jax.random.normal(jax.random.PRNGKey(13), (N, 4))
+
+
+@pytest.fixture(scope="module")
+def p_bank():
+    return jax.random.normal(jax.random.PRNGKey(14), (BATCH, N, 4))
+
+
+def _assert_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- 1. composition parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_apply_single_matches_take(name, backend, w_single, p_single, base_key):
+    r = _build(name, backend)
+    ancestors = r(base_key, w_single)
+    got_p, got_a = r.apply(base_key, w_single, p_single)
+    _assert_equal(got_a, ancestors)
+    _assert_equal(got_p, jnp.take(p_single, ancestors, axis=0))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_apply_batch_matches_take(name, backend, w_bank, p_bank, base_key):
+    r = _build(name, backend)
+    ancestors = r.batch(base_key, w_bank)
+    got_p, got_a = r.apply_batch(base_key, w_bank, p_bank)
+    _assert_equal(got_a, ancestors)
+    _assert_equal(
+        got_p, jax.vmap(lambda p, a: jnp.take(p, a, axis=0))(p_bank, ancestors)
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_apply_rows_matches_rows(name, backend, w_bank, p_bank, base_key):
+    """apply_rows row b == apply(keys[b], w[b], p[b]) — the filter-bank
+    contract — and its ancestors == batch_rows."""
+    r = _build(name, backend)
+    keys = split_batch_keys(base_key, BATCH)
+    got_p, got_a = r.apply_rows(keys, w_bank, p_bank)
+    _assert_equal(got_a, r.batch_rows(keys, w_bank))
+    for b in range(BATCH):
+        pb, ab = r.apply(keys[b], w_bank[b], p_bank[b])
+        _assert_equal(got_a[b], ab)
+        _assert_equal(got_p[b], pb)
+
+
+# ------------------------------------------------------- 2. state layouts
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+@pytest.mark.parametrize("name", ("megopolis", "rejection", "systematic"))
+def test_apply_scalar_state(name, backend, w_single, base_key):
+    p = jax.random.normal(jax.random.PRNGKey(21), (N,))
+    r = _build(name, backend)
+    got_p, got_a = r.apply(base_key, w_single, p)
+    assert got_p.shape == (N,)
+    _assert_equal(got_p, jnp.take(p, got_a, axis=0))
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_apply_padded_state_dim(name, w_single, base_key):
+    """state_dim = 5 is not divisible by the plane tile (8): the kernel
+    lane must pad, gather and unpad without touching real components."""
+    assert 5 % STATE_PLANE_TILE != 0
+    p = jax.random.normal(jax.random.PRNGKey(22), (N, 5))
+    r = _build(name, "pallas_interpret")
+    got_p, got_a = r.apply(base_key, w_single, p)
+    _assert_equal(got_p, jnp.take(p, got_a, axis=0))
+
+
+@pytest.mark.parametrize("name", ("megopolis", "metropolis"))
+def test_apply_multidim_and_int_state(name, w_single, base_key):
+    r = _build(name, "pallas_interpret")
+    p3 = jax.random.normal(jax.random.PRNGKey(23), (N, 2, 3))
+    got_p, got_a = r.apply(base_key, w_single, p3)
+    _assert_equal(got_p, jnp.take(p3, got_a, axis=0))
+    pi = jax.random.randint(jax.random.PRNGKey(24), (N, 3), 0, 1 << 20)
+    got_pi, got_ai = r.apply(base_key, w_single, pi)
+    assert got_pi.dtype == pi.dtype
+    _assert_equal(got_pi, jnp.take(pi, got_ai, axis=0))
+
+
+def test_pack_unpack_roundtrip():
+    for shape in [(N,), (N, 1), (N, 4), (N, 5), (N, 2, 3)]:
+        p = jax.random.normal(jax.random.PRNGKey(25), shape)
+        planes, state_shape = pack_state_planes(p)
+        d = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        assert planes.shape[0] == pad_state_dim(d)
+        _assert_equal(unpack_state_planes(planes, state_shape), p)
+
+
+# --------------------------------------- 3. state-column equivariance
+def _check_column_permutation(seed: int):
+    """apply(key, w, p[:, perm]) == apply(key, w, p)[:, perm]: the fused
+    plane packing must never mix state components, padded or not."""
+    k = jax.random.PRNGKey(seed)
+    d = 1 + seed % 11  # covers padded (d % 8 != 0) and unpadded dims
+    w = jax.random.uniform(jax.random.fold_in(k, 0), (N,)) + 1e-3
+    p = jax.random.normal(jax.random.fold_in(k, 1), (N, d))
+    perm = jax.random.permutation(jax.random.fold_in(k, 2), d)
+    r = _build("megopolis", "pallas_interpret")
+    key = jax.random.fold_in(k, 3)
+    out, _ = r.apply(key, w, p)
+    out_perm, _ = r.apply(key, w, p[:, perm])
+    _assert_equal(out_perm, out[:, perm])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**30))
+    @settings(max_examples=10, deadline=None)
+    def test_apply_state_column_permutation_equivariance(seed):
+        _check_column_permutation(seed)
+
+except ImportError:
+    # hypothesis absent (CI installs it): pinned seed grid instead.
+    @pytest.mark.parametrize("seed", [0, 3, 7, 12, 31])
+    def test_apply_state_column_permutation_equivariance(seed):
+        _check_column_permutation(seed)
+
+
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+@pytest.mark.parametrize("name", ("megopolis", "metropolis"))
+def test_apply_rows_rejects_short_key_array(name, backend, w_bank, p_bank, base_key):
+    """A keys array shorter than the bank must raise — the fused bank
+    kernels size their grid from weights and would otherwise read
+    out-of-bounds seeds."""
+    r = _build(name, backend)
+    keys = split_batch_keys(base_key, BATCH - 1)
+    with pytest.raises(ValueError, match="one key per row"):
+        r.apply_rows(keys, w_bank, p_bank)
+
+
+# ------------------------------------------------------- 4. residency cap
+def test_apply_state_residency_cap(base_key):
+    d = MAX_VMEM_STATE // N // STATE_PLANE_TILE * STATE_PLANE_TILE + STATE_PLANE_TILE
+    p = jnp.zeros((N, d), jnp.float32)
+    w = jnp.ones((N,), jnp.float32)
+    r = _build("megopolis", "pallas_interpret")
+    with pytest.raises(ValueError, match="VMEM"):
+        r.apply(base_key, w, p)
+
+
+# ----------------------------------------------------------- 5. consumers
+def test_resample_paths_contain_no_take():
+    """The acceptance gate of the fused data path: no ``jnp.take`` on the
+    resample path of the kernel-backend consumers."""
+    from repro.ais import sampler as ais_sampler
+    from repro.pf import filter as pf_filter
+
+    assert "jnp.take" not in inspect.getsource(pf_filter.ParticleFilter.step)
+    assert "jnp.take" not in inspect.getsource(pf_filter.run_filter_bank)
+    assert "jnp.take" not in inspect.getsource(ais_sampler.run_smc_sampler)
+    assert "jnp.take" not in inspect.getsource(ais_sampler.run_smc_sampler_bank)
+
+
+def test_memmodel_fused_beats_unfused():
+    from repro.launch.memmodel import resample_step_bytes
+
+    for n in (1 << 10, 1 << 16, 1 << 20):
+        for d in (1, 4, 32):
+            fused = resample_step_bytes(n, d, fused=True)
+            unfused = resample_step_bytes(n, d, fused=False)
+            assert fused["total"] < unfused["total"]
+            assert unfused["total"] - fused["total"] == n * 4  # the index vector
+
+
+def test_filter_step_is_fused_and_matches_reference(base_key):
+    """End-to-end: a ParticleFilter on the pallas_interpret backend steps
+    through apply and equals the manual index+take composition."""
+    from repro.core.spec import MegopolisSpec
+    from repro.pf import ParticleFilter, ungm
+
+    pf = ParticleFilter(
+        model=ungm(),
+        num_particles=TILE,
+        resampler=MegopolisSpec(num_iters=ITERS, segment=1024,
+                                backend="pallas_interpret"),
+    )
+    particles = pf.model.init(jax.random.PRNGKey(30), TILE)
+    z = jnp.float32(0.3)
+    x_bar, est, w = pf.step(base_key, particles, z, jnp.float32(1.0))
+    # replay the step manually through the index path
+    k_pred, k_res = jax.random.split(base_key)
+    x = pf.model.transition(k_pred, particles, jnp.float32(1.0))
+    w_ref = pf.model.likelihood(z, x, jnp.float32(1.0))
+    anc = pf._built(k_res, w_ref)
+    _assert_equal(x_bar, jnp.take(x, anc, axis=0))
+    _assert_equal(w, w_ref)
