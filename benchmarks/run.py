@@ -33,9 +33,11 @@ SUITES = [
     ("smc", "benchmarks.smc_decode_bench", ["--particles", "32", "--new-tokens", "8",
                                             "--archs", "qwen3-0.6b"]),
     ("fused_gather", "benchmarks.fused_gather_bench", ["--quick"]),
+    ("step", "benchmarks.step_bench", ["--quick"]),
 ]
 # Suites whose CLI has no --full flag (or whose scale is pinned above).
-_NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais", "fused_gather")
+_NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais",
+            "fused_gather", "step")
 
 
 def _check_suite_names(names, flag: str):
@@ -94,6 +96,27 @@ def _fused_gather_stats():
     }
 
 
+def _step_stats():
+    """Fold the fused-step suite's rows into the trajectory JSON (written
+    by benchmarks.step_bench as BENCH_step.json)."""
+    from benchmarks.common import OUT_DIR
+
+    path = os.path.join(OUT_DIR, "BENCH_step.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        "config": payload.get("config"),
+        "cells": [
+            {k: r[k] for k in ("family", "backend", "step_ms", "composed_ms",
+                               "speedup", "launches_step", "launches_composed",
+                               "parity", "perf_gated", "identical_program")}
+            for r in payload.get("rows", [])
+        ],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -145,6 +168,9 @@ def main(argv=None):
         fused = _fused_gather_stats() if "fused_gather" in suite_times else None
         if fused:
             payload["fused_gather"] = fused
+        step = _step_stats() if "step" in suite_times else None
+        if step:
+            payload["step"] = step
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"\nwrote trajectory {path}")

@@ -1,0 +1,251 @@
+"""Fused SMC step (`Resampler.step`) vs the composed chain (DESIGN.md §12).
+
+    PYTHONPATH=src:. python benchmarks/step_bench.py [--quick|--smoke]
+
+Three result surfaces per (family × backend) cell:
+
+  * **wall time** — ``step`` vs the normalise → ESS → branch → ``apply``
+    composition, both jitted, chained under ``lax.scan`` (the consumer
+    pattern).  On reference/xla ``step`` IS the composition (bit-identical
+    oracle) so those cells pin "no slower" STRUCTURALLY — identical jaxpr
+    ⇒ identical program ⇒ identical wall time, deterministically.
+    ``pallas_interpret`` walls are reported but not perf-gated (interpret
+    mode is a Python-level simulator; see EXPERIMENTS.md §Fused-gather).
+  * **launch count** — pallas_call count in the traced step vs the traced
+    composition on the pallas backend: the tentpole claim is step == 1 for
+    EVERY family, vs 1 (Metropolis family) / 2 (prefix kinds) / 4
+    (residual) kernel launches plus host normalise/ESS/branch glue for the
+    composition.
+  * **parity + HBM model** — every cell asserts ``step`` == composition
+    bit-exactly (the CI perf-smoke gate: fails on mismatch, never on
+    timing), and ``launch/memmodel.smc_step_bytes`` reports the analytic
+    per-step byte win (8N/row: normalised weights + ancestors).
+
+Writes ``out/step_bench.csv`` + ``out/BENCH_step.json`` (folded into
+``benchmarks/run.py --json`` trajectories).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR, ensure_out, print_table, write_csv
+from repro.core.metrics import (
+    effective_sample_size,
+    log_mean_weight,
+    normalise_log_weights,
+)
+from repro.core.spec import spec_for_backend
+from repro.launch.memmodel import smc_step_bytes
+
+FAMILIES = (
+    "megopolis",
+    "metropolis",
+    "metropolis_c1",
+    "metropolis_c2",
+    "rejection",
+    "multinomial",
+    "systematic",
+    "improved_systematic",
+    "stratified",
+    "residual",
+)
+BACKENDS = ("reference", "xla", "pallas_interpret")
+# CPU cells held to the structural no-slower gate: step IS the composition.
+TIMED_GATE_BACKENDS = ("reference", "xla")
+THRESHOLD = 0.5
+
+
+def _composed(r, key, log_w, particles, thr):
+    n = log_w.shape[-1]
+    ess_n = effective_sample_size(log_w) / jnp.float32(n)
+    do = ess_n < thr
+    w = normalise_log_weights(log_w)
+    p_res, a_res = r.apply(key, w, particles)
+    ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
+    p_out = jnp.where(do, p_res, particles)
+    incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
+    return p_out, ancestors, ess_n, incr
+
+
+def _count_pallas_calls(jaxpr):
+    from jax.extend import core as jex_core
+
+    def of_param(v):
+        if isinstance(v, jex_core.ClosedJaxpr):
+            return _count_pallas_calls(v.jaxpr)
+        if isinstance(v, jex_core.Jaxpr):
+            return _count_pallas_calls(v)
+        if isinstance(v, (tuple, list)):
+            return sum(of_param(x) for x in v)
+        return 0
+
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        total += sum(of_param(v) for v in eqn.params.values())
+    return total
+
+
+def _time_pair(fused, unfused, *args, repeats: int):
+    """Best-of-``repeats`` wall seconds, interleaved with alternating order
+    (same harness as fused_gather_bench: fixed order skews ~10% on this
+    CPU from cache position bias)."""
+    for _ in range(2):
+        jax.block_until_ready(fused(*args))
+        jax.block_until_ready(unfused(*args))
+    t_f, t_u = [], []
+    for i in range(repeats):
+        first, second = (fused, unfused) if i % 2 == 0 else (unfused, fused)
+        t0 = time.perf_counter()
+        jax.block_until_ready(first(*args))
+        t1 = time.perf_counter()
+        jax.block_until_ready(second(*args))
+        t2 = time.perf_counter()
+        if i % 2 == 0:
+            t_f.append(t1 - t0)
+            t_u.append(t2 - t1)
+        else:
+            t_u.append(t1 - t0)
+            t_f.append(t2 - t1)
+    return float(np.min(t_f)), float(np.min(t_u))
+
+
+def _cell(name, backend, *, n, state_dim, num_iters, max_iters, repeats,
+          chain: int):
+    r = spec_for_backend(name, backend, num_iters=num_iters,
+                         max_iters=max_iters).build()
+    key = jax.random.PRNGKey(7)
+    lw = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 2.0
+    p = jax.random.normal(jax.random.PRNGKey(2), (n, state_dim))
+    keys = jax.random.split(key, chain)
+
+    # Timed surface: a chain of full SMC steps under one jitted lax.scan,
+    # each step's particles feeding the next (the filter/sampler pattern).
+    def fused_chain(p0):
+        return jax.lax.scan(
+            lambda q, k: (r.step(k, lw, q, THRESHOLD)[0], None), p0, keys
+        )[0]
+
+    def composed_chain(p0):
+        return jax.lax.scan(
+            lambda q, k: (_composed(r, k, lw, q, THRESHOLD)[0], None), p0, keys
+        )[0]
+
+    fused = jax.jit(fused_chain)
+    composed = jax.jit(composed_chain)
+
+    # Parity first — the CI gate (bit-exact, all four outputs).
+    got = r.step(key, lw, p, THRESHOLD)
+    want = _composed(r, key, lw, p, THRESHOLD)
+    for g, e in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+    # Structural no-slower on the composition backends: identical jaxpr ⇒
+    # identical program (wall clocks on this shared CPU box swing ±30%, so
+    # a timing gate would only measure the scheduler).
+    identical_program = False
+    if backend in TIMED_GATE_BACKENDS:
+        identical_program = str(jax.make_jaxpr(fused_chain)(p)) == str(
+            jax.make_jaxpr(composed_chain)(p)
+        )
+
+    # Launch counts on the kernel backend — the tentpole claim.
+    launches_step = launches_composed = None
+    if backend == "pallas_interpret":
+        launches_step = _count_pallas_calls(
+            jax.make_jaxpr(lambda k: r.step(k, lw, p, THRESHOLD))(key).jaxpr
+        )
+        launches_composed = _count_pallas_calls(
+            jax.make_jaxpr(lambda k: _composed(r, k, lw, p, THRESHOLD))(key).jaxpr
+        )
+
+    t_fused, t_composed = _time_pair(fused, composed, p, repeats=repeats)
+    t_fused, t_composed = t_fused / chain, t_composed / chain
+    return {
+        "family": name,
+        "backend": backend,
+        "n": n,
+        "step_ms": t_fused * 1e3,
+        "composed_ms": t_composed * 1e3,
+        "speedup": t_composed / t_fused,
+        "launches_step": launches_step,
+        "launches_composed": launches_composed,
+        "model_bytes_step": smc_step_bytes(n, state_dim, fused=True)["total"],
+        "model_bytes_composed": smc_step_bytes(n, state_dim, fused=False)["total"],
+        "parity": True,
+        "perf_gated": backend in TIMED_GATE_BACKENDS,
+        "identical_program": identical_program,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI scale")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, parity gate only (the perf-smoke CI job)")
+    ap.add_argument("--n", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        n, num_iters, max_iters, repeats, chain = 2048, 4, 16, 1, 2
+    elif args.quick:
+        n, num_iters, max_iters, repeats, chain = 4096, 16, 32, 21, 8
+    else:
+        n, num_iters, max_iters, repeats, chain = 8192, 16, 64, 25, 12
+    if args.n:
+        n = args.n
+
+    rows = []
+    for name in FAMILIES:
+        for backend in BACKENDS:
+            rows.append(_cell(name, backend, n=n, state_dim=4,
+                              num_iters=num_iters, max_iters=max_iters,
+                              repeats=repeats, chain=chain))
+            msg = (f"[step] {name}/{backend}: step {rows[-1]['step_ms']:.2f}ms "
+                   f"composed {rows[-1]['composed_ms']:.2f}ms")
+            if rows[-1]["launches_step"] is not None:
+                msg += (f" launches {rows[-1]['launches_composed']}"
+                        f"→{rows[-1]['launches_step']}")
+            print(msg)
+
+    print_table(rows, cols=["family", "backend", "step_ms", "composed_ms",
+                            "speedup", "launches_step", "launches_composed"])
+    write_csv("step_bench.csv", rows)
+    ensure_out()
+    with open(os.path.join(OUT_DIR, "BENCH_step.json"), "w") as f:
+        json.dump({"config": {"n": n, "num_iters": num_iters,
+                              "max_iters": max_iters, "repeats": repeats,
+                              "chain": chain, "threshold": THRESHOLD,
+                              "smoke": args.smoke},
+                   "rows": rows}, f, indent=2)
+
+    # The single-launch gate on every kernel cell, and the structural
+    # no-slower gate on every composition cell — both deterministic, so
+    # they run in --smoke too.
+    bad_launch = [r for r in rows if r["launches_step"] not in (None, 1)]
+    if bad_launch:
+        print("FAILED single-launch gate:",
+              [(r["family"], r["launches_step"]) for r in bad_launch])
+        raise SystemExit(1)
+    not_identical = [r for r in rows
+                     if r["perf_gated"] and not r["identical_program"]]
+    if not_identical:
+        print("FAILED structural no-slower gate:",
+              [(r["family"], r["backend"]) for r in not_identical])
+        raise SystemExit(1)
+    n_kernel = sum(1 for r in rows if r["launches_step"] == 1)
+    print(f"step_bench: all parity cells bit-exact; {n_kernel} kernel cells "
+          "single-launch; all composition cells identical-program")
+
+
+if __name__ == "__main__":
+    main()

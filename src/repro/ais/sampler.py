@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.ais.moves import MOVES, TARGET_ACCEPT, adapt_step_size
 from repro.ais.schedule import geometric_schedule, next_temperature
 from repro.ais.targets import Target
-from repro.core.metrics import effective_sample_size
+from repro.core.metrics import log_mean_weight
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import ResamplerSpec, coerce_spec
 
@@ -119,9 +119,13 @@ def _call(fn, *args, theta=None):
 
 def _logz_increment(log_w: jnp.ndarray, n: int) -> jnp.ndarray:
     """log( (1/N) Σ exp(log_w) ) over the particle axis — the normalising
-    constant absorbed at each resample (and at the end).  Shared by the
-    single and bank paths so the two stay bit-identical."""
-    return jax.nn.logsumexp(log_w, axis=-1) - jnp.log(jnp.float32(n))
+    constant absorbed at each resample (and at the end).  Delegates to the
+    shared ``repro.core.metrics.log_mean_weight`` helper — the SAME
+    arithmetic the fused ``Resampler.step`` kernels latch on-chip, so the
+    in-scan increments (which now come from ``step``) and this final
+    absorption agree bit-for-bit on every backend."""
+    del n  # the particle axis length is read off log_w itself
+    return log_mean_weight(log_w, axis=-1)
 
 
 def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
@@ -162,28 +166,17 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
         else:
             beta = beta_in
         log_w = log_w + (beta - beta_prev) * delta
-        ess_norm = effective_sample_size(log_w) / n
         # 2. ESS-triggered resample (absorbs the running logZ increment):
-        #    the FUSED resample+gather path (Resampler.apply, DESIGN.md §11)
-        #    — no ancestor round-trip between selection and state copy
-        def do(args):
-            x, log_w, log_z = args
-            w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
-            x_res, _ = resampler.apply(k_res, w, x)
-            return (
-                x_res,
-                jnp.zeros_like(log_w),
-                log_z + _logz_increment(log_w, n),
-                jnp.int32(1),
-            )
-
-        def dont(args):
-            x, log_w, log_z = args
-            return x, log_w, log_z, jnp.int32(0)
-
-        x, log_w, log_z, did = jax.lax.cond(
-            ess_norm < cfg.ess_threshold, do, dont, (x, log_w, log_z)
-        )
+        #    the FUSED step (Resampler.step, DESIGN.md §12) — normalise,
+        #    ESS, branch, resample+gather and the logZ increment in ONE
+        #    launch on kernel backends; no host-side cond around the
+        #    resampler any more.  The no-op branch returns x bit-identical
+        #    with incr = 0, so log_z/log_w advance exactly as the old
+        #    host-branched composition did.
+        x, _, ess_norm, incr = resampler.step(k_res, log_w, x, cfg.ess_threshold)
+        did = (ess_norm < cfg.ess_threshold).astype(jnp.int32)
+        log_z = log_z + incr
+        log_w = jnp.where(did.astype(bool), jnp.zeros_like(log_w), log_w)
         # 3. rejuvenate against π_β, then adapt the step size
         def log_prob(y):
             return (1.0 - beta) * _call(target.log_base, y, theta=theta) + (
@@ -295,15 +288,15 @@ def run_smc_sampler_bank(
         else:
             beta = jnp.full((num_s,), beta_in, jnp.float32)
         log_w = log_w + (beta - beta_prev)[:, None] * delta
-        ess_norm = effective_sample_size(log_w, axis=-1) / n
+        # 2. ONE batched FUSED step launch (step_rows, DESIGN.md §12): each
+        #    row takes its OWN resample-or-not branch on-chip, so the
+        #    per-row where-selects of the old apply_rows composition are
+        #    gone — row b is bit-identical to the single path's step.
+        xs, _, ess_norm, incr = resampler.step_rows(
+            k_res, log_w, xs, cfg.ess_threshold
+        )
         trigger = ess_norm < cfg.ess_threshold
-        # 2. ONE batched FUSED resample+gather launch (apply_rows, DESIGN.md
-        #    §11); per-row select keeps the single path's lax.cond semantics
-        #    (untaken rows keep their state)
-        w = jnp.exp(log_w - jnp.max(log_w, axis=-1, keepdims=True))
-        x_res, _ = resampler.apply_rows(k_res, w, xs)
-        xs = jnp.where(trigger[:, None, None], x_res, xs)
-        log_z = jnp.where(trigger, log_z + _logz_increment(log_w, n), log_z)
+        log_z = log_z + incr
         log_w = jnp.where(trigger[:, None], 0.0, log_w)
         # 3. rejuvenate + adapt, per row
         def move_one(k, x, sz, b, th):

@@ -10,6 +10,36 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def _guarded_shift(log_w: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Shift-by-max stabiliser, guarded against an all-``-inf`` row: a
+    non-finite max would turn the shift into ``-inf - -inf = nan``.  For
+    finite maxima the guard is a bitwise no-op (``where`` returns the same
+    value), so every consumer keeps its exact pre-guard arithmetic."""
+    m = jnp.max(log_w, axis=axis, keepdims=True)
+    return jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+
+
+def normalise_log_weights(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Shift-by-max linear weights ``exp(log_w - max(log_w))`` — THE
+    normalisation every log-weight consumer shares (filter, AIS sampler,
+    SMC decoding, and the fused ``Resampler.step`` composition), so the
+    fused kernels and the host path can never disagree on the weights a
+    resampler sees.  The result is in [0, 1] with at least one exact 1.0
+    for finite inputs; degenerate rows (all ``-inf``) come back all-zero
+    rather than nan."""
+    return jnp.exp(log_w - _guarded_shift(log_w, axis))
+
+
+def log_weights_from_linear(w: jnp.ndarray) -> jnp.ndarray:
+    """Log-weights from unnormalised linear weights, floored at 1e-30.
+
+    The floor must stay in float32 normal range: subnormals (e.g. 1e-38)
+    flush to zero under XLA and the log would reintroduce ``-inf``.
+    Centralised from the ad-hoc filter-diagnostic guard so filter/AIS/
+    decode all floor identically."""
+    return jnp.log(jnp.maximum(w, 1e-30))
+
+
 def effective_sample_size(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     """ESS = (Σw)² / Σw² from log-weights, shift-by-max stabilised.
 
@@ -18,11 +48,29 @@ def effective_sample_size(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     be normalised — ESS depends only on ratios, the same property the
     Metropolis-family resamplers rely on.  The multi-host psum form lives
     in ``repro.core.distributed.effective_sample_size``.
+
+    The fused step kernels (``kernels/common.step_stats``) re-derive this
+    decomposition term for term over the same flat [N] reduction shape, so
+    the on-chip ESS is bit-identical to this host value.
     """
-    w = jnp.exp(log_w - jnp.max(log_w, axis=axis, keepdims=True))
+    w = normalise_log_weights(log_w, axis=axis)
     s1 = jnp.sum(w, axis=axis)
     s2 = jnp.sum(w * w, axis=axis)
     return jnp.square(s1) / jnp.maximum(s2, 1e-30)
+
+
+def log_mean_weight(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """``log(mean(exp(log_w)))`` via the same shift-by-max decomposition the
+    fused step kernels run on-chip: ``m + log(Σ exp(log_w - m)) - log(N)``.
+
+    This is the per-step log-evidence increment of SMC (the
+    ``logsumexp(log_w) - log(N)`` of the AIS sampler, re-expressed so host
+    and kernel share one exact f32 formula — a fused ``step`` adds a
+    bit-identical increment)."""
+    m = _guarded_shift(log_w, axis)
+    s1 = jnp.sum(jnp.exp(log_w - m), axis=axis)
+    n = log_w.shape[axis]
+    return (jnp.squeeze(m, axis=axis) + jnp.log(s1)) - jnp.log(jnp.float32(n))
 
 
 def offspring_counts(ancestors: jnp.ndarray, n: int) -> jnp.ndarray:

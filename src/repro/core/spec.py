@@ -52,6 +52,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.iterations import select_iterations
+from repro.core.metrics import (
+    effective_sample_size,
+    log_mean_weight,
+    normalise_log_weights,
+)
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.resamplers.megopolis import DEFAULT_SEGMENT, megopolis, megopolis_batch
 from repro.core.resamplers.metropolis import (
@@ -133,6 +138,8 @@ class Resampler:
         r.apply(key, weights, particles)        # -> (particles', ancestors)
         r.apply_batch(key, weights, particles)  # bank form of apply
         r.apply_rows(keys, weights, particles)  # explicit per-row keys
+        r.step(key, log_w, particles, ess_threshold)   # fused SMC step
+        r.step_rows(keys, log_w, particles, ess_threshold)  # bank form
         r.name, r.spec             # registry name / originating spec
 
     ``batch`` follows the DESIGN.md §4 contract: the key is split once
@@ -149,6 +156,18 @@ class Resampler:
     round-trips through HBM between selection and gather.  Every form
     returns ``(particles', ancestors)`` with ancestors bit-identical to the
     corresponding index-only call.
+
+    ``step`` is the fused SMC step (DESIGN.md §12): normalise log-weights,
+    compute ESS, take the resample-or-not branch, and copy state, returning
+    ``(particles', ancestors, ess_norm, log_evidence_incr)``.  The resample
+    branch (``ess_norm < ess_threshold``, strict) is bit-identical to
+    ``apply(key, normalise_log_weights(log_w), particles)``; the no-op
+    branch returns the particles bit-identical with identity ancestors and
+    ``incr = 0``.  Randomness is consumed unconditionally in BOTH branches
+    (where-select, not cond), so key chains advance identically whether or
+    not a resample fires.  On the pallas backends the whole step is ONE
+    kernel launch; on reference/xla it IS the normalise → ESS → branch →
+    ``apply`` composition (the bit-identical oracle).
     """
 
     def __init__(
@@ -160,6 +179,8 @@ class Resampler:
         apply: Callable = None,
         apply_batch: Callable = None,
         apply_rows: Callable = None,
+        step: Callable = None,
+        step_rows: Callable = None,
     ):
         self.spec = spec
         self.name = spec.name
@@ -192,6 +213,35 @@ class Resampler:
         self._apply = apply
         self._apply_batch = apply_batch
         self._apply_rows = apply_rows
+
+        # Composed step default: the SAME (possibly fused) apply callable,
+        # wrapped in the normalise → ESS → branch glue.  Not re-jitted, for
+        # the same reason as the apply defaults above — this composition is
+        # the oracle the fused step kernels are gated against.
+        if step is None:
+            apply_fn = apply
+
+            def step(key, log_w, particles, ess_threshold):
+                n = log_w.shape[-1]
+                ess_n = effective_sample_size(log_w) / jnp.float32(n)
+                do = ess_n < ess_threshold
+                w = normalise_log_weights(log_w)
+                p_res, a_res = apply_fn(key, w, particles)
+                ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
+                p_out = jnp.where(do, p_res, particles)
+                incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
+                return p_out, ancestors, ess_n, incr
+
+        if step_rows is None:
+            step_fn = step
+
+            def step_rows(keys, log_w, particles, ess_threshold):
+                return jax.vmap(step_fn, in_axes=(0, 0, 0, None))(
+                    keys, log_w, particles, ess_threshold
+                )
+
+        self._step = step
+        self._step_rows = step_rows
         self.__name__ = f"{self.name}_resampler"
         self.__qualname__ = self.__name__
 
@@ -275,6 +325,54 @@ class Resampler:
         self._check_state(weights, particles, "apply_rows", lead=2)
         return self._apply_rows(keys, weights, particles)
 
+    def step(
+        self,
+        key: jax.Array,
+        log_weights: jnp.ndarray,
+        particles: jnp.ndarray,
+        ess_threshold,
+    ):
+        """Fused SMC step over one population (DESIGN.md §12): returns
+        ``(particles', ancestors, ess_norm, log_evidence_incr)``.  Resamples
+        iff ``ess_norm < ess_threshold`` (strict: a threshold of 0 never
+        fires, a population exactly at threshold does not fire); the
+        resample branch is bit-identical to ``self.apply(key,
+        normalise_log_weights(log_weights), particles)``, the no-op branch
+        returns ``particles`` unchanged with identity ancestors and
+        ``incr = 0``.  The key is consumed either way."""
+        if log_weights.ndim != 1:
+            raise ValueError(
+                f"{self.name}.step: expected log_weights[N]; got shape "
+                f"{log_weights.shape} (use .step_rows for log_weights[B, N])"
+            )
+        self._check_state(log_weights, particles, "step")
+        return self._step(key, log_weights, particles, ess_threshold)
+
+    def step_rows(
+        self,
+        keys: jax.Array,
+        log_weights: jnp.ndarray,
+        particles: jnp.ndarray,
+        ess_threshold,
+    ):
+        """``step`` over explicit per-row keys (the filter-bank path): row
+        ``b`` is bit-identical to ``self.step(keys[b], log_weights[b],
+        particles[b], ess_threshold)`` — each row takes its OWN branch.  On
+        kernel backends with a leading-batch-grid step kernel (Megopolis,
+        Metropolis, rejection) this is ONE launch."""
+        if log_weights.ndim != 2:
+            raise ValueError(
+                f"{self.name}.step_rows: expected log_weights[B, N]; got shape "
+                f"{log_weights.shape}"
+            )
+        if keys.shape[0] != log_weights.shape[0]:
+            raise ValueError(
+                f"{self.name}.step_rows: expected one key per row; got "
+                f"{keys.shape[0]} keys for log_weights[{log_weights.shape[0]}, ...]"
+            )
+        self._check_state(log_weights, particles, "step_rows", lead=2)
+        return self._step_rows(keys, log_weights, particles, ess_threshold)
+
     def __repr__(self):
         return f"Resampler({self.spec!r})"
 
@@ -357,6 +455,25 @@ def _per_row_auto_apply(spec, apply_single, *, explicit_keys: bool):
     return fn
 
 
+def _per_row_auto_step(spec, step_single):
+    """The ``step`` analogue of ``_per_row_auto_apply``: eq. (3) resolves
+    per row from each row's normalised weights, so 'auto' bank steps launch
+    row-by-row over concrete log-weights; inside jit pass an int
+    ``num_iters``."""
+
+    def fn(keys, log_w, p, thr):
+        if _is_traced(log_w):
+            raise TypeError(
+                f"{spec.name}: num_iters='auto' under a pallas backend needs "
+                "concrete log-weights (eq. 3 resolves per row); pass an int "
+                "num_iters to use step_rows inside jit."
+            )
+        outs = [step_single(keys[b], log_w[b], p[b], thr) for b in range(log_w.shape[0])]
+        return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+    return fn
+
+
 def _maybe_jit(single, batch, backend: str):
     """backend='xla' is the reference algorithm jit-wrapped (bit-identical)."""
     if backend == "xla":
@@ -410,6 +527,8 @@ class MegopolisSpec(ResamplerSpec):
                 megopolis_tpu_apply_batch,
                 megopolis_tpu_apply_rows,
                 megopolis_tpu_batch,
+                megopolis_tpu_step,
+                megopolis_tpu_step_rows,
             )
 
             interpret = self.backend == "pallas_interpret"
@@ -432,9 +551,18 @@ class MegopolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
                 return megopolis_tpu_apply_batch(key, w, p, b, interpret=interpret)
 
+            def step(key, lw, p, thr):
+                # eq. (3) sees the SAME normalised weights the composed
+                # path hands to apply — fused/composed 'auto' agree on B.
+                b = _resolve_iters_static(
+                    self.num_iters, normalise_log_weights(lw), self.name
+                )
+                return megopolis_tpu_step(key, lw, p, b, thr, interpret=interpret)
+
             if self.num_iters == AUTO:
                 # batch_rows' per-row contract needs eq. (3) PER ROW.
                 apply_rows = _per_row_auto_apply(self, apply, explicit_keys=True)
+                step_rows = _per_row_auto_step(self, step)
             else:
 
                 def apply_rows(keys, w, p):
@@ -442,8 +570,14 @@ class MegopolisSpec(ResamplerSpec):
                         keys, w, p, self.num_iters, interpret=interpret
                     )
 
+                def step_rows(keys, lw, p, thr):
+                    return megopolis_tpu_step_rows(
+                        keys, lw, p, self.num_iters, thr, interpret=interpret
+                    )
+
             return Resampler(self, single, batch, apply=apply,
-                             apply_batch=apply_batch, apply_rows=apply_rows)
+                             apply_batch=apply_batch, apply_rows=apply_rows,
+                             step=step, step_rows=step_rows)
 
         seg = self.segment
 
@@ -504,6 +638,8 @@ class MetropolisSpec(ResamplerSpec):
                 metropolis_tpu_apply_batch,
                 metropolis_tpu_apply_rows,
                 metropolis_tpu_batch,
+                metropolis_tpu_step,
+                metropolis_tpu_step_rows,
             )
 
             interpret = self.backend == "pallas_interpret"
@@ -516,10 +652,17 @@ class MetropolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
                 return metropolis_tpu_apply(key, w, p, b, interpret=interpret)
 
+            def step(key, lw, p, thr):
+                b = _resolve_iters_static(
+                    self.num_iters, normalise_log_weights(lw), self.name
+                )
+                return metropolis_tpu_step(key, lw, p, b, thr, interpret=interpret)
+
             if self.num_iters == AUTO:
                 batch = _per_row_auto_batch(self, single)
                 apply_batch = _per_row_auto_apply(self, apply, explicit_keys=False)
                 apply_rows = _per_row_auto_apply(self, apply, explicit_keys=True)
+                step_rows = _per_row_auto_step(self, step)
             else:
 
                 def batch(key, w):
@@ -540,8 +683,14 @@ class MetropolisSpec(ResamplerSpec):
                         keys, w, p, self.num_iters, interpret=interpret
                     )
 
+                def step_rows(keys, lw, p, thr):
+                    return metropolis_tpu_step_rows(
+                        keys, lw, p, self.num_iters, thr, interpret=interpret
+                    )
+
             return Resampler(self, single, batch, apply=apply,
-                             apply_batch=apply_batch, apply_rows=apply_rows)
+                             apply_batch=apply_batch, apply_rows=apply_rows,
+                             step=step, step_rows=step_rows)
         return _metropolis_family_build(self, metropolis, {})
 
 
@@ -557,13 +706,13 @@ def _check_kernel_partition(spec, cls: str):
         )
 
 
-def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn) -> Resampler:
+def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn, tpu_step_fn) -> Resampler:
     """Shared pallas build for the segment-local variants: single kernel
     call, batch via lax.map over split keys (row b == single with key b —
     the same §4 contract the reference lane derives by vmap).  'auto'
     batches resolve eq. (3) per row (see ``_per_row_auto_batch``: lax.map
     would hand ``single`` traced rows and a bank-level B would be wrong).
-    The fused ``apply`` forms compose the same way: C1/C2 have no
+    The fused ``apply``/``step`` forms compose the same way: C1/C2 have no
     leading-batch-grid kernel, so the bank forms map the fused single."""
 
     interpret = spec.backend == "pallas_interpret"
@@ -576,10 +725,17 @@ def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn) -> Resampler:
         b = _resolve_iters_static(spec.num_iters, w, spec.name)
         return tpu_apply_fn(key, w, p, b, interpret=interpret)
 
+    def step(key, lw, p, thr):
+        b = _resolve_iters_static(
+            spec.num_iters, normalise_log_weights(lw), spec.name
+        )
+        return tpu_step_fn(key, lw, p, b, thr, interpret=interpret)
+
     if spec.num_iters == AUTO:
         batch = _per_row_auto_batch(spec, single)
         apply_batch = _per_row_auto_apply(spec, apply, explicit_keys=False)
         apply_rows = _per_row_auto_apply(spec, apply, explicit_keys=True)
+        step_rows = _per_row_auto_step(spec, step)
     else:
 
         def batch(key, w):
@@ -593,8 +749,14 @@ def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn) -> Resampler:
         def apply_rows(keys, w, p):
             return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
 
+        def step_rows(keys, lw, p, thr):
+            return jax.lax.map(
+                lambda klp: step(klp[0], klp[1], klp[2], thr), (keys, lw, p)
+            )
+
     return Resampler(spec, single, batch, apply=apply,
-                     apply_batch=apply_batch, apply_rows=apply_rows)
+                     apply_batch=apply_batch, apply_rows=apply_rows,
+                     step=step, step_rows=step_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -625,9 +787,13 @@ class MetropolisC1Spec(ResamplerSpec):
             from repro.kernels.metropolis.ops import (
                 metropolis_c1_tpu,
                 metropolis_c1_tpu_apply,
+                metropolis_c1_tpu_step,
             )
 
-            return _c1c2_pallas_build(self, metropolis_c1_tpu, metropolis_c1_tpu_apply)
+            return _c1c2_pallas_build(
+                self, metropolis_c1_tpu, metropolis_c1_tpu_apply,
+                metropolis_c1_tpu_step,
+            )
         return _metropolis_family_build(
             self,
             metropolis_c1,
@@ -662,9 +828,13 @@ class MetropolisC2Spec(ResamplerSpec):
             from repro.kernels.metropolis.ops import (
                 metropolis_c2_tpu,
                 metropolis_c2_tpu_apply,
+                metropolis_c2_tpu_step,
             )
 
-            return _c1c2_pallas_build(self, metropolis_c2_tpu, metropolis_c2_tpu_apply)
+            return _c1c2_pallas_build(
+                self, metropolis_c2_tpu, metropolis_c2_tpu_apply,
+                metropolis_c2_tpu_step,
+            )
         return _metropolis_family_build(
             self,
             metropolis_c2,
@@ -693,6 +863,8 @@ class RejectionSpec(ResamplerSpec):
                 rejection_tpu_apply_batch,
                 rejection_tpu_apply_rows,
                 rejection_tpu_batch,
+                rejection_tpu_step,
+                rejection_tpu_step_rows,
             )
 
             interpret = self.backend == "pallas_interpret"
@@ -720,8 +892,19 @@ class RejectionSpec(ResamplerSpec):
                     keys, w, p, max_iters=self.max_iters, interpret=interpret
                 )
 
+            def step(key, lw, p, thr):
+                return rejection_tpu_step(
+                    key, lw, p, thr, max_iters=self.max_iters, interpret=interpret
+                )
+
+            def step_rows(keys, lw, p, thr):
+                return rejection_tpu_step_rows(
+                    keys, lw, p, thr, max_iters=self.max_iters, interpret=interpret
+                )
+
             return Resampler(self, single, batch, apply=apply,
-                             apply_batch=apply_batch, apply_rows=apply_rows)
+                             apply_batch=apply_batch, apply_rows=apply_rows,
+                             step=step, step_rows=step_rows)
 
         def single(key, w):
             return rejection(key, w, max_iters=self.max_iters)
@@ -768,6 +951,7 @@ class PrefixSumSpec(ResamplerSpec):
             from repro.kernels.prefix_sum.ops import (
                 prefix_resample_tpu,
                 prefix_resample_tpu_apply,
+                prefix_resample_tpu_step,
             )
 
             interpret = self.backend == "pallas_interpret"
@@ -792,8 +976,22 @@ class PrefixSumSpec(ResamplerSpec):
             def apply_rows(keys, w, p):
                 return jax.lax.map(lambda kwp: apply(*kwp), (keys, w, p))
 
+            def step(key, lw, p, thr):
+                return prefix_resample_tpu_step(
+                    key, lw, p, thr, kind, interpret=interpret
+                )
+
+            def step_rows(keys, lw, p, thr):
+                # No leading-batch-grid step kernel for this family yet:
+                # the bank form maps the single-launch step (same shape as
+                # apply_rows above).
+                return jax.lax.map(
+                    lambda klp: step(klp[0], klp[1], klp[2], thr), (keys, lw, p)
+                )
+
             return Resampler(self, single, batch, apply=apply,
-                             apply_batch=apply_batch, apply_rows=apply_rows)
+                             apply_batch=apply_batch, apply_rows=apply_rows,
+                             step=step, step_rows=step_rows)
 
         fn = _PREFIX_SUM_KINDS[self.kind]
 

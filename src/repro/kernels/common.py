@@ -162,6 +162,64 @@ def gather_state(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def step_stats(lw_flat: jnp.ndarray, n_total: int):
+    """Fused-step prelude statistics from a resident flat log-weight vector:
+    ``(m, ess_norm, log_evidence_incr)``.
+
+    Mirrors ``repro.core.metrics`` term for term — guarded shift-by-max
+    (``normalise_log_weights``), ``(Σw)²/max(Σw², 1e-30)`` over the SAME
+    flat [N] reduction shape (``effective_sample_size``), and the
+    ``m + log(Σw) - log(N)`` decomposition (``log_mean_weight``).  Kernel
+    bodies MUST reshape their (rows, 128) log-weight block to flat [N]
+    before calling: a 2-D reduction changes the f32 summation tree and
+    breaks bit-parity with the host helpers.
+    """
+    m = jnp.max(lw_flat)
+    m = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    w = jnp.exp(lw_flat - m)
+    s1 = jnp.sum(w)
+    s2 = jnp.sum(w * w)
+    ess = jnp.square(s1) / jnp.maximum(s2, 1e-30)
+    ess_norm = ess / jnp.float32(n_total)
+    incr = (m + jnp.log(s1)) - jnp.log(jnp.float32(n_total))
+    return m, ess_norm, incr
+
+
+def step_select(do, k_new: jnp.ndarray, t) -> jnp.ndarray:
+    """The fused step's on-chip resample branch for one output tile: the
+    freshly selected ancestors when the ESS trigger fired, else the identity
+    permutation (``tile_lane_ids``) that makes the state copy a no-op."""
+    return jnp.where(do, k_new, tile_lane_ids(t))
+
+
+def gather_state_full(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray:
+    """Whole-array variant of ``gather_state`` for single-grid-step kernels
+    (the prefix-sum fused step): gathers ALL rows at once, returning a full
+    ``[d_pad, rows, 128]`` block for a ``k_global`` of shape (rows, 128)."""
+    d_pad, rows, lanes = planes.shape
+    flat = planes.reshape(d_pad, rows * lanes)
+    return jnp.take(flat, k_global.reshape(-1), axis=1).reshape(d_pad, rows, lanes)
+
+
+def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who: str):
+    """Bank scaffolding for every family's fused STEP launch — the step
+    analogue of ``run_fused_bank``: residency check, per-row plane pack,
+    ``launch(lw3, planes4d) -> (k3, out4d, stats2)`` with ``stats2`` =
+    f32[B, 2] rows of (ess_norm, log_evidence_incr), per-row unpack.
+    Returns ``(particles'[B, N, ...], ancestors int32[B, N],
+    ess_norm f32[B], incr f32[B])``."""
+    import jax
+
+    bsz, n = log_weights.shape
+    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who)
+    lw3 = log_weights.reshape(bsz, n // LANES, LANES)
+    planes = jax.vmap(lambda p: pack_state_planes(p)[0])(particles)
+    k3, out, stats = launch(lw3, planes)
+    state_shape = particles.shape[2:]
+    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(out)
+    return out_rows, k3.reshape(bsz, n), stats[:, 0], stats[:, 1]
+
+
 def check_tile_aligned(n: int, who: str):
     """Raise unless N is whole (8, 128) f32 VMEM tiles."""
     if n % TILE != 0:

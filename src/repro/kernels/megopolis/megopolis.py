@@ -30,7 +30,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import TILE, flat_roll, gather_state, hash_uniform, tile_lane_ids
+from repro.kernels.common import (
+    TILE,
+    flat_roll,
+    gather_state,
+    hash_uniform,
+    step_select,
+    step_stats,
+    tile_lane_ids,
+)
 
 SUBLANES = 8
 LANES = 128
@@ -135,6 +143,88 @@ def _kernel_fused_rows(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref,
     @pl.when(b == pl.num_programs(2) - 1)
     def _copy_state():
         out_ref[0] = gather_state(planes_ref[0], k_new)
+
+
+def _kernel_step(offsets_ref, seed_ref, thr_ref, lw_own_ref, lw_cmp_ref,
+                 lw_full_ref, planes_ref, k_ref, out_ref, stats_ref,
+                 wk_ref, st_ref):
+    """Fused STEP grid step (t, b): the whole SMC resample decision on-chip.
+
+    At (0, 0) a prelude reduces the resident log-weight array to the step
+    statistics (normalisation shift m, normalised ESS, log-evidence
+    increment) and latches the resample decision ``ess_norm < threshold``
+    into SMEM scratch.  Every sweep then runs on ``exp(lw - m)`` — the SAME
+    normalised weights the composed path hands to ``apply`` — and the last
+    iteration's epilogue either commits the selected ancestors or the
+    identity permutation (state copy becomes a self-gather no-op)."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = pl.num_programs(0) * SEG
+
+    @pl.when((t == 0) & (b == 0))
+    def _prelude():
+        m, ess_norm, incr = step_stats(lw_full_ref[...].reshape(n_total), n_total)
+        do = ess_norm < thr_ref[0]
+        st_ref[0] = m
+        st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[0] = ess_norm
+        stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+
+    m = st_ref[0]
+    do = st_ref[1] > 0.5
+    w_own = jnp.exp(lw_own_ref[...] - m)
+    w_cmp = jnp.exp(lw_cmp_ref[...] - m)
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[b], seed_ref[0],
+        w_own, w_cmp, k_ref[...], wk_ref[...], n_total,
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _commit():
+        k_sel = step_select(do, k_new, t)
+        k_ref[...] = k_sel
+        out_ref[...] = gather_state(planes_ref[...], k_sel)
+
+
+def _kernel_step_rows(offsets_ref, seeds_ref, thr_ref, lw_own_ref, lw_cmp_ref,
+                      lw_full_ref, planes_ref, k_ref, out_ref, stats_ref,
+                      wk_ref, st_ref):
+    """Fused STEP over a bank, grid (s, t, b): per-row offset tables and
+    seeds as in ``_kernel_fused_rows``; the prelude re-runs at each row's
+    (t, b) == (0, 0) so the SMEM (m, do) latch and the per-row stats row
+    ``stats[s]`` are that row's own decision."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    n_total = pl.num_programs(1) * SEG
+
+    @pl.when((t == 0) & (b == 0))
+    def _prelude():
+        m, ess_norm, incr = step_stats(lw_full_ref[0].reshape(n_total), n_total)
+        do = ess_norm < thr_ref[0]
+        st_ref[0] = m
+        st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[s, 0] = ess_norm
+        stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
+
+    m = st_ref[0]
+    do = st_ref[1] > 0.5
+    w_own = jnp.exp(lw_own_ref[0] - m)
+    w_cmp = jnp.exp(lw_cmp_ref[0] - m)
+    k_new, wk_new = _sweep(
+        t, b, offsets_ref[s, b], seeds_ref[s],
+        w_own, w_cmp, k_ref[0], wk_ref[...], n_total,
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(2) - 1)
+    def _commit():
+        k_sel = step_select(do, k_new, t)
+        k_ref[0] = k_sel
+        out_ref[0] = gather_state(planes_ref[0], k_sel)
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -334,3 +424,124 @@ def megopolis_pallas_fused_rows(
         ],
         interpret=interpret,
     )(offsets2d, seeds, weights3d, weights3d, planes4d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas_step(
+    log_weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    offsets: jnp.ndarray,
+    seed: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused SMC-step pallas_call (DESIGN.md §12): normalise → ESS →
+    conditional resample → state copy, ONE launch.  ``log_weights2d``:
+    f32[R, 128] UNNORMALISED log-weights (streamed per tile AND kept
+    whole-array resident for the on-chip reduction — the step form
+    inherits the whole-weights VMEM cap); ``thr``: f32[1] ESS/N trigger.
+    Returns ``(ancestors int32[R, 128], state [d_pad, R, 128],
+    stats f32[2] = (ess_norm, log_evidence_incr))``."""
+    rows, lanes = log_weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    def _cmp_index(t, b, offs, seed, thr):
+        return (t + offs[b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # offsets + seed + f32 ESS threshold
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, o, s, r: (t, 0)),
+            pl.BlockSpec((SUBLANES, LANES), _cmp_index),
+            # whole log-weight array resident for the (0,0) stats prelude
+            pl.BlockSpec((rows, LANES), lambda t, b, o, s, r: (0, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, o, s, r: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, o, s, r: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, o, s, r: (0, t, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.SMEM((2,), jnp.float32),  # (m, do) latch across grid steps
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_step,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(offsets, seed, thr, log_weights2d, log_weights2d, log_weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def megopolis_pallas_step_rows(
+    log_weights3d: jnp.ndarray,
+    planes4d: jnp.ndarray,
+    offsets2d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused SMC-step bank launch: row s is bit-identical to
+    ``megopolis_pallas_step(log_weights3d[s], planes4d[s], offsets2d[s],
+    seeds[s:s+1], thr, ...)`` — each row takes its OWN resample decision.
+    Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128], f32[Bz, 2])``."""
+    bsz, rows, lanes = log_weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes4d.shape[1]
+    assert planes4d.shape == (bsz, d_pad, rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    def _own_index(s, t, b, offs, seeds, thr):
+        return s, t, 0
+
+    def _cmp_index(s, t, b, offs, seeds, thr):
+        return s, (t + offs[s, b] // SEG) % num_tiles, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+            pl.BlockSpec((1, SUBLANES, LANES), _cmp_index),
+            pl.BlockSpec((1, rows, LANES), lambda s, t, b, o, se, r: (s, 0, 0)),
+            pl.BlockSpec(
+                (1, d_pad, rows, LANES), lambda s, t, b, o, se, r: (s, 0, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), _own_index),
+            pl.BlockSpec(
+                (1, d_pad, SUBLANES, LANES), lambda s, t, b, o, se, r: (s, 0, t, 0)
+            ),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), log_weights3d.dtype),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_step_rows,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
+            jax.ShapeDtypeStruct((bsz, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(offsets2d, seeds, thr, log_weights3d, log_weights3d, log_weights3d, planes4d)

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 from repro.kernels.common import (
     TILE,
     check_state_resident,
+    check_vmem_resident,
     key_to_seed,
     pack_state_planes,
     run_fused_bank,
+    run_step_bank,
     state_dim_of,
     unpack_state_planes,
 )
@@ -28,6 +30,8 @@ from repro.kernels.megopolis.megopolis import (
     megopolis_pallas_batch,
     megopolis_pallas_fused,
     megopolis_pallas_fused_rows,
+    megopolis_pallas_step,
+    megopolis_pallas_step_rows,
 )
 
 
@@ -186,4 +190,84 @@ def _apply_rows_launch(weights, particles, offsets2d, seeds, *, num_iters,
             w3, planes, offsets2d, seeds, num_iters=num_iters, interpret=interpret
         ),
         weights, particles, who,
+    )
+
+
+def megopolis_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional
+    resample → state copy in ONE kernel launch.  ``log_weights``: f32[N]
+    UNNORMALISED; RNG/offset derivation is identical to
+    ``megopolis_tpu_apply`` so the resample branch is bit-identical to
+    ``apply(key, normalise_log_weights(log_weights), particles)``.
+    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    n = log_weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_step requires N % {TILE} == 0 (one f32 VMEM tile); got N={n}."
+        )
+    check_vmem_resident(n, "megopolis_tpu_step", "log-weight array",
+                        remedy="Compose Resampler.step on the reference/xla backend "
+                               "above this size.")
+    check_state_resident(n, state_dim_of(particles, n, "megopolis_tpu_step"),
+                         "megopolis_tpu_step")
+    key_off, key_seed = jax.random.split(key)
+    offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
+    seed = key_to_seed(key_seed).reshape(1)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    lw2 = log_weights.reshape(n // LANES, LANES)
+    planes, state_shape = pack_state_planes(particles)
+    k2, out, stats = megopolis_pallas_step(
+        lw2, planes, offsets, seed, thr, num_iters=num_iters, interpret=interpret
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])
+
+
+def megopolis_tpu_step_rows(
+    keys: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused SMC-step bank over EXPLICIT per-row keys: row b is
+    bit-identical to ``megopolis_tpu_step(keys[b], ...)`` — each row takes
+    its own on-chip resample decision in ONE leading-batch-grid launch.
+    Returns ``(particles'[B, N, ...], ancestors int32[B, N],
+    ess_norm f32[B], log_evidence_incr f32[B])``."""
+    if log_weights.ndim != 2:
+        raise ValueError(
+            f"megopolis_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"
+        )
+    bsz, n = log_weights.shape
+    if n % TILE != 0:
+        raise ValueError(
+            f"megopolis_tpu_step_rows requires N % {TILE} == 0; got N={n}."
+        )
+    check_vmem_resident(n, "megopolis_tpu_step_rows", "log-weight array",
+                        remedy="Compose Resampler.step_rows on the reference/xla "
+                               "backend above this size.")
+    split = jax.vmap(jax.random.split)(keys)
+    keys_off, keys_seed = split[:, 0], split[:, 1]
+    offsets2d = jax.vmap(
+        lambda k: jax.random.randint(k, (num_iters,), 0, n, dtype=jnp.int32)
+    )(keys_off)
+    seeds = key_to_seed(keys_seed)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    return run_step_bank(
+        lambda lw3, planes: megopolis_pallas_step_rows(
+            lw3, planes, offsets2d, seeds, thr, num_iters=num_iters,
+            interpret=interpret
+        ),
+        log_weights, particles, "megopolis_tpu_step_rows",
     )

@@ -40,6 +40,8 @@ from repro.kernels.common import (
     gather_state,
     hash_bits,
     hash_uniform,
+    step_select,
+    step_stats,
     tile_lane_ids,
 )
 
@@ -137,6 +139,138 @@ def _make_kernel_c2_fused(num_iters: int):
             out_ref[...] = gather_state(planes_ref[...], k_new)
 
     return _kernel_c2_fused
+
+
+def _make_kernel_step(p_at):
+    """Fused STEP kernel body shared by C1 and C2 — they differ only in how
+    the partition table is indexed (``p_at(p_ref, t, b)``).  The (0, 0)
+    prelude latches (m, do) from a NEW resident log-weight input; the
+    segment-local sweep runs on ``exp(lw - m)`` tiles and the last
+    iteration commits selection or identity."""
+
+    def _kernel_step(p_ref, seed_ref, thr_ref, lw_own_ref, lw_part_ref,
+                     lw_full_ref, planes_ref, k_ref, out_ref, stats_ref,
+                     wk_ref, st_ref):
+        t = pl.program_id(0)
+        b = pl.program_id(1)
+        n_total = pl.num_programs(0) * SEG
+
+        @pl.when((t == 0) & (b == 0))
+        def _prelude():
+            m, ess_norm, incr = step_stats(
+                lw_full_ref[...].reshape(n_total), n_total
+            )
+            do = ess_norm < thr_ref[0]
+            st_ref[0] = m
+            st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+            stats_ref[0] = ess_norm
+            stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+
+        m = st_ref[0]
+        do = st_ref[1] > 0.5
+        w_own = jnp.exp(lw_own_ref[...] - m)
+        w_part = jnp.exp(lw_part_ref[...] - m)
+        k_new, wk_new = _sweep_partition(
+            t, b, p_at(p_ref, t, b), seed_ref[0],
+            w_own, w_part, k_ref[...], wk_ref[...], n_total,
+        )
+        k_ref[...] = k_new
+        wk_ref[...] = wk_new
+
+        @pl.when(b == pl.num_programs(1) - 1)
+        def _commit():
+            k_sel = step_select(do, k_new, t)
+            k_ref[...] = k_sel
+            out_ref[...] = gather_state(planes_ref[...], k_sel)
+
+    return _kernel_step
+
+
+def _c1c2_step_call(kernel, log_weights2d, planes, partitions, seed, thr, *,
+                    num_iters, part_index, interpret):
+    """Shared fused-step pallas_call builder for the C1/C2 pair: the fused
+    apply layout plus a resident whole-log-weight input for the prelude and
+    an SMEM stats output."""
+    rows, lanes = log_weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # partitions + seed + f32 ESS threshold
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, se, r: (t, 0)),
+            pl.BlockSpec((SUBLANES, LANES), part_index),
+            pl.BlockSpec((rows, LANES), lambda t, b, p, se, r: (0, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, p, se, r: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, se, r: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, p, se, r: (0, t, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(partitions, seed, thr, log_weights2d, log_weights2d, log_weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c1_pallas_step(
+    log_weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused C1 SMC step: normalise → ESS → conditional Alg. 3 resample →
+    state copy, ONE launch.  Returns ``(int32[R, 128], [d_pad, R, 128],
+    f32[2] = (ess_norm, incr))``."""
+    return _c1c2_step_call(
+        _make_kernel_step(lambda p, t, b: p[t]),
+        log_weights2d, planes, partitions, seed, thr,
+        num_iters=num_iters,
+        part_index=lambda t, b, p, se, r: (p[t], 0),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_c2_pallas_step(
+    log_weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    partitions: jnp.ndarray,
+    seed: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused C2 SMC step: as C1 but with a fresh partition per (t, b)
+    (Alg. 4).  Returns ``(int32[R, 128], [d_pad, R, 128], f32[2])``."""
+    return _c1c2_step_call(
+        _make_kernel_step(lambda p, t, b: p[t * num_iters + b]),
+        log_weights2d, planes, partitions, seed, thr,
+        num_iters=num_iters,
+        part_index=lambda t, b, p, se, r: (p[t * num_iters + b], 0),
+        interpret=interpret,
+    )
 
 
 def _c1c2_fused_call(kernel, weights2d, planes, partitions, seed, *,

@@ -25,6 +25,8 @@ from repro.kernels.common import (
     gather_state,
     hash_bits,
     hash_uniform,
+    step_select,
+    step_stats,
     tile_lane_ids,
 )
 
@@ -113,6 +115,78 @@ def _kernel_fused_batch(seeds_ref, w_full_ref, w_own_ref, planes_ref, k_ref,
     @pl.when(b == pl.num_programs(2) - 1)
     def _copy_state():
         out_ref[0] = gather_state(planes_ref[0], k_new)
+
+
+def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
+                 k_ref, out_ref, stats_ref, wk_ref, st_ref):
+    """Fused STEP grid step (t, b): the (0, 0) prelude latches (m, do) from
+    the resident log-weights; every sweep runs on ``exp(lw - m)`` — the
+    same normalised weights the composed path hands to ``apply`` — and the
+    last-iteration epilogue commits either the selection or the identity."""
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    n_total = lw_full_ref.shape[0] * LANES
+
+    @pl.when((t == 0) & (b == 0))
+    def _prelude():
+        m, ess_norm, incr = step_stats(lw_full_ref[...].reshape(n_total), n_total)
+        do = ess_norm < thr_ref[0]
+        st_ref[0] = m
+        st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[0] = ess_norm
+        stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+
+    m = st_ref[0]
+    do = st_ref[1] > 0.5
+    w_full = jnp.exp(lw_full_ref[...] - m)
+    w_own = jnp.exp(lw_own_ref[...] - m)
+    k_new, wk_new = _sweep(
+        t, b, seed_ref[0], w_full, w_own, k_ref[...], wk_ref[...]
+    )
+    k_ref[...] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(1) - 1)
+    def _commit():
+        k_sel = step_select(do, k_new, t)
+        k_ref[...] = k_sel
+        out_ref[...] = gather_state(planes_ref[...], k_sel)
+
+
+def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
+                      k_ref, out_ref, stats_ref, wk_ref, st_ref):
+    """Fused STEP over a bank, grid (s, t, b): per-row seeds; the prelude
+    re-latches (m, do) at each row's (t, b) == (0, 0) and writes that row's
+    ``stats[s]``."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    b = pl.program_id(2)
+    n_total = lw_full_ref.shape[1] * LANES
+
+    @pl.when((t == 0) & (b == 0))
+    def _prelude():
+        m, ess_norm, incr = step_stats(lw_full_ref[0].reshape(n_total), n_total)
+        do = ess_norm < thr_ref[0]
+        st_ref[0] = m
+        st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[s, 0] = ess_norm
+        stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
+
+    m = st_ref[0]
+    do = st_ref[1] > 0.5
+    w_full = jnp.exp(lw_full_ref[0] - m)
+    w_own = jnp.exp(lw_own_ref[0] - m)
+    k_new, wk_new = _sweep(
+        t, b, seeds_ref[s], w_full, w_own, k_ref[0], wk_ref[...]
+    )
+    k_ref[0] = k_new
+    wk_ref[...] = wk_new
+
+    @pl.when(b == pl.num_programs(2) - 1)
+    def _commit():
+        k_sel = step_select(do, k_new, t)
+        k_ref[0] = k_sel
+        out_ref[0] = gather_state(planes_ref[0], k_sel)
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
@@ -274,3 +348,108 @@ def metropolis_pallas_fused_batch(
         ],
         interpret=interpret,
     )(seeds, weights3d, weights3d, planes4d)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas_step(
+    log_weights2d: jnp.ndarray,
+    planes: jnp.ndarray,
+    seed: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused SMC-step pallas_call: normalise → ESS → conditional Alg. 2
+    resample → state copy, ONE launch.  ``log_weights2d``: f32[R, 128]
+    UNNORMALISED (already whole-array resident here — the strawman's
+    residency is exactly what the step prelude needs anyway).  Returns
+    ``(int32[R, 128], [d_pad, R, 128], f32[2] = (ess_norm, incr))``."""
+    rows, lanes = log_weights2d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes.shape[0]
+    assert planes.shape[1:] == (rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # seed + f32 ESS threshold
+        grid=(num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda t, b, seed, thr: (0, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed, thr: (t, 0)),
+            pl.BlockSpec((d_pad, rows, LANES), lambda t, b, seed, thr: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed, thr: (t, 0)),
+            pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, seed, thr: (0, t, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_step,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed, thr, log_weights2d, log_weights2d, planes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def metropolis_pallas_step_rows(
+    log_weights3d: jnp.ndarray,
+    planes4d: jnp.ndarray,
+    seeds: jnp.ndarray,
+    thr: jnp.ndarray,
+    *,
+    num_iters: int,
+    interpret: bool = True,
+):
+    """Fused SMC-step bank launch: row s is bit-identical to
+    ``metropolis_pallas_step(log_weights3d[s], planes4d[s], seeds[s:s+1],
+    thr, ...)``.  Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128],
+    f32[Bz, 2])``."""
+    bsz, rows, lanes = log_weights3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    d_pad = planes4d.shape[1]
+    assert planes4d.shape == (bsz, d_pad, rows, lanes)
+    num_tiles = rows // SUBLANES
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, num_tiles, num_iters),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda s, t, b, se, r: (s, 0, 0)),
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, se, r: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, rows, LANES), lambda s, t, b, se, r: (s, 0, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, se, r: (s, t, 0)),
+            pl.BlockSpec(
+                (1, d_pad, SUBLANES, LANES), lambda s, t, b, se, r: (s, 0, t, 0)
+            ),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), log_weights3d.dtype),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_step_rows,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
+            jax.ShapeDtypeStruct((bsz, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seeds, thr, log_weights3d, log_weights3d, planes4d)

@@ -26,12 +26,15 @@ from repro.kernels.common import (  # noqa: F401  (MAX_VMEM_PARTICLES re-export)
     state_dim_of,
     unpack_state_planes,
 )
+from repro.kernels.common import run_step_bank
 from repro.kernels.metropolis.c1c2 import (
     PARTITION_BYTES,
     metropolis_c1_pallas,
     metropolis_c1_pallas_fused,
+    metropolis_c1_pallas_step,
     metropolis_c2_pallas,
     metropolis_c2_pallas_fused,
+    metropolis_c2_pallas_step,
 )
 from repro.kernels.metropolis.metropolis import (
     LANES,
@@ -39,6 +42,8 @@ from repro.kernels.metropolis.metropolis import (
     metropolis_pallas_batch,
     metropolis_pallas_fused,
     metropolis_pallas_fused_batch,
+    metropolis_pallas_step,
+    metropolis_pallas_step_rows,
 )
 
 
@@ -161,6 +166,60 @@ def metropolis_tpu_apply_rows(
     )
 
 
+def metropolis_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional Alg. 2
+    resample → state copy in ONE launch; the resample branch is
+    bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
+    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    n, lw2, planes, state_shape = _pack_single(
+        log_weights, particles, "metropolis_tpu_step"
+    )
+    seed = key_to_seed(key).reshape(1)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    k2, out, stats = metropolis_pallas_step(
+        lw2, planes, seed, thr, num_iters=num_iters, interpret=interpret
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])
+
+
+def metropolis_tpu_step_rows(
+    keys: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
+    ``metropolis_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
+    Returns ``(particles'[B, N, ...], ancestors, ess_norm[B], incr[B])``."""
+    if log_weights.ndim != 2:
+        raise ValueError(
+            f"metropolis_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"
+        )
+    n = log_weights.shape[1]
+    check_tile_aligned(n, "metropolis_tpu_step_rows")
+    check_vmem_resident(n, "metropolis_tpu_step_rows")
+    seeds = key_to_seed(keys)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    return run_step_bank(
+        lambda lw3, planes: metropolis_pallas_step_rows(
+            lw3, planes, seeds, thr, num_iters=num_iters, interpret=interpret
+        ),
+        log_weights, particles, "metropolis_tpu_step_rows",
+    )
+
+
 def metropolis_c1_tpu(
     key: jax.Array,
     weights: jnp.ndarray,
@@ -251,3 +310,60 @@ def metropolis_c2_tpu_apply(
         w2, planes, partitions, seed, num_iters=num_iters, interpret=interpret
     )
     return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def metropolis_c1_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused C1 SMC step; same key split as ``metropolis_c1_tpu``.  Unlike
+    the C1 apply form, the step prelude needs the WHOLE log-weight array
+    resident (the ESS reduction), so the VMEM particle cap applies here.
+    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    n, lw2, planes, state_shape = _pack_single(
+        log_weights, particles, "metropolis_c1_tpu_step"
+    )
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(kp, (num_tiles,), 0, num_tiles, dtype=jnp.int32)
+    seed = key_to_seed(kloop).reshape(1)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    k2, out, stats = metropolis_c1_pallas_step(
+        lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])
+
+
+def metropolis_c2_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    num_iters: int,
+    ess_threshold,
+    *,
+    interpret: bool = True,
+):
+    """Fused C2 SMC step; same key split as ``metropolis_c2_tpu``; the
+    whole-log-weight residency cap applies as for the C1 step.
+    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    n, lw2, planes, state_shape = _pack_single(
+        log_weights, particles, "metropolis_c2_tpu_step"
+    )
+    num_tiles = n // TILE
+    kp, kloop = jax.random.split(key)
+    partitions = jax.random.randint(
+        kp, (num_tiles * num_iters,), 0, num_tiles, dtype=jnp.int32
+    )
+    seed = key_to_seed(kloop).reshape(1)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    k2, out, stats = metropolis_c2_pallas_step(
+        lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])

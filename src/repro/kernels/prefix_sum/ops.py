@@ -40,6 +40,7 @@ from repro.kernels.prefix_sum.search import (
     searchsorted_gather_pallas,
     searchsorted_pallas,
 )
+from repro.kernels.prefix_sum.step import prefix_pallas_step
 
 PREFIX_KINDS = (
     "multinomial",
@@ -163,6 +164,58 @@ def prefix_resample_tpu_apply(
             side=side, interpret=interpret,
         )
     return unpack_state_planes(out, state_shape), k2.reshape(n)
+
+
+def prefix_resample_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    ess_threshold,
+    kind: str = "systematic",
+    *,
+    interpret: bool = True,
+):
+    """Fused SMC step for the prefix-sum family (DESIGN.md §12): normalise →
+    ESS → conditional scan+search+gather in ONE launch — the family's
+    biggest launch-count win (the composed residual path alone is five).
+    The resample branch is bit-identical to ``prefix_resample_tpu_apply(key,
+    normalise_log_weights(log_weights), particles, kind)``: the key-only
+    draw bases below replicate ``kind_draws``'s key usage exactly, and the
+    CDF-dependent scale is applied in-kernel over a bit-identical in-kernel
+    scan.  Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    if kind not in PREFIX_KINDS:
+        raise ValueError(f"kind must be one of {PREFIX_KINDS}; got {kind!r}")
+    n = log_weights.shape[0]
+    if n % TILE != 0:
+        raise ValueError(
+            f"prefix_resample_tpu_step requires N % {TILE} == 0 (one f32 VMEM "
+            f"tile); got N={n}. Use the reference backend for unaligned N."
+        )
+    check_vmem_resident(
+        n, "prefix_resample_tpu_step", what="CDF",
+        remedy="Compose Resampler.step on the reference/xla backend above this size.",
+    )
+    check_state_resident(
+        n, state_dim_of(particles, n, "prefix_resample_tpu_step"),
+        "prefix_resample_tpu_step",
+    )
+    dtype = log_weights.dtype
+    # Key-only halves of kind_draws, with IDENTICAL key usage per kind.
+    if kind in ("systematic", "improved_systematic"):
+        u0 = jax.random.uniform(key, (), dtype).reshape(1)
+        ubase = jnp.zeros((n,), dtype)
+    else:  # multinomial / stratified / residual: uniform(key, (n,))
+        u0 = jnp.zeros((1,), dtype)
+        ubase = jax.random.uniform(key, (n,), dtype)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    planes, state_shape = pack_state_planes(particles)
+    k2, out, stats = prefix_pallas_step(
+        log_weights.reshape(n // LANES, LANES), planes,
+        ubase.reshape(n // LANES, LANES), u0, thr,
+        kind=kind, interpret=interpret,
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])
 
 
 def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *, interpret):

@@ -37,6 +37,27 @@ def _kernel(x_ref, y_ref, carry_ref):
     carry_ref[0] = carry_ref[0] + local[-1]
 
 
+def scan_tiles(x2d: jnp.ndarray) -> jnp.ndarray:
+    """In-VALUE replica of ``_kernel``'s grid walk, for use INSIDE other
+    kernel bodies (the fused step): cumsum per (8, 128) tile flattened to
+    SEG lanes, scalar carry across tiles.  The per-tile arithmetic is
+    ``_kernel``'s line for line, so the resulting CDF is bit-identical to
+    ``prefix_sum_pallas`` on the same input — the property the fused-step
+    parity gate rests on."""
+    rows = x2d.shape[0]
+    num_tiles = rows // SUBLANES
+
+    def body(carry, tile):
+        local = jnp.cumsum(tile.reshape(SEG))
+        y = local + carry
+        return carry + local[-1], y.reshape(SUBLANES, LANES)
+
+    _, ys = jax.lax.scan(
+        body, jnp.zeros((), x2d.dtype), x2d.reshape(num_tiles, SUBLANES, LANES)
+    )
+    return ys.reshape(x2d.shape)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def prefix_sum_pallas(x2d: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
     rows, lanes = x2d.shape

@@ -37,19 +37,21 @@ LANES = 128
 SEG = SUBLANES * LANES
 
 
-def _bisect(c_flat, u, side: str, n_total: int):
-    """The tile-parallel bisection every search kernel shares: int32[8, 128]
-    first index with ``c[idx] >= u`` ('left') / ``c[idx] > u`` ('right'),
-    clipped to N-1.  One in-register gather per step."""
+def _bisect_any(c_flat, u, side: str, n_total: int):
+    """Shape-generic bisection core: ``u`` may be any 2-D tile (the search
+    kernels pass (8, 128) blocks; the fused step kernel passes the whole
+    (R, 128) array).  Each lane's trajectory depends only on its own
+    ``u`` value and the shared CDF — same loop count either way — so a
+    full-array call is bit-identical per lane to the per-tile calls."""
     n_steps = max(1, math.ceil(math.log2(n_total + 1)))
-    lo = jnp.zeros((SUBLANES, LANES), jnp.int32)
-    hi = jnp.full((SUBLANES, LANES), n_total, jnp.int32)
+    lo = jnp.zeros(u.shape, jnp.int32)
+    hi = jnp.full(u.shape, n_total, jnp.int32)
 
     def step(_, state):
         lo, hi = state
         active = lo < hi
         mid = (lo + hi) // 2
-        cm = jnp.take(c_flat, mid.reshape(-1), axis=0).reshape(SUBLANES, LANES)
+        cm = jnp.take(c_flat, mid.reshape(-1), axis=0).reshape(u.shape)
         pred = (cm < u) if side == "left" else (cm <= u)
         lo = jnp.where(active & pred, mid + 1, lo)
         hi = jnp.where(active & ~pred, mid, hi)
@@ -57,6 +59,13 @@ def _bisect(c_flat, u, side: str, n_total: int):
 
     lo, _ = jax.lax.fori_loop(0, n_steps, step, (lo, hi))
     return jnp.minimum(lo, n_total - 1)
+
+
+def _bisect(c_flat, u, side: str, n_total: int):
+    """The tile-parallel bisection every search kernel shares: int32[8, 128]
+    first index with ``c[idx] >= u`` ('left') / ``c[idx] > u`` ('right'),
+    clipped to N-1.  One in-register gather per step."""
+    return _bisect_any(c_flat, u, side, n_total)
 
 
 def _make_kernel(n_total: int, side: str):

@@ -13,6 +13,7 @@ from repro.kernels.common import (
     key_to_seed,
     pack_state_planes,
     run_fused_bank,
+    run_step_bank,
     state_dim_of,
     unpack_state_planes,
 )
@@ -22,6 +23,8 @@ from repro.kernels.rejection.rejection import (
     rejection_pallas_batch,
     rejection_pallas_fused,
     rejection_pallas_fused_batch,
+    rejection_pallas_step,
+    rejection_pallas_step_rows,
 )
 
 
@@ -117,6 +120,62 @@ def rejection_tpu_apply_batch(
     return _rejection_apply_bank(
         seeds, weights, particles, max_iters=max_iters, interpret=interpret,
         who="rejection_tpu_apply_batch",
+    )
+
+
+def rejection_tpu_step(
+    key: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    ess_threshold,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+):
+    """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional
+    rejection chain → state copy in ONE launch; the resample branch is
+    bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
+    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    n = log_weights.shape[0]
+    _check(n, "rejection_tpu_step")
+    check_state_resident(
+        n, state_dim_of(particles, n, "rejection_tpu_step"), "rejection_tpu_step"
+    )
+    seed = key_to_seed(key).reshape(1)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    lw2 = log_weights.reshape(n // LANES, LANES)
+    planes, state_shape = pack_state_planes(particles)
+    k2, out, stats = rejection_pallas_step(
+        lw2, planes, seed, thr, max_iters=max_iters, interpret=interpret
+    )
+    return (unpack_state_planes(out, state_shape), k2.reshape(n),
+            stats[0], stats[1])
+
+
+def rejection_tpu_step_rows(
+    keys: jax.Array,
+    log_weights: jnp.ndarray,
+    particles: jnp.ndarray,
+    ess_threshold,
+    *,
+    max_iters: int = 1024,
+    interpret: bool = True,
+):
+    """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
+    ``rejection_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
+    Returns ``(particles'[B, N, ...], ancestors, ess_norm[B], incr[B])``."""
+    if log_weights.ndim != 2:
+        raise ValueError(
+            f"rejection_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"
+        )
+    _check(log_weights.shape[1], "rejection_tpu_step_rows")
+    seeds = key_to_seed(keys)
+    thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
+    return run_step_bank(
+        lambda lw3, planes: rejection_pallas_step_rows(
+            lw3, planes, seeds, thr, max_iters=max_iters, interpret=interpret
+        ),
+        log_weights, particles, "rejection_tpu_step_rows",
     )
 
 

@@ -52,6 +52,38 @@ def resample_step_bytes(num_particles: int, state_dim: int = 1, *,
     return out
 
 
+def smc_step_bytes(num_particles: int, state_dim: int = 1, *,
+                   fused: bool, batch: int = 1,
+                   state_bytes: int = 4) -> dict:
+    """Analytic peak HBM liveness of ONE full SMC step (DESIGN.md §12):
+    reweight → ESS → conditional resample → state copy.
+
+    The composed path (normalise, ESS, branch and ``apply`` as separate XLA
+    ops) holds, simultaneously live at the gather: both state buffers, the
+    carried log-weight buffer, the materialised NORMALISED weight buffer the
+    resampler consumes, and the int32 ancestor vector the where-select
+    reads.  The fused ``Resampler.step`` computes normalised weights, ESS
+    and the branch inside the kernel (the stats leave as two SMEM scalars)
+    and selects ancestors on-chip, so its peak is two state buffers + the
+    log-weight input — per population the fused step carries ``8 N`` fewer
+    bytes (4 N normalised weights + 4 N ancestors) than the composition.
+    Used by tests/test_step_fused.py to pin fused < composed for every
+    (N, state_dim).
+    """
+    state = float(batch * num_particles * state_dim * state_bytes)
+    log_weights = float(batch * num_particles * 4)
+    out = {
+        "state_in": state,
+        "state_out": state,
+        "log_weights": log_weights,
+    }
+    if not fused:
+        out["weights_normalised"] = float(batch * num_particles * 4)
+        out["ancestors_i32"] = float(batch * num_particles * 4)
+    out["total"] = float(sum(out.values()))
+    return out
+
+
 def _layer_transient_train(cfg: ModelConfig, rows: int, seq: int, tp: int) -> float:
     """Peak transient bytes of ONE layer's fwd+bwd (f32 scores dominate)."""
     heads_loc = max(1, cfg.num_heads // tp)

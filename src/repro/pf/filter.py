@@ -27,7 +27,11 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.metrics import effective_sample_size
+from repro.core.metrics import (
+    effective_sample_size,
+    log_weights_from_linear,
+    normalise_log_weights,
+)
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import ResamplerSpec, coerce_spec
 
@@ -55,9 +59,20 @@ class ParticleFilter:
     # application prior of paper §7.  Must stay unset when ``resampler`` is
     # already a spec (the spec carries its own count).
     num_iters: Union[int, str, None] = None
+    # None (default) keeps Alg. 6's unconditional per-step resample.  A
+    # float in [0, 1] switches the filter to classic conditional SIR: carry
+    # log-weights across steps and resample only when the normalised ESS
+    # drops below the threshold — one fused ``Resampler.step`` launch per
+    # time step on kernel backends (DESIGN.md §12).
+    ess_threshold: Optional[float] = None
     resampler_kwargs: tuple = ()  # deprecated: pre-spec hyperparameter channel
 
     def __post_init__(self):
+        if self.ess_threshold is not None and not 0.0 <= self.ess_threshold <= 1.0:
+            raise ValueError(
+                "ParticleFilter.ess_threshold must be in [0, 1] (a normalised "
+                f"ESS fraction) or None for Alg. 6; got {self.ess_threshold}"
+            )
         if isinstance(self.resampler, ResamplerSpec):
             if self.resampler_kwargs:
                 raise ValueError(
@@ -107,6 +122,33 @@ class ParticleFilter:
         # Stage 3: estimate (uniform post-resampling weights)
         return x_bar, jnp.mean(x_bar), w
 
+    def step_conditional(self, key, particles, log_w, z, t, theta=None):
+        """One conditional-SIR step (classic ESS-triggered SIR, DESIGN.md
+        §12): returns ``(particles', log_w', estimate, ess_norm)``.
+
+        Log-weights accumulate across steps; stage 2 is the FUSED
+        ``Resampler.step`` — normalise, ESS, the resample-or-not branch and
+        the state copy in ONE launch on kernel backends.  The estimate is
+        the weighted posterior mean over the PRE-resample weights (the
+        conditional filter's weights are not uniform after a skipped
+        resample, so the Alg. 6 plain mean would be biased)."""
+        k_pred, k_res = jax.random.split(key)
+        # Stage 1: predict + update (log-weight accumulation)
+        x = _call(self.model.transition, k_pred, particles, t, theta=theta)
+        w = _call(self.model.likelihood, z, x, t, theta=theta)
+        log_w = log_w + log_weights_from_linear(w)
+        # Stage 3 first: the estimate consumes the pre-resample weights
+        wn = normalise_log_weights(log_w)
+        est = jnp.sum(wn * x) / jnp.sum(wn)
+        # Stage 2: fused normalise → ESS → conditional resample → gather
+        x_bar, _, ess_norm, _ = self._built.step(
+            k_res, log_w, x, self.ess_threshold
+        )
+        log_w = jnp.where(
+            ess_norm < self.ess_threshold, jnp.zeros_like(log_w), log_w
+        )
+        return x_bar, log_w, est, ess_norm
+
 
 def _call(fn, *args, theta=None):
     """Invoke a model callable, appending ``theta`` only when given — keeps
@@ -136,37 +178,45 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
 
     ``with_ess=True`` additionally returns the normalised pre-resampling ESS
     per step (f32[T] in [0, 1]) — the standard degeneracy diagnostic,
-    computed with the shared ``repro.core.metrics.effective_sample_size``
-    helper.  Alg. 6 resamples unconditionally, so ESS here is a health
-    signal, not a trigger (the triggered form lives in smc/decode.py and
-    ais/sampler.py).
+    computed with the shared ``repro.core.metrics`` helpers.  With the
+    default ``pf.ess_threshold=None`` (Alg. 6, unconditional resample) ESS
+    is a health signal, not a trigger; with a threshold set the filter runs
+    classic conditional SIR (``step_conditional``) and the SAME ess_norm is
+    both the trigger and the diagnostic — one fused ``Resampler.step``
+    launch per time step on kernel backends (DESIGN.md §12).
 
     Peak-memory note (DESIGN.md §11): the resample stage is the fused
-    ``Resampler.apply``, so the scan body's live set at the resample
-    boundary is the in/out particle buffers only — no int32 ancestor
-    vector, and (unless ``with_ess`` asks for it) no weight buffer escapes
-    the step into the scan's stacked outputs.  The accounting lives in
-    ``launch/memmodel.py::resample_step_bytes``.
+    ``Resampler.apply`` (or ``Resampler.step``), so the scan body's live
+    set at the resample boundary is the in/out particle buffers only — no
+    int32 ancestor vector, and (unless ``with_ess`` asks for it) no weight
+    buffer escapes the step into the scan's stacked outputs.  The
+    accounting lives in ``launch/memmodel.py::resample_step_bytes``.
     """
+    conditional = pf.ess_threshold is not None
 
     def body(carry, inp):
-        particles, k = carry
+        particles, log_w, k = carry
         t, z = inp
         k, ks = jax.random.split(k)
+        if conditional:
+            particles, log_w, est, ess_norm = pf.step_conditional(
+                ks, particles, log_w, z, t, theta=theta
+            )
+            out = (est, ess_norm) if with_ess else est
+            return (particles, log_w, k), out
         particles, est, w = pf.step(ks, particles, z, t, theta=theta)
         if not with_ess:
             # Don't thread the pre-resample weight buffer into the scan
             # outputs when nobody consumes it — the diagnostic is opt-in.
-            return (particles, k), est
-        # floor must stay in float32 normal range: subnormals (e.g. 1e-38)
-        # flush to zero under XLA and the log would reintroduce -inf
-        ess_norm = effective_sample_size(jnp.log(jnp.maximum(w, 1e-30))) / w.shape[0]
-        return (particles, k), (est, ess_norm)
+            return (particles, log_w, k), est
+        ess_norm = effective_sample_size(log_weights_from_linear(w)) / w.shape[0]
+        return (particles, log_w, k), (est, ess_norm)
 
     k0, key = jax.random.split(key)
     particles = pf.model.init(k0, pf.num_particles)
+    log_w0 = jnp.zeros((pf.num_particles,), jnp.float32)
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
-    _, out = jax.lax.scan(body, (particles, key), (ts, observations))
+    _, out = jax.lax.scan(body, (particles, log_w0, key), (ts, observations))
     return out
 
 
@@ -184,10 +234,14 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
 
     Every stage is batched: predict/update via vmap over the scenario axis,
     resampling via the registry's batched path (one launch over the whole
-    ``[S, N]`` weight bank).
+    ``[S, N]`` weight bank).  With ``pf.ess_threshold`` set the bank runs
+    conditional SIR: the resample stage is ONE ``Resampler.step_rows``
+    launch and each scenario takes its OWN resample-or-not branch on-chip
+    (DESIGN.md §12) — row ``s`` still bit-identical to the single filter.
     """
     num_s = observations.shape[0]
     resampler = pf._built
+    conditional = pf.ess_threshold is not None
     keys = split_batch_keys(key, num_s)
 
     def init_one(k):
@@ -199,7 +253,7 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
     theta_axes = None if thetas is None else jax.tree.map(lambda _: 0, thetas)
 
     def body(carry, inp):
-        xs, ks = carry  # [S, N] particles, [S] key chain
+        xs, log_w, ks = carry  # [S, N] particles/log-weights, [S] key chain
         t, zs = inp  # scalar step, [S] observations
         step = jax.vmap(jax.random.split)(ks)
         ks_next, step_keys = step[:, 0], step[:, 1]
@@ -214,15 +268,30 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
             lambda z, xr, th: _call(pf.model.likelihood, z, xr, t, theta=th),
             in_axes=(0, 0, theta_axes),
         )(zs, x, thetas)
+        if conditional:
+            # Conditional SIR: accumulate log-weights, estimate from the
+            # pre-resample posterior, then ONE fused step_rows launch —
+            # stage arithmetic mirrors step_conditional row for row.
+            log_w = log_w + log_weights_from_linear(w)
+            wn = normalise_log_weights(log_w, axis=-1)
+            est = jnp.sum(wn * x, axis=1) / jnp.sum(wn, axis=1)
+            x_bar, _, ess_norm, _ = resampler.step_rows(
+                k_res, log_w, x, pf.ess_threshold
+            )
+            log_w = jnp.where(
+                (ess_norm < pf.ess_threshold)[:, None], 0.0, log_w
+            )
+            return (x_bar, log_w, ks_next), est
         # Stage 2: ONE batched FUSED resample+gather launch for the whole
         # bank (Resampler.apply_rows, DESIGN.md §11) — on the batch-grid
         # kernel families this is a single fused launch per step
         x_bar, _ = resampler.apply_rows(k_res, w, x)
         # Stage 3 (batched): estimate
-        return (x_bar, ks_next), jnp.mean(x_bar, axis=1)
+        return (x_bar, log_w, ks_next), jnp.mean(x_bar, axis=1)
 
+    log_w0 = jnp.zeros((num_s, pf.num_particles), jnp.float32)
     ts = jnp.arange(1, observations.shape[1] + 1, dtype=jnp.float32)
-    _, ests = jax.lax.scan(body, (particles, carry_keys), (ts, observations.T))
+    _, ests = jax.lax.scan(body, (particles, log_w0, carry_keys), (ts, observations.T))
     return ests.T
 
 

@@ -17,7 +17,8 @@ The paper's algorithmic properties carry over directly:
     mamba2 resample orders of magnitude cheaper at long context (measured
     in benchmarks/smc_decode_bench.py).
 
-Fully jittable: ``lax.scan`` over steps, ``lax.cond`` around the resample.
+Fully jittable: ``lax.scan`` over steps; the per-step reweight → ESS →
+conditional resample is ONE fused ``Resampler.step`` call (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -93,23 +94,22 @@ def smc_decode(
     resampler = smc_cfg.resampler_spec().build()
 
     def maybe_resample(k, log_w, caches, tokens_so_far):
-        def do(_):
-            # Metropolis-family resamplers consume unnormalised weights —
-            # shift in log space for stability, then exponentiate.  The
-            # token buffer rides the FUSED resample+gather path
-            # (Resampler.apply, DESIGN.md §11); the KV/SSM cache pytree —
-            # mixed dtypes/shapes per leaf — is gathered with the ancestors
-            # the fused call returns (the kernel computes them anyway).
-            w = jnp.exp(log_w - jnp.max(log_w))
-            new_tokens, ancestors = resampler.apply(k, w, tokens_so_far)
-            new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
-            return jnp.zeros_like(log_w), new_caches, new_tokens, jnp.int32(1)
-
-        def dont(_):
-            return log_w, caches, tokens_so_far, jnp.int32(0)
-
-        trigger = ess(log_w) < smc_cfg.ess_threshold * n
-        return jax.lax.cond(trigger, do, dont, None)
+        # The FUSED SMC step (Resampler.step, DESIGN.md §12): normalise,
+        # ESS, the resample-or-not branch and the token-buffer copy in ONE
+        # launch on kernel backends — no host-side branch around the
+        # resampler.  The KV/SSM cache pytree — mixed dtypes/shapes per
+        # leaf — is gathered with the ancestors the step returns; when the
+        # branch doesn't fire those are the identity permutation, so the
+        # gather is a no-op copy and every output is bit-identical to the
+        # untriggered path.  (Trigger is ess/N < threshold — same fraction
+        # as the old ess < threshold*N form, now computed on-chip.)
+        new_tokens, ancestors, ess_norm, _ = resampler.step(
+            k, log_w, tokens_so_far, smc_cfg.ess_threshold
+        )
+        trigger = ess_norm < smc_cfg.ess_threshold
+        new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
+        log_w = jnp.where(trigger, jnp.zeros_like(log_w), log_w)
+        return log_w, new_caches, new_tokens, trigger.astype(jnp.int32)
 
     def step(carry, step_key):
         tokens_prev, pos, log_w, caches, out_buf, n_resamples, t = carry

@@ -1,0 +1,422 @@
+"""Fused SMC step (``Resampler.step``) quality gate (DESIGN.md §12).
+
+Contract under test, over the FULL family × backend matrix:
+
+  1. **composition parity** — ``step(key, log_w, p, thr)`` is bit-identical
+     to the normalise → ESS → branch → ``apply`` composition on the SAME
+     backend, for single and explicit-key rows forms, at thresholds that
+     take both branches;
+  2. **no-op branch** — when ``ess_norm >= thr`` the particles come back
+     bit-identical, ancestors are the identity permutation, the logZ
+     increment is zero, and the output does not depend on the key (the key
+     is consumed, but only the taken branch's draws are selected);
+  3. **threshold edges** — ``thr=0.0`` never fires (strict ``<``),
+     ``thr=1.0`` does not fire on uniform weights (ess_norm == 1 exactly),
+     and a population EXACTLY at threshold does not fire;
+  4. **degenerate weights** (hypothesis, pinned-grid fallback) — all mass
+     on one particle, all-equal, -inf-except-one and subnormal log-weights
+     produce finite normalised weights / ESS / increment on every backend,
+     with step ≡ composition throughout;
+  5. **single launch** — on the pallas backend the WHOLE step traces to
+     exactly ONE ``pallas_call`` for every family (the tentpole claim);
+  6. **consumers** — the filter/AIS/decode resample paths contain no
+     ``lax.cond`` around the resampler and ride ``step``/``step_rows``;
+     the analytic memory model says fused < composed.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    effective_sample_size,
+    log_mean_weight,
+    log_weights_from_linear,
+    normalise_log_weights,
+)
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import spec_for_backend
+from repro.kernels.common import MAX_VMEM_STATE, STATE_PLANE_TILE, TILE
+
+N = 2 * TILE
+BATCH = 3
+ITERS = 8
+MAX_ITERS = 24
+
+FAMILIES = (
+    "megopolis",
+    "metropolis",
+    "metropolis_c1",
+    "metropolis_c2",
+    "rejection",
+    "multinomial",
+    "systematic",
+    "improved_systematic",
+    "stratified",
+    "residual",
+)
+BACKENDS = ("reference", "xla", "pallas_interpret")
+
+
+def _build(name, backend, num_iters=ITERS):
+    return spec_for_backend(name, backend, num_iters=num_iters,
+                            max_iters=MAX_ITERS).build()
+
+
+@pytest.fixture(scope="module")
+def lw_spread():
+    """Concentrated log-weights: ess_norm ≈ 0.07, so mid thresholds fire."""
+    return jax.random.normal(jax.random.PRNGKey(11), (N,)) * 2.0
+
+
+@pytest.fixture(scope="module")
+def lw_flat():
+    """Near-uniform log-weights: ess_norm ≈ 1, so mid thresholds do NOT fire."""
+    return jax.random.normal(jax.random.PRNGKey(12), (N,)) * 0.01
+
+
+@pytest.fixture(scope="module")
+def lw_bank():
+    return jax.random.normal(jax.random.PRNGKey(13), (BATCH, N)) * 2.0
+
+
+@pytest.fixture(scope="module")
+def p_single():
+    return jax.random.normal(jax.random.PRNGKey(14), (N, 4))
+
+
+@pytest.fixture(scope="module")
+def p_bank():
+    return jax.random.normal(jax.random.PRNGKey(15), (BATCH, N, 4))
+
+
+def _assert_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _composed_step(r, key, log_w, particles, thr):
+    """The oracle: normalise → ESS → branch → apply, from shared metrics
+    helpers and the SAME backend's fused apply — what ``step`` must equal
+    bit for bit."""
+    n = log_w.shape[-1]
+    ess_n = effective_sample_size(log_w) / jnp.float32(n)
+    do = ess_n < thr
+    w = normalise_log_weights(log_w)
+    p_res, a_res = r.apply(key, w, particles)
+    ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
+    p_out = jnp.where(do, p_res, particles)
+    incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
+    return p_out, ancestors, ess_n, incr
+
+
+# ------------------------------------------------- 1. composition parity
+@pytest.mark.parametrize("thr", (0.0, 0.7, 2.0))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_step_single_matches_composition(name, backend, thr, lw_spread,
+                                         p_single, base_key):
+    r = _build(name, backend)
+    exp = _composed_step(r, base_key, lw_spread, p_single, thr)
+    got = r.step(base_key, lw_spread, p_single, thr)
+    for g, e in zip(got, exp):
+        _assert_equal(g, e)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_step_rows_matches_single(name, backend, lw_bank, p_bank, base_key):
+    """step_rows row b == step(keys[b], ...) — the filter-bank contract;
+    each row takes its OWN branch."""
+    r = _build(name, backend)
+    keys = split_batch_keys(base_key, BATCH)
+    got = r.step_rows(keys, lw_bank, p_bank, 0.7)
+    for b in range(BATCH):
+        exp = r.step(keys[b], lw_bank[b], p_bank[b], 0.7)
+        for g, e in zip(got, exp):
+            _assert_equal(g[b], e)
+
+
+@pytest.mark.parametrize("name", ("megopolis", "metropolis", "residual"))
+def test_step_rows_mixed_branches(name, p_bank, base_key):
+    """A bank whose rows straddle the threshold: concentrated rows resample,
+    the flat row comes back identity — in the SAME launch."""
+    lw = jnp.stack([
+        jax.random.normal(jax.random.PRNGKey(31), (N,)) * 2.0,
+        jax.random.normal(jax.random.PRNGKey(32), (N,)) * 0.01,
+        jax.random.normal(jax.random.PRNGKey(33), (N,)) * 2.0,
+    ])
+    r = _build(name, "pallas_interpret")
+    keys = split_batch_keys(base_key, BATCH)
+    p_out, anc, ess_n, incr = r.step_rows(keys, lw, p_bank, 0.7)
+    fired = np.asarray(ess_n) < 0.7
+    assert list(fired) == [True, False, True]
+    _assert_equal(anc[1], jnp.arange(N, dtype=jnp.int32))
+    _assert_equal(p_out[1], p_bank[1])
+    assert float(incr[1]) == 0.0
+    assert not np.array_equal(np.asarray(anc[0]), np.arange(N))
+
+
+# ------------------------------------------------------- 2. no-op branch
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_step_noop_branch(name, backend, lw_flat, p_single, base_key):
+    """ess_norm >= thr: particles bit-identical, identity ancestors,
+    incr == 0, and the result is key-independent (the key is consumed but
+    the untaken branch's draws are discarded)."""
+    r = _build(name, backend)
+    p_out, anc, ess_n, incr = r.step(base_key, lw_flat, p_single, 0.5)
+    assert float(ess_n) >= 0.5
+    _assert_equal(p_out, p_single)
+    _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
+    assert float(incr) == 0.0
+    other = r.step(jax.random.PRNGKey(999), lw_flat, p_single, 0.5)
+    for g, e in zip(other, (p_out, anc, ess_n, incr)):
+        _assert_equal(g, e)
+
+
+# ---------------------------------------------------- 3. threshold edges
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+@pytest.mark.parametrize("name", ("megopolis", "rejection", "systematic"))
+def test_step_threshold_edges(name, backend, lw_spread, p_single, base_key):
+    r = _build(name, backend)
+    # thr = 0.0 never fires: ess_norm > 0 and the trigger is strict <
+    p_out, anc, _, incr = r.step(base_key, lw_spread, p_single, 0.0)
+    _assert_equal(p_out, p_single)
+    _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
+    assert float(incr) == 0.0
+    # thr = 1.0 on exactly-uniform weights: ess_norm == 1.0 exactly (f32
+    # integer sums are exact at this N), strict < does not fire
+    lw_uniform = jnp.zeros((N,), jnp.float32)
+    p_out, anc, ess_n, _ = r.step(base_key, lw_uniform, p_single, 1.0)
+    assert float(ess_n) == 1.0
+    _assert_equal(p_out, p_single)
+    _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
+    # exactly AT threshold: strict < does not fire
+    ess_thr = effective_sample_size(lw_spread) / jnp.float32(N)
+    p_out, anc, _, _ = r.step(base_key, lw_spread, p_single, ess_thr)
+    _assert_equal(p_out, p_single)
+    # nudge one ulp above: fires
+    above = jnp.nextafter(ess_thr, jnp.float32(2.0))
+    _, anc_fire, _, incr_fire = r.step(base_key, lw_spread, p_single, above)
+    assert not np.array_equal(np.asarray(anc_fire), np.arange(N))
+    assert float(incr_fire) != 0.0
+
+
+# ------------------------------------------------- 'auto' num_iters rows
+@pytest.mark.parametrize("name", ("megopolis", "metropolis", "metropolis_c1"))
+def test_step_auto_iters_rows(name, lw_bank, p_bank, base_key):
+    """num_iters='auto' resolves eq. (3) PER ROW from each row's normalised
+    weights; rows stay bit-identical to the single 'auto' step."""
+    r = _build(name, "pallas_interpret", num_iters="auto")
+    keys = split_batch_keys(base_key, BATCH)
+    got = r.step_rows(keys, lw_bank, p_bank, 0.7)
+    for b in range(BATCH):
+        exp = r.step(keys[b], lw_bank[b], p_bank[b], 0.7)
+        for g, e in zip(got, exp):
+            _assert_equal(g[b], e)
+
+
+# ------------------------------------------- 4. degenerate-weight safety
+def _degenerate_cases(n):
+    one_hot = jnp.full((n,), -jnp.inf).at[n // 3].set(0.0)
+    return {
+        "all_mass_on_one": jnp.full((n,), -100.0).at[7].set(0.0),
+        "all_equal": jnp.full((n,), -3.5),
+        "inf_except_one": one_hot,
+        "subnormal": jnp.full((n,), -1e-40),
+    }
+
+
+@pytest.mark.parametrize("case", sorted(_degenerate_cases(4)))
+def test_metrics_degenerate_weights_finite(case):
+    """The shared normalise/ESS helpers directly: every degenerate pattern
+    yields finite normalised weights, ESS in [1, N], finite log-mean."""
+    lw = _degenerate_cases(N)[case]
+    w = normalise_log_weights(lw)
+    assert bool(jnp.all(jnp.isfinite(w)))
+    assert float(jnp.max(w)) == 1.0  # the argmax weight survives exactly
+    ess = effective_sample_size(lw)
+    assert bool(jnp.isfinite(ess))
+    assert 1.0 - 1e-4 <= float(ess) <= N * (1 + 1e-6)
+    assert bool(jnp.isfinite(log_mean_weight(lw)))
+
+
+def test_log_weights_from_linear_guards_zero():
+    """The centralised linear→log guard: zero and subnormal weights floor
+    at 1e-30 (f32 normal range) instead of producing -inf / flushed logs."""
+    w = jnp.array([0.0, 1e-38, 1.0], jnp.float32)
+    lw = log_weights_from_linear(w)
+    assert bool(jnp.all(jnp.isfinite(lw)))
+    assert float(lw[2]) == 0.0
+    ess = effective_sample_size(lw)
+    assert bool(jnp.isfinite(ess))
+
+
+def _check_degenerate_step(name, backend, case, thr):
+    lw = _degenerate_cases(N)[case]
+    p = jax.random.normal(jax.random.PRNGKey(41), (N, 2))
+    r = _build(name, backend)
+    key = jax.random.PRNGKey(42)
+    p_out, anc, ess_n, incr = r.step(key, lw, p, thr)
+    assert bool(jnp.isfinite(ess_n))
+    assert bool(jnp.isfinite(incr))
+    assert bool(jnp.all(jnp.isfinite(p_out)))
+    exp = _composed_step(r, key, lw, p, thr)
+    for g, e in zip((p_out, anc, ess_n, incr), exp):
+        _assert_equal(g, e)
+
+
+_DEGEN_FAMILIES = ("megopolis", "metropolis", "rejection", "systematic", "residual")
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        name=st.sampled_from(_DEGEN_FAMILIES),
+        backend=st.sampled_from(BACKENDS),
+        case=st.sampled_from(sorted(_degenerate_cases(4))),
+        thr=st.sampled_from([0.0, 0.5, 1.0]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_step_degenerate_weights(name, backend, case, thr):
+        _check_degenerate_step(name, backend, case, thr)
+
+except ImportError:
+    # hypothesis absent (CI installs it): pinned grid instead.
+    @pytest.mark.parametrize("case", sorted(_degenerate_cases(4)))
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("name", _DEGEN_FAMILIES)
+    def test_step_degenerate_weights(name, backend, case):
+        _check_degenerate_step(name, backend, case, 0.5)
+
+
+# ------------------------------------------------------ 5. single launch
+def _count_pallas_calls(jaxpr):
+    from jax.extend import core as jex_core
+
+    def of_param(v):
+        if isinstance(v, jex_core.ClosedJaxpr):
+            return _count_pallas_calls(v.jaxpr)
+        if isinstance(v, jex_core.Jaxpr):
+            return _count_pallas_calls(v)
+        if isinstance(v, (tuple, list)):
+            return sum(of_param(x) for x in v)
+        return 0
+
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        total += sum(of_param(v) for v in eqn.params.values())
+    return total
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_step_is_single_launch(name, lw_spread, p_single, base_key):
+    """THE tentpole gate: on the pallas backend the whole reweight → ESS →
+    conditional resample → state copy step traces to exactly ONE
+    pallas_call — including the prefix-sum family, whose composed apply
+    alone is 2 launches (4 for residual) plus host glue."""
+    r = _build(name, "pallas_interpret")
+    jaxpr = jax.make_jaxpr(lambda k, lw, p: r.step(k, lw, p, 0.5))(
+        base_key, lw_spread, p_single
+    )
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+@pytest.mark.parametrize("name", ("megopolis", "metropolis", "rejection"))
+def test_step_rows_is_single_launch(name, lw_bank, p_bank, base_key):
+    """The bank form on the leading-batch-grid families is ONE launch too."""
+    r = _build(name, "pallas_interpret")
+    keys = split_batch_keys(base_key, BATCH)
+    jaxpr = jax.make_jaxpr(lambda k, lw, p: r.step_rows(k, lw, p, 0.5))(
+        keys, lw_bank, p_bank
+    )
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+# ------------------------------------------------- validation + residency
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+def test_step_rows_rejects_short_key_array(backend, lw_bank, p_bank, base_key):
+    r = _build("megopolis", backend)
+    keys = split_batch_keys(base_key, BATCH - 1)
+    with pytest.raises(ValueError, match="one key per row"):
+        r.step_rows(keys, lw_bank, p_bank, 0.5)
+
+
+def test_step_state_residency_cap(base_key):
+    d = MAX_VMEM_STATE // N // STATE_PLANE_TILE * STATE_PLANE_TILE + STATE_PLANE_TILE
+    p = jnp.zeros((N, d), jnp.float32)
+    lw = jnp.zeros((N,), jnp.float32)
+    r = _build("megopolis", "pallas_interpret")
+    with pytest.raises(ValueError, match="VMEM"):
+        r.step(base_key, lw, p, 0.5)
+
+
+# ----------------------------------------------------------- 6. consumers
+def test_consumer_resample_paths_use_fused_step():
+    """No host-side cond around the resampler, no ancestor round-trip: the
+    three SMC consumers ride Resampler.step / step_rows."""
+    from repro.ais import sampler as ais_sampler
+    from repro.pf import filter as pf_filter
+    from repro.smc import decode as smc_decode_mod
+
+    single = inspect.getsource(ais_sampler.run_smc_sampler)
+    bank = inspect.getsource(ais_sampler.run_smc_sampler_bank)
+    assert "lax.cond" not in single and ".step(" in single
+    assert "lax.cond" not in bank and ".step_rows(" in bank
+    assert "jnp.take" not in single and "jnp.take" not in bank
+
+    cond_step = inspect.getsource(pf_filter.ParticleFilter.step_conditional)
+    assert "jnp.take" not in cond_step and ".step(" in cond_step
+    fbank = inspect.getsource(pf_filter.run_filter_bank)
+    assert "jnp.take" not in fbank and ".step_rows(" in fbank
+
+    dec = inspect.getsource(smc_decode_mod.smc_decode)
+    assert "lax.cond" not in dec and ".step(" in dec
+
+
+def test_memmodel_fused_step_beats_composed():
+    from repro.launch.memmodel import smc_step_bytes
+
+    for n in (1 << 10, 1 << 16, 1 << 20):
+        for d in (1, 4, 32):
+            fused = smc_step_bytes(n, d, fused=True)
+            composed = smc_step_bytes(n, d, fused=False)
+            assert fused["total"] < composed["total"]
+            # the normalised-weight buffer + the ancestor vector
+            assert composed["total"] - fused["total"] == n * 8
+
+
+def test_conditional_filter_step_matches_manual_replay(base_key):
+    """End-to-end: a conditional-SIR ParticleFilter on the pallas backend
+    steps through the fused path and equals a manual replay through the
+    composed normalise → ESS → branch → apply arithmetic."""
+    from repro.core.spec import MegopolisSpec
+    from repro.pf import ParticleFilter, ungm
+
+    pf = ParticleFilter(
+        model=ungm(),
+        num_particles=TILE,
+        resampler=MegopolisSpec(num_iters=ITERS, segment=1024,
+                                backend="pallas_interpret"),
+        ess_threshold=0.5,
+    )
+    particles = pf.model.init(jax.random.PRNGKey(51), TILE)
+    log_w0 = jnp.zeros((TILE,), jnp.float32)
+    z, t = jnp.float32(0.3), jnp.float32(1.0)
+    x_bar, log_w1, est, ess_n = pf.step_conditional(base_key, particles, log_w0, z, t)
+    # manual replay
+    k_pred, k_res = jax.random.split(base_key)
+    x = pf.model.transition(k_pred, particles, t)
+    lw = log_w0 + log_weights_from_linear(pf.model.likelihood(z, x, t))
+    exp = _composed_step(pf._built, k_res, lw, x, 0.5)
+    _assert_equal(x_bar, exp[0])
+    _assert_equal(ess_n, exp[2])
+    wn = normalise_log_weights(lw)
+    _assert_equal(est, jnp.sum(wn * x) / jnp.sum(wn))
+    fired = bool(ess_n < 0.5)
+    _assert_equal(log_w1, jnp.zeros_like(lw) if fired else lw)
