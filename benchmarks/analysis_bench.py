@@ -1,0 +1,97 @@
+"""Analyzer report as a benchmark artifact (DESIGN.md §13).
+
+Not a timing suite: the paper's speed argument is *counted*, so the
+trajectory JSON should carry the counts — launch sites per matrix cell,
+static VMEM footprints at the residency edge, and the §2.4 transactions
+per warp-iteration — alongside the wall-times the other suites measure.
+Writes ``BENCH_analysis.json`` for ``benchmarks.run --json`` to fold in;
+exits non-zero if any contract is violated, so a regression fails the
+perf lane too, not just the dedicated contracts lane.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import ensure_out, print_table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="pallas_interpret,pallas",
+                    help="comma-separated backends to audit (launch counts "
+                         "are identical across the pallas pair)")
+    args = ap.parse_args(argv)
+    backends = tuple(b for b in args.backends.split(",") if b)
+
+    from repro.analysis.contracts import audit_large_n_footprints, audit_matrix
+    from repro.analysis.report import transaction_report
+
+    cells = []
+    for rep in audit_matrix(backends=backends):
+        name, backend, entry = rep.cell.split("/")
+        cells.append(
+            {
+                "family": name,
+                "backend": backend,
+                "entry": entry,
+                "launches": rep.launches,
+                "budget": rep.max_launches,
+                "ok": rep.ok,
+            }
+        )
+
+    footprints = []
+    for rep in audit_large_n_footprints():
+        footprints.append(
+            {
+                "cell": rep.cell,
+                "vmem_bytes": max((fp.vmem_bytes for fp in rep.footprints), default=0),
+                "budget_bytes": rep.footprints[0].budget_bytes if rep.footprints else None,
+                "ok": rep.ok,
+            }
+        )
+
+    tx = transaction_report()
+
+    # Per-family launch summary over the fused entries — the headline table.
+    rows = []
+    for fam in sorted({c["family"] for c in cells}):
+        fam_cells = [c for c in cells if c["family"] == fam]
+        rows.append(
+            {
+                "family": fam,
+                "call": next(c["launches"] for c in fam_cells if c["entry"] == "call"),
+                "apply": next(c["launches"] for c in fam_cells if c["entry"] == "apply"),
+                "step": next(c["launches"] for c in fam_cells if c["entry"] == "step"),
+                "tx_max": tx.get(fam, {}).get("max"),
+                "tx_bound": tx.get(fam, {}).get("bound"),
+                "ok": all(c["ok"] for c in fam_cells),
+            }
+        )
+    print_table(rows, cols=["family", "call", "apply", "step", "tx_max", "tx_bound", "ok"])
+
+    ok = (
+        all(c["ok"] for c in cells)
+        and all(f["ok"] for f in footprints)
+        and all(v["ok"] for v in tx.values())
+    )
+    payload = {
+        "ok": ok,
+        "cells": cells,
+        "large_n_footprints": footprints,
+        "transactions": tx,
+    }
+    path = os.path.join(ensure_out(), "BENCH_analysis.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

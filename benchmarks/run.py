@@ -34,10 +34,11 @@ SUITES = [
                                             "--archs", "qwen3-0.6b"]),
     ("fused_gather", "benchmarks.fused_gather_bench", ["--quick"]),
     ("step", "benchmarks.step_bench", ["--quick"]),
+    ("analysis", "benchmarks.analysis_bench", []),
 ]
 # Suites whose CLI has no --full flag (or whose scale is pinned above).
 _NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais",
-            "fused_gather", "step")
+            "fused_gather", "step", "analysis")
 
 
 def _check_suite_names(names, flag: str):
@@ -117,6 +118,24 @@ def _step_stats():
     }
 
 
+def _analysis_stats():
+    """Fold the static contract audit — launch counts per matrix cell and
+    the modelled §2.4 transaction table — into the trajectory JSON
+    (written by benchmarks.analysis_bench as BENCH_analysis.json)."""
+    from benchmarks.common import OUT_DIR
+
+    path = os.path.join(OUT_DIR, "BENCH_analysis.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    return {
+        "ok": payload.get("ok"),
+        "cells": payload.get("cells"),
+        "transactions": payload.get("transactions"),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -171,6 +190,9 @@ def main(argv=None):
         step = _step_stats() if "step" in suite_times else None
         if step:
             payload["step"] = step
+        analysis = _analysis_stats() if "analysis" in suite_times else None
+        if analysis:
+            payload["analysis"] = analysis
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"\nwrote trajectory {path}")

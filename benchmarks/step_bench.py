@@ -42,6 +42,7 @@ from repro.core.metrics import (
     log_mean_weight,
     normalise_log_weights,
 )
+from repro.analysis import count_pallas_calls as _count_pallas_calls
 from repro.core.spec import spec_for_backend
 from repro.launch.memmodel import smc_step_bytes
 
@@ -73,26 +74,6 @@ def _composed(r, key, log_w, particles, thr):
     p_out = jnp.where(do, p_res, particles)
     incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
     return p_out, ancestors, ess_n, incr
-
-
-def _count_pallas_calls(jaxpr):
-    from jax.extend import core as jex_core
-
-    def of_param(v):
-        if isinstance(v, jex_core.ClosedJaxpr):
-            return _count_pallas_calls(v.jaxpr)
-        if isinstance(v, jex_core.Jaxpr):
-            return _count_pallas_calls(v)
-        if isinstance(v, (tuple, list)):
-            return sum(of_param(x) for x in v)
-        return 0
-
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-        total += sum(of_param(v) for v in eqn.params.values())
-    return total
 
 
 def _time_pair(fused, unfused, *args, repeats: int):

@@ -1,0 +1,52 @@
+"""Static kernel-contract auditor (DESIGN.md §13).
+
+Traces every registered resampler entry point — and every stack consumer —
+to a jaxpr and checks the counted invariants the repo's speed argument
+rests on: launch budgets, forbidden host-side ``cond``/gather, RNG
+discipline, static VMEM footprints and the paper's §2.4 transaction
+counts.  CLI: ``python -m repro.analysis --check``.
+"""
+
+from repro.analysis.consumers import audit_consumers, auto_reference_rng
+from repro.analysis.contracts import (
+    CellReport,
+    Contract,
+    Waiver,
+    audit_jaxpr,
+    audit_matrix,
+    trace_cell,
+)
+from repro.analysis.report import build_report, summarise, transaction_report
+from repro.analysis.rng import rng_findings
+from repro.analysis.vmem import kernel_footprints, vmem_findings
+from repro.analysis.walker import (
+    Finding,
+    ancestor_roundtrips,
+    count_pallas_calls,
+    count_primitive,
+    iter_eqns,
+    primitive_census,
+)
+
+__all__ = [
+    "CellReport",
+    "Contract",
+    "Finding",
+    "Waiver",
+    "ancestor_roundtrips",
+    "audit_consumers",
+    "audit_jaxpr",
+    "audit_matrix",
+    "auto_reference_rng",
+    "build_report",
+    "count_pallas_calls",
+    "count_primitive",
+    "iter_eqns",
+    "kernel_footprints",
+    "primitive_census",
+    "rng_findings",
+    "summarise",
+    "trace_cell",
+    "transaction_report",
+    "vmem_findings",
+]

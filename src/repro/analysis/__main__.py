@@ -1,0 +1,85 @@
+"""CLI for the static contract auditor.
+
+    python -m repro.analysis --check [--json PATH]
+                             [--families megopolis,...]
+                             [--backends pallas_interpret,...]
+                             [--no-consumers] [--no-transactions]
+    python -m repro.analysis --selftest
+
+``--check`` exits non-zero on any unwaived violation; ``--selftest``
+verifies every analyzer pass still catches its bad fixture.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _csv(value):
+    return tuple(v for v in value.split(",") if v) or None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Audit the resampler matrix against its static contracts.",
+    )
+    ap.add_argument("--check", action="store_true",
+                    help="run the full audit; non-zero exit on violation")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify each pass catches its bad fixture")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full machine-readable report to PATH")
+    ap.add_argument("--families", type=_csv, default=None,
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--backends", type=_csv, default=None,
+                    help="comma-separated backends (default: all)")
+    ap.add_argument("--entries", type=_csv, default=None,
+                    help="comma-separated entry points (default: all)")
+    ap.add_argument("--no-consumers", action="store_true",
+                    help="skip the consumer-program audits")
+    ap.add_argument("--no-large-n", action="store_true",
+                    help="skip the residency-edge footprint pricing")
+    ap.add_argument("--no-transactions", action="store_true",
+                    help="skip the §2.4 transaction pricing")
+    args = ap.parse_args(argv)
+
+    if not (args.check or args.selftest):
+        ap.print_help()
+        return 2
+
+    rc = 0
+    if args.selftest:
+        from repro.analysis.fixtures import selftest
+
+        problems = selftest()
+        for p in problems:
+            print(f"selftest: {p}", file=sys.stderr)
+        print(f"selftest: {'OK' if not problems else 'FAILED'}")
+        rc = max(rc, 1 if problems else 0)
+
+    if args.check:
+        from repro.analysis.report import build_report, summarise
+
+        report = build_report(
+            families=args.families,
+            backends=args.backends,
+            entries=args.entries,
+            consumers=not args.no_consumers,
+            large_n=not args.no_large_n,
+            transactions=not args.no_transactions,
+        )
+        if args.json:
+            with open(args.json, "w") as fh:
+                json.dump(report, fh, indent=2, sort_keys=True)
+            print(f"report written to {args.json}")
+        print(summarise(report))
+        rc = max(rc, 0 if report["ok"] else 1)
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

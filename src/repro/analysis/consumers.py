@@ -1,0 +1,240 @@
+"""Traced contracts for the stack's resampler consumers (DESIGN.md §13).
+
+The matrix audit proves each entry point honest in isolation; this module
+proves the *consumers* kept their promises after composition — the §11/§12
+claims ("one fused launch per filter step", "no host branch around the
+resampler", "ancestors never round-trip through HBM") are re-derived from
+the consumers' own jaxprs instead of being grepped out of their source.
+
+Covered programs, each traced on the ``pallas_interpret`` Megopolis spec
+(interpret mode shares launch structure with compiled pallas, so the audit
+runs on any host):
+
+  * ``pf.ParticleFilter.step`` / ``step_conditional`` and the scan drivers
+    ``run_filter`` / ``run_filter_bank`` (conditional SIR);
+  * ``ais.run_smc_sampler`` / ``run_smc_sampler_bank`` plus the
+    adaptive-schedule + MALA variant (the widest sampler code path);
+  * ``smc.decode.smc_decode`` — the one consumer whose contract *allows*
+    ancestor-indexed gathers: the mixed-dtype KV cache cannot ride the f32
+    plane stack, so the cache gather is priced and allowed, not forbidden.
+
+``auto_reference_rng`` additionally sweeps the adaptive-``num_iters``
+reference paths (never kernel-traceable — 'auto' needs concrete weights)
+through the RNG lint.  Megopolis' documented deliberate deviation — the
+wrapper and the kernel derive the SAME offsets split so injected offsets
+reproduce the auto stream bit-for-bit — is waived, not hidden: the waiver
+reason lands in the report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import (
+    AUDIT_N,
+    Contract,
+    Waiver,
+    audit_jaxpr,
+)
+from repro.analysis.rng import rng_findings
+from repro.analysis.walker import Finding
+from repro.core.spec import spec_for_backend
+
+#: Backend every consumer is audited on (launch structure == 'pallas').
+AUDIT_BACKEND = "pallas_interpret"
+
+#: Direct (iterate-and-compare) families whose reference path supports the
+#: adaptive iteration rule; swept by ``auto_reference_rng``.
+AUTO_FAMILIES = ("megopolis", "metropolis", "metropolis_c1", "metropolis_c2")
+
+MEGOPOLIS_AUTO_WAIVER = Waiver(
+    code="key-reuse",
+    match="random_split, random_split",
+    reason=(
+        "megopolis 'auto' reference: the wrapper splits the key for the "
+        "offsets draw and megopolis() re-splits identically BY DESIGN, so "
+        "injecting the drawn offsets reproduces the same derivation "
+        "(documented in core/resamplers/megopolis.py; changing either "
+        "split would change the golden streams)"
+    ),
+)
+
+
+def _spec():
+    return spec_for_backend("megopolis", AUDIT_BACKEND)
+
+
+def _pf(conditional: bool):
+    from repro.pf.filter import ParticleFilter
+    from repro.pf.models import ungm
+
+    return ParticleFilter(
+        model=ungm(),
+        num_particles=AUDIT_N,
+        resampler=_spec(),
+        ess_threshold=0.5 if conditional else None,
+    )
+
+
+def _trace_pf_step():
+    pf = _pf(conditional=False)
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((AUDIT_N,), jnp.float32)
+    return jax.make_jaxpr(lambda k, p, z: pf.step(k, p, z, 1.0))(key, x, 0.5)
+
+
+def _trace_pf_step_conditional():
+    pf = _pf(conditional=True)
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((AUDIT_N,), jnp.float32)
+    lw = jnp.zeros((AUDIT_N,), jnp.float32)
+    return jax.make_jaxpr(
+        lambda k, p, w, z: pf.step_conditional(k, p, w, z, 1.0)
+    )(key, x, lw, 0.5)
+
+
+def _trace_run_filter():
+    from repro.pf.filter import run_filter
+
+    pf = _pf(conditional=True)
+    key = jax.random.PRNGKey(0)
+    obs = jnp.zeros((5,), jnp.float32)
+    return jax.make_jaxpr(lambda k, z: run_filter(k, pf, z))(key, obs)
+
+
+def _trace_run_filter_bank():
+    from repro.pf.filter import run_filter_bank
+
+    pf = _pf(conditional=True)
+    key = jax.random.PRNGKey(0)
+    obs = jnp.zeros((3, 5), jnp.float32)
+    return jax.make_jaxpr(lambda k, z: run_filter_bank(k, pf, z))(key, obs)
+
+
+def _ais_cfg(**overrides):
+    from repro.ais.sampler import SMCSamplerConfig
+
+    base = dict(num_particles=AUDIT_N, num_temps=4, resampler=_spec())
+    return SMCSamplerConfig(**(base | overrides))
+
+
+def _trace_ais():
+    from repro.ais.sampler import run_smc_sampler
+    from repro.ais.targets import gaussian_mixture
+
+    target, cfg = gaussian_mixture(), _ais_cfg()
+    return jax.make_jaxpr(lambda k: run_smc_sampler(k, target, cfg))(
+        jax.random.PRNGKey(0)
+    )
+
+
+def _trace_ais_bank():
+    from repro.ais.sampler import run_smc_sampler_bank
+    from repro.ais.targets import gaussian_mixture
+
+    target, cfg = gaussian_mixture(), _ais_cfg()
+    return jax.make_jaxpr(
+        lambda k: run_smc_sampler_bank(k, target, cfg, num_scenarios=3)
+    )(jax.random.PRNGKey(0))
+
+
+def _trace_ais_adaptive_mala():
+    from repro.ais.sampler import run_smc_sampler
+    from repro.ais.targets import gaussian_mixture
+
+    target = gaussian_mixture()
+    cfg = _ais_cfg(schedule="adaptive", move="mala")
+    return jax.make_jaxpr(lambda k: run_smc_sampler(k, target, cfg))(
+        jax.random.PRNGKey(0)
+    )
+
+
+#: Decode needs N % 1024 == 0 on the kernel backends.
+DECODE_PARTICLES = 1024
+
+
+def _trace_decode():
+    """Trace ``smc_decode`` end-to-end over abstract model params — the
+    transformer weights are ``jax.eval_shape`` phantoms, so the audit never
+    materialises the model."""
+    from repro.configs import get_arch
+    from repro.models import init_params, prefill
+    from repro.smc.decode import SMCDecodeConfig, smc_decode
+
+    cfg = dataclasses.replace(
+        get_arch("qwen3-0.6b").smoke, dtype=jnp.float32, remat=False
+    )
+    smc_cfg = SMCDecodeConfig(
+        num_particles=DECODE_PARTICLES, max_new_tokens=3, resampler=_spec()
+    )
+    prompt_len, max_seq = 4, 4 + smc_cfg.max_new_tokens
+    prompts = jnp.zeros((DECODE_PARTICLES, prompt_len), jnp.int32)
+    params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    caches = jax.eval_shape(
+        lambda p: prefill(p, cfg, prompts, max_seq=max_seq)[1], params
+    )
+    first = jnp.zeros((DECODE_PARTICLES,), jnp.int32)
+
+    def fn(p, c, ft, k):
+        tokens, log_w, _ = smc_decode(
+            p, cfg, smc_cfg, c, ft, prompt_len - 1, k
+        )
+        return tokens, log_w
+
+    return jax.make_jaxpr(fn)(params, caches, first, jax.random.PRNGKey(1))
+
+
+#: name -> (trace fn, contract).  Launch budgets are per static launch
+#: *site*: every consumer funnels resampling through ONE fused step/apply
+#: launch inside its scan body (DESIGN.md §11-§12).
+CONSUMER_CONTRACTS = {
+    "pf.step": (_trace_pf_step, Contract(max_launches=1)),
+    "pf.step_conditional": (_trace_pf_step_conditional, Contract(max_launches=1)),
+    "pf.run_filter": (_trace_run_filter, Contract(max_launches=1)),
+    "pf.run_filter_bank": (_trace_run_filter_bank, Contract(max_launches=1)),
+    "ais.run_smc_sampler": (_trace_ais, Contract(max_launches=1)),
+    "ais.run_smc_sampler_bank": (_trace_ais_bank, Contract(max_launches=1)),
+    "ais.adaptive_mala": (_trace_ais_adaptive_mala, Contract(max_launches=1)),
+    "smc.decode": (_trace_decode, Contract(max_launches=1, allow_tainted_gather=True)),
+}
+
+
+def audit_consumers(names=None, *, include_decode: bool = True):
+    """Trace + audit each consumer program; yields CellReports."""
+    selected = names or CONSUMER_CONTRACTS
+    for name in selected:
+        if name == "smc.decode" and not include_decode and names is None:
+            continue
+        tracer, contract = CONSUMER_CONTRACTS[name]
+        yield audit_jaxpr(name, tracer(), contract)
+
+
+def auto_reference_rng(families=AUTO_FAMILIES):
+    """RNG-lint the adaptive-iteration reference paths; yields
+    ``(cell, kept findings, waived)`` triples."""
+    key = jax.random.PRNGKey(0)
+    w = jnp.full((AUDIT_N,), 1.0 / AUDIT_N, jnp.float32)
+    for name in families:
+        resampler = spec_for_backend(name, "reference", num_iters="auto").build()
+        jaxpr = jax.make_jaxpr(lambda k, ww: resampler(k, ww))(key, w)
+        found = rng_findings(jaxpr)
+        kept, waived = [], []
+        for f in found:
+            if name == "megopolis" and MEGOPOLIS_AUTO_WAIVER.covers(f):
+                waived.append(
+                    {"finding": f.as_dict(), "reason": MEGOPOLIS_AUTO_WAIVER.reason}
+                )
+            else:
+                kept.append(f)
+        yield f"{name}/reference/auto", kept, waived
+
+
+def auto_reference_findings() -> list[Finding]:
+    """Flat list of unwaived findings from the 'auto' reference sweep."""
+    out: list[Finding] = []
+    for _, kept, _ in auto_reference_rng():
+        out.extend(kept)
+    return out

@@ -1,0 +1,259 @@
+"""Per-cell contract table + trace-and-audit driver (DESIGN.md §13).
+
+A *cell* is one ``(family, backend, entry)`` triple from
+``core.spec.contract_cells``; its contract bundles the declared invariants:
+
+  * ``max_launches`` — ``core.spec.launch_budget`` (0 off the pallas
+    backends; the §12 fused step is 1 for EVERY family);
+  * ``allow_cond`` — host-level ``lax.cond`` is forbidden everywhere (the
+    §12 rule: branching is resolved in-kernel with ``jnp.where``/
+    ``pl.when``; kernel-internal predication is not counted);
+  * ``allow_tainted_gather`` — the ancestors-through-HBM round-trip is
+    forbidden everywhere in the resampler matrix (the §11 rule); only the
+    decode consumer, whose mixed-dtype KV cache cannot ride the f32 plane
+    stack, waives it (see ``consumers.py``);
+  * RNG discipline — always on; deliberate deviations carry explicit
+    ``Waiver`` entries with the reason in the report.
+
+Tracing is compute-free (``jax.make_jaxpr``), so the full 320-cell matrix
+audits in seconds and a 1M-particle footprint can be priced without
+allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import rng, vmem, walker
+from repro.analysis.walker import Finding
+from repro.core.resamplers.batched import split_batch_keys
+from repro.core.spec import (
+    ENTRY_POINTS,
+    contract_cells,
+    launch_budget,
+    spec_for_backend,
+)
+
+# Audit geometry: two VMEM tiles of particles, a 3-row bank, a 4-component
+# state — the same shapes the parity tests pin, kernel-legal on every cell.
+AUDIT_N = 2048
+AUDIT_BATCH = 3
+AUDIT_STATE_DIM = 4
+AUDIT_NUM_ITERS = 16
+AUDIT_MAX_ITERS = 64
+AUDIT_THRESHOLD = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    """An explicitly waived finding: ``code`` + a substring of the detail,
+    with the reason recorded in the report."""
+
+    code: str
+    match: str
+    reason: str
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.code == self.code and (
+            self.match in finding.detail or self.match in finding.where
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Declared invariants for one traced program."""
+
+    max_launches: int
+    allow_cond: bool = False
+    allow_tainted_gather: bool = False
+    waivers: tuple = ()
+
+
+@dataclasses.dataclass
+class CellReport:
+    """Audit result for one traced program against its contract."""
+
+    cell: str
+    launches: int
+    max_launches: int
+    cond_count: int
+    tainted_gathers: int
+    rng_findings: list
+    vmem_over: list
+    footprints: list
+    waived: list
+    violations: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_dict(self):
+        return {
+            "cell": self.cell,
+            "ok": self.ok,
+            "launches": self.launches,
+            "max_launches": self.max_launches,
+            "cond_count": self.cond_count,
+            "tainted_gathers": self.tainted_gathers,
+            "rng_findings": [f.as_dict() for f in self.rng_findings],
+            "vmem_over": [f.as_dict() for f in self.vmem_over],
+            "vmem_bytes": [fp.vmem_bytes for fp in self.footprints],
+            "waived": self.waived,
+            "violations": self.violations,
+        }
+
+
+def audit_jaxpr(cell: str, jaxpr, contract: Contract) -> CellReport:
+    """Run all jaxpr-level passes on one traced program and grade the
+    result against its contract."""
+    launches = walker.count_pallas_calls(jaxpr)
+    cond_count = walker.count_primitive(jaxpr, "cond", into_kernels=False)
+    roundtrips = walker.ancestor_roundtrips(jaxpr)
+    rng_found = rng.rng_findings(jaxpr)
+    footprints = vmem.kernel_footprints(jaxpr)
+    vmem_over = vmem.vmem_findings(jaxpr)
+
+    waived, violations = [], []
+
+    def grade(findings):
+        kept = []
+        for f in findings:
+            waiver = next((w for w in contract.waivers if w.covers(f)), None)
+            if waiver is not None:
+                waived.append({"finding": f.as_dict(), "reason": waiver.reason})
+            else:
+                kept.append(f)
+        return kept
+
+    if launches > contract.max_launches:
+        violations.append(
+            f"{launches} pallas_call launches exceed the declared budget "
+            f"of {contract.max_launches}"
+        )
+    if cond_count and not contract.allow_cond:
+        violations.append(
+            f"{cond_count} host-level lax.cond primitive(s) on the resample "
+            "path (branching must be jnp.where/pl.when, DESIGN.md §12)"
+        )
+    roundtrips = grade(roundtrips)
+    if roundtrips and not contract.allow_tainted_gather:
+        violations.extend(str(f) for f in roundtrips)
+    rng_found = grade(rng_found)
+    violations.extend(str(f) for f in rng_found)
+    vmem_over = grade(vmem_over)
+    violations.extend(str(f) for f in vmem_over)
+
+    return CellReport(
+        cell=cell,
+        launches=launches,
+        max_launches=contract.max_launches,
+        cond_count=cond_count,
+        tainted_gathers=len(roundtrips),
+        rng_findings=rng_found,
+        vmem_over=vmem_over,
+        footprints=footprints,
+        waived=waived,
+        violations=violations,
+    )
+
+
+# ------------------------------------------------------- matrix cell tracing
+def _audit_args(n=AUDIT_N, batch=AUDIT_BATCH, d=AUDIT_STATE_DIM):
+    key = jax.random.PRNGKey(0)
+    keys = split_batch_keys(key, batch)
+    return {
+        "key": key,
+        "keys": keys,
+        "w": jnp.full((n,), 1.0 / n, jnp.float32),
+        "wb": jnp.full((batch, n), 1.0 / n, jnp.float32),
+        "lw": jnp.zeros((n,), jnp.float32),
+        "lwb": jnp.zeros((batch, n), jnp.float32),
+        "p": jnp.zeros((n, d), jnp.float32),
+        "pb": jnp.zeros((batch, n, d), jnp.float32),
+    }
+
+
+def entry_callable(resampler, entry: str, args: Optional[dict] = None):
+    """``(fn, call_args)`` tracing one entry point of a built resampler."""
+    a = _audit_args() if args is None else args
+    thr = AUDIT_THRESHOLD
+    table = {
+        "call": (lambda k, w: resampler(k, w), (a["key"], a["w"])),
+        "batch": (lambda k, w: resampler.batch(k, w), (a["key"], a["wb"])),
+        "batch_rows": (
+            lambda ks, w: resampler.batch_rows(ks, w),
+            (a["keys"], a["wb"]),
+        ),
+        "apply": (
+            lambda k, w, p: resampler.apply(k, w, p),
+            (a["key"], a["w"], a["p"]),
+        ),
+        "apply_batch": (
+            lambda k, w, p: resampler.apply_batch(k, w, p),
+            (a["key"], a["wb"], a["pb"]),
+        ),
+        "apply_rows": (
+            lambda ks, w, p: resampler.apply_rows(ks, w, p),
+            (a["keys"], a["wb"], a["pb"]),
+        ),
+        "step": (
+            lambda k, lw, p: resampler.step(k, lw, p, thr),
+            (a["key"], a["lw"], a["p"]),
+        ),
+        "step_rows": (
+            lambda ks, lw, p: resampler.step_rows(ks, lw, p, thr),
+            (a["keys"], a["lwb"], a["pb"]),
+        ),
+    }
+    if entry not in table:
+        raise KeyError(f"unknown entry point {entry!r}; choices: {ENTRY_POINTS}")
+    return table[entry]
+
+
+def trace_cell(name: str, backend: str, entry: str, args: Optional[dict] = None):
+    """Trace one matrix cell to a ClosedJaxpr (no execution)."""
+    resampler = spec_for_backend(
+        name, backend, num_iters=AUDIT_NUM_ITERS, max_iters=AUDIT_MAX_ITERS
+    ).build()
+    fn, call_args = entry_callable(resampler, entry, args)
+    return jax.make_jaxpr(fn)(*call_args)
+
+
+def cell_contract(name: str, backend: str, entry: str) -> Contract:
+    return Contract(max_launches=launch_budget(name, backend, entry))
+
+
+def audit_matrix(families=None, backends=None, entries=None):
+    """Trace + audit every requested matrix cell; yields CellReports.
+
+    One shared args dict keeps tracing cheap; cells are independent, so a
+    failure in one family still reports every other cell.
+    """
+    args = _audit_args()
+    for name, backend, entry in contract_cells(families, backends, entries):
+        cell = f"{name}/{backend}/{entry}"
+        jaxpr = trace_cell(name, backend, entry, args)
+        yield audit_jaxpr(cell, jaxpr, cell_contract(name, backend, entry))
+
+
+def audit_large_n_footprints(families=None):
+    """Price the fused kernels at the residency-budget edge WITHOUT
+    running them — the static complement of the ``check_state_resident``
+    runtime guard.  N = 2^18 with a 4-component (pad 8) state sits exactly
+    at ``N * pad_state_dim(d) == MAX_VMEM_STATE``, the largest geometry
+    the runtime guards admit.  Only the single-row fused entries are
+    priced: the bank paths grid over rows with the same per-step blocks."""
+    n = 1 << 18
+    d = 4  # pad_state_dim(4) == 8, so N * 8 == MAX_VMEM_STATE exactly
+    args = _audit_args(n=n, batch=1, d=d)
+    for name, backend, entry in contract_cells(
+        families, backends=("pallas_interpret",), entries=("apply", "step")
+    ):
+        cell = f"{name}/{backend}/{entry}@N={n},d={d}"
+        jaxpr = trace_cell(name, backend, entry, args)
+        yield audit_jaxpr(cell, jaxpr, cell_contract(name, backend, entry))

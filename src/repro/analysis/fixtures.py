@@ -1,0 +1,150 @@
+"""Deliberately-broken programs that prove each analyzer pass fires.
+
+A static checker that has never caught anything is indistinguishable from
+one that checks nothing, so every pass ships with a program violating
+exactly its invariant (and honouring the others).  ``tests/test_analysis.py``
+asserts the one-finding-per-fixture mapping, and the CLI's ``--selftest``
+re-runs it in CI.
+
+All fixtures trace in interpret mode on any host; the oversized-VMEM one
+is TRACE-ONLY (the whole point is a footprint no core could hold).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.contracts import Contract, audit_jaxpr
+
+_N = 2048
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _copy_launch(x, *, interpret=True):
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def extra_launch(w):
+    """Budget says ONE launch; this stages the copy through a second
+    kernel — the classic unfused two-pass shape the launch auditor exists
+    to catch."""
+    return _copy_launch(_copy_launch(w))
+
+
+def _iota_kernel(o_ref):
+    o_ref[...] = jax.lax.broadcasted_iota(jnp.int32, o_ref.shape, 1)
+
+
+def hbm_roundtrip(w, state):
+    """Ancestors leave a kernel and index a host-side ``jnp.take`` — the
+    §11 HBM round-trip the fused apply/step paths eliminated."""
+    idx = pl.pallas_call(
+        _iota_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, w.shape[0]), jnp.int32),
+        interpret=True,
+    )()[0]
+    return jnp.take(state, idx, axis=0)
+
+
+def reused_key(key, w):
+    """The same PRNG key drawn from twice — correlated streams, the
+    silent-failure mode the RNG survey warns about."""
+    u = jax.random.uniform(key, w.shape)
+    g = jax.random.normal(key, w.shape)
+    return w + u + g
+
+
+def key_dropped_in_branch(key, w, flag):
+    """A key consumed in one ``lax.cond`` branch and ignored in the other:
+    whether the stream advances becomes data-dependent.  (The fixture's
+    contract allows the cond itself so only the RNG pass fires.)"""
+    return jax.lax.cond(
+        flag,
+        lambda k, ww: ww + jax.random.uniform(k, ww.shape),
+        lambda k, ww: ww,
+        key,
+        w,
+    )
+
+
+def oversized_vmem(x):
+    """A whole-array kernel over 8M f32 — 32 MiB resident input alone,
+    past any residency budget.  Trace-only."""
+    return _copy_launch(x, interpret=False)
+
+
+#: fixture name -> (trace thunk, contract, the pass expected to fire).
+FIXTURES = {
+    "extra_launch": (
+        lambda: jax.make_jaxpr(extra_launch)(jnp.zeros((_N,), jnp.float32)),
+        Contract(max_launches=1),
+        "launches",
+    ),
+    "hbm_roundtrip": (
+        lambda: jax.make_jaxpr(hbm_roundtrip)(
+            jnp.zeros((_N,), jnp.float32), jnp.zeros((_N, 4), jnp.float32)
+        ),
+        Contract(max_launches=1),
+        "census",
+    ),
+    "reused_key": (
+        lambda: jax.make_jaxpr(reused_key)(
+            jax.random.PRNGKey(0), jnp.zeros((_N,), jnp.float32)
+        ),
+        Contract(max_launches=0),
+        "rng",
+    ),
+    "key_dropped_in_branch": (
+        lambda: jax.make_jaxpr(key_dropped_in_branch)(
+            jax.random.PRNGKey(0), jnp.zeros((_N,), jnp.float32), True
+        ),
+        Contract(max_launches=0, allow_cond=True),
+        "rng",
+    ),
+    "oversized_vmem": (
+        lambda: jax.make_jaxpr(oversized_vmem)(
+            jnp.zeros((1 << 23,), jnp.float32)
+        ),
+        Contract(max_launches=1),
+        "vmem",
+    ),
+}
+
+
+def audit_fixtures():
+    """Audit every fixture; yields ``(name, expected_pass, CellReport)``."""
+    for name, (tracer, contract, expected) in FIXTURES.items():
+        yield name, expected, audit_jaxpr(f"fixture:{name}", tracer(), contract)
+
+
+def selftest() -> list[str]:
+    """Returns a list of problems; empty means every pass catches its
+    fixture (and nothing else fires)."""
+    problems = []
+    for name, expected, rep in audit_fixtures():
+        if rep.ok:
+            problems.append(f"{name}: expected a {expected} violation, got none")
+            continue
+        matched = {
+            "launches": any("launches exceed" in v for v in rep.violations),
+            "census": any("ancestor-roundtrip" in v for v in rep.violations),
+            "rng": any("[rng:" in v for v in rep.violations),
+            "vmem": any("[vmem:" in v for v in rep.violations),
+        }
+        if not matched[expected]:
+            problems.append(
+                f"{name}: expected the {expected} pass to fire, got {rep.violations}"
+            )
+        others = [k for k, hit in matched.items() if hit and k != expected]
+        if others:
+            problems.append(f"{name}: unexpected extra findings from {others}")
+    return problems

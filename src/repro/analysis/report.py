@@ -1,0 +1,148 @@
+"""Aggregate analyzer report (DESIGN.md §13).
+
+One call produces the whole machine-readable audit: the family × backend ×
+entry matrix, the large-N footprint pricing, the consumer contracts, the
+adaptive-reference RNG sweep, and the §2.4 transaction table.  The CLI
+(``python -m repro.analysis``) and the benchmark harness
+(``benchmarks/analysis_bench.py``) both serialise exactly this object, so
+"what CI enforces" and "what the paper tables report" cannot drift.
+"""
+
+from __future__ import annotations
+
+from repro.analysis import consumers as consumers_mod
+from repro.analysis import contracts as contracts_mod
+from repro.core.transactions import (
+    MEGOPOLIS_EXACT,
+    measured_transaction_stats,
+)
+
+#: Families priced by the §2.4 transaction model (the iterate-and-compare
+#: GPU families the paper counts; prefix-sum/rejection have no
+#: comparison-index stream to price).
+TRANSACTION_FAMILIES = ("megopolis", "metropolis", "metropolis_c1", "metropolis_c2")
+
+
+def transaction_report(*, n: int = 4096, num_iters: int = 32) -> dict:
+    """Measured vs declared §2.4 transactions per warp-iteration; each
+    family entry carries ``ok`` (measured max within the declared bound;
+    Megopolis additionally max == mean == 4 exactly)."""
+    out = {}
+    for name in TRANSACTION_FAMILIES:
+        stats = measured_transaction_stats(name, n=n, num_iters=num_iters)
+        ok = stats["max"] <= stats["bound"]
+        if name == "megopolis":
+            ok = ok and stats["max"] == MEGOPOLIS_EXACT and stats["mean"] == float(
+                MEGOPOLIS_EXACT
+            )
+        out[name] = {**stats, "ok": ok}
+    return out
+
+
+def build_report(
+    *,
+    families=None,
+    backends=None,
+    entries=None,
+    consumers: bool = True,
+    large_n: bool = True,
+    transactions: bool = True,
+) -> dict:
+    """Run every audit and return one JSON-serialisable report.
+
+    ``report["ok"]`` is the single bit CI gates on: every cell honest,
+    every consumer honest, no unwaived RNG finding, every measured
+    transaction count within its declared §2.4 bound.
+    """
+    matrix = [
+        rep.as_dict()
+        for rep in contracts_mod.audit_matrix(families, backends, entries)
+    ]
+    report: dict = {
+        "matrix": matrix,
+        "matrix_cells": len(matrix),
+        "matrix_violations": [c for c in matrix if not c["ok"]],
+    }
+
+    if large_n:
+        big = [rep.as_dict() for rep in contracts_mod.audit_large_n_footprints(families)]
+        report["large_n"] = big
+        report["large_n_violations"] = [c for c in big if not c["ok"]]
+
+    if consumers:
+        cons = [rep.as_dict() for rep in consumers_mod.audit_consumers()]
+        auto = [
+            {
+                "cell": cell,
+                "ok": not kept,
+                "findings": [f.as_dict() for f in kept],
+                "waived": waived,
+            }
+            for cell, kept, waived in consumers_mod.auto_reference_rng()
+        ]
+        report["consumers"] = cons
+        report["consumer_violations"] = [c for c in cons if not c["ok"]]
+        report["auto_reference_rng"] = auto
+        report["auto_reference_violations"] = [a for a in auto if not a["ok"]]
+
+    if transactions:
+        tx = transaction_report()
+        report["transactions"] = tx
+        report["transaction_violations"] = {
+            k: v for k, v in tx.items() if not v["ok"]
+        }
+
+    report["ok"] = not (
+        report["matrix_violations"]
+        or report.get("large_n_violations")
+        or report.get("consumer_violations")
+        or report.get("auto_reference_violations")
+        or report.get("transaction_violations")
+    )
+    return report
+
+
+def summarise(report: dict) -> str:
+    """Human-readable digest of ``build_report``'s output."""
+    lines = [
+        f"matrix: {report['matrix_cells']} cells, "
+        f"{len(report['matrix_violations'])} violation(s)"
+    ]
+    if "large_n" in report:
+        lines.append(
+            f"large-N footprints: {len(report['large_n'])} cells, "
+            f"{len(report['large_n_violations'])} violation(s)"
+        )
+    if "consumers" in report:
+        lines.append(
+            f"consumers: {len(report['consumers'])} programs, "
+            f"{len(report['consumer_violations'])} violation(s); "
+            f"auto-reference rng: {len(report['auto_reference_violations'])} "
+            "violation(s)"
+        )
+        waived = sum(len(c["waived"]) for c in report["consumers"]) + sum(
+            len(a["waived"]) for a in report["auto_reference_rng"]
+        )
+        if waived:
+            lines.append(f"waivers applied: {waived}")
+    if "transactions" in report:
+        tx = report["transactions"]
+        parts = ", ".join(
+            f"{k}: max {v['max']}/bound {v['bound']}" for k, v in tx.items()
+        )
+        lines.append(f"transactions per warp-iteration: {parts}")
+    for section in (
+        "matrix_violations",
+        "large_n_violations",
+        "consumer_violations",
+    ):
+        for cell in report.get(section, []):
+            for v in cell["violations"]:
+                lines.append(f"  VIOLATION {cell['cell']}: {v}")
+    for a in report.get("auto_reference_violations", []):
+        for f in a["findings"]:
+            lines.append(f"  VIOLATION {a['cell']}: [{f['pass_name']}:{f['code']}] {f['detail']}")
+    for k, v in report.get("transaction_violations", {}).items():
+        lines.append(f"  VIOLATION transactions/{k}: max {v['max']} > bound {v['bound']}")
+    lines.append("OK" if report["ok"] else "FAILED")
+    return "\n".join(lines)

@@ -1,0 +1,107 @@
+"""Static VMEM estimator (DESIGN.md §13, pass 4).
+
+The dynamic residency guards (``check_state_resident`` /
+``check_vmem_resident``) fire at wrapper level from N and state_dim; this
+pass prices the launch itself: for every traced ``pallas_call`` it sums
+the resident bytes of each kernel operand straight off the kernel jaxpr's
+input avals — whole-array VMEM operands, per-grid-step blocks, and
+``vmem``-space scratch — skipping ``smem`` scalars, and checks the total
+against ``kernels.common.vmem_budget_bytes()``.  Because it works on the
+trace, it can price a 1M-particle launch without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.walker import Finding, JaxprLike, pallas_call_eqns
+from repro.kernels.common import block_bytes, vmem_budget_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    """Resident footprint of one traced ``pallas_call``."""
+
+    path: str
+    grid: tuple
+    vmem_bytes: int
+    smem_bytes: int
+    blocks: tuple  # (shape, dtype-name, space) per kernel operand
+    budget_bytes: int
+
+    @property
+    def within_budget(self) -> bool:
+        return self.vmem_bytes <= self.budget_bytes
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d["within_budget"] = self.within_budget
+        d["blocks"] = [list(b) for b in self.blocks]
+        d["grid"] = list(self.grid)
+        return d
+
+
+def _memory_space(aval) -> str:
+    """'smem' / 'vmem' for explicitly-placed refs; blocked operands carry
+    no memory_space on their block avals and default to VMEM."""
+    space = getattr(aval, "memory_space", None)
+    if space is None:
+        return "vmem"
+    return str(space).lower().strip("<>")
+
+
+def kernel_footprints(jaxpr: JaxprLike, budget_bytes: int | None = None):
+    """Price every ``pallas_call`` in a traced program.
+
+    The kernel jaxpr's invars are exactly the refs the kernel touches —
+    scalar-prefetch operands, input blocks, output blocks and scratch —
+    each carrying the post-BlockSpec *block* shape, which is precisely
+    what stays VMEM-resident per grid step.
+    """
+    budget = vmem_budget_bytes() if budget_bytes is None else budget_bytes
+    out = []
+    for eqn, path in pallas_call_eqns(jaxpr):
+        kernel = eqn.params["jaxpr"]
+        grid_mapping = eqn.params.get("grid_mapping")
+        grid = tuple(int(g) for g in getattr(grid_mapping, "grid", ()) or ())
+        vmem = smem = 0
+        blocks = []
+        for v in kernel.invars:
+            aval = v.aval
+            shape = tuple(int(s) for s in getattr(aval, "shape", ()))
+            space = _memory_space(aval)
+            nbytes = block_bytes(shape, aval.dtype)
+            if "smem" in space:
+                smem += nbytes
+            else:
+                vmem += nbytes
+            blocks.append((shape, str(aval.dtype), space))
+        out.append(
+            KernelFootprint(
+                path=path,
+                grid=grid,
+                vmem_bytes=vmem,
+                smem_bytes=smem,
+                blocks=tuple(blocks),
+                budget_bytes=budget,
+            )
+        )
+    return out
+
+
+def vmem_findings(jaxpr: JaxprLike, budget_bytes: int | None = None) -> list[Finding]:
+    """Findings for every launch whose static footprint exceeds budget."""
+    findings = []
+    for fp in kernel_footprints(jaxpr, budget_bytes):
+        if not fp.within_budget:
+            findings.append(
+                Finding(
+                    "vmem",
+                    "over-budget",
+                    fp.path,
+                    f"kernel keeps {fp.vmem_bytes} bytes VMEM-resident "
+                    f"(budget {fp.budget_bytes}; grid {fp.grid or '()'}; "
+                    f"{len(fp.blocks)} blocks)",
+                )
+            )
+    return findings

@@ -32,7 +32,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -30,7 +30,6 @@ Ancestor payloads: ``gather_ancestors`` (exact, all-gather) or
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

@@ -55,27 +55,27 @@ def improved_systematic(key: jax.Array, weights: jnp.ndarray, num_iters: int = 0
     u = (jnp.arange(n, dtype=weights.dtype) + u0) * (c[-1] / n)
 
     def walk(i, ui):
-        # Phase 1 (Alg. 8 lines 8-18): a <- i + min{l >= 0 : c[i+l] >= ui}.
+        # Phase 1 (Alg. 8 lines 8-18): a <- i + min{off >= 0 : c[i+off] >= ui}.
         def up_cond(state):
-            a, l = state
-            in_range = (i + l) <= (n - 1)
-            return in_range & (c[jnp.minimum(i + l, n - 1)] < ui)
+            a, off = state
+            in_range = (i + off) <= (n - 1)
+            return in_range & (c[jnp.minimum(i + off, n - 1)] < ui)
 
         def up_body(state):
-            a, l = state
-            return a + 1, l + 1
+            a, off = state
+            return a + 1, off + 1
 
         a, _ = jax.lax.while_loop(up_cond, up_body, (i, jnp.int32(0)))
 
-        # Phase 2 (lines 19-29): walk down while c[i - l] >= ui.
+        # Phase 2 (lines 19-29): walk down while c[i - off] >= ui.
         def dn_cond(state):
-            a2, l = state
-            in_range = i >= l
-            return in_range & (c[jnp.maximum(i - l, 0)] >= ui)
+            a2, off = state
+            in_range = i >= off
+            return in_range & (c[jnp.maximum(i - off, 0)] >= ui)
 
         def dn_body(state):
-            a2, l = state
-            return a2 - 1, l + 1
+            a2, off = state
+            return a2 - 1, off + 1
 
         a2, _ = jax.lax.while_loop(dn_cond, dn_body, (a, jnp.int32(1)))
         return jnp.clip(a2, 0, n - 1)

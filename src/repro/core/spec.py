@@ -1160,3 +1160,89 @@ def get_resampler_batch(name: str) -> Callable:
        same family table, same reference implementation.
     """
     return _family(name).legacy_batch
+
+
+# ---------------------------------------------------------------------------
+# Static contracts (DESIGN.md §13)
+#
+# The declared per-cell invariants the analyzer (repro.analysis) audits the
+# traced jaxprs against.  They live HERE — next to the registry — so adding
+# a family forces the author to declare its launch budget in the same
+# commit, and the analyzer can never drift from the registry's cell set.
+# ---------------------------------------------------------------------------
+
+#: Every registered entry point of a built ``Resampler``, audited per cell.
+ENTRY_POINTS = (
+    "call",
+    "batch",
+    "batch_rows",
+    "apply",
+    "apply_batch",
+    "apply_rows",
+    "step",
+    "step_rows",
+)
+
+# Launch budgets on the pallas backends, per family shape (DESIGN.md §2/§11/
+# §12).  Direct families (Megopolis/Metropolis/C1/C2/rejection) are ONE
+# launch everywhere.  The prefix-sum family pays a normalise+cumsum launch
+# before the search launch, except ``step``/``step_rows`` — the fused SMC
+# step folds everything into one launch for EVERY family (the §12 tentpole).
+# Residual additionally pays the deterministic-copy + count launches.
+_DIRECT_BUDGET = {entry: 1 for entry in ENTRY_POINTS}
+_PREFIX_BUDGET = {entry: 2 for entry in ENTRY_POINTS} | {"step": 1, "step_rows": 1}
+_RESIDUAL_BUDGET = {
+    "call": 5,
+    "batch": 5,
+    "batch_rows": 5,
+    "apply": 4,
+    "apply_batch": 4,
+    "apply_rows": 4,
+    "step": 1,
+    "step_rows": 1,
+}
+
+LAUNCH_BUDGETS = {
+    "megopolis": _DIRECT_BUDGET,
+    "metropolis": _DIRECT_BUDGET,
+    "metropolis_c1": _DIRECT_BUDGET,
+    "metropolis_c2": _DIRECT_BUDGET,
+    "rejection": _DIRECT_BUDGET,
+    "multinomial": _PREFIX_BUDGET,
+    "systematic": _PREFIX_BUDGET,
+    "improved_systematic": _PREFIX_BUDGET,
+    "stratified": _PREFIX_BUDGET,
+    "residual": _RESIDUAL_BUDGET,
+}
+
+
+def launch_budget(name: str, backend: str, entry: str) -> int:
+    """Declared max ``pallas_call`` count for one (family, backend, entry)
+    cell.  The reference/xla backends are pure XLA by construction: 0."""
+    if entry not in ENTRY_POINTS:
+        raise KeyError(f"unknown entry point {entry!r}; choices: {ENTRY_POINTS}")
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; choices: {BACKENDS}")
+    if backend not in PALLAS_BACKENDS:
+        return 0
+    try:
+        return LAUNCH_BUDGETS[name][entry]
+    except KeyError:
+        raise KeyError(
+            f"family {name!r} has no declared launch budget — every family in "
+            "_FAMILIES must have a LAUNCH_BUDGETS row (DESIGN.md §13)"
+        ) from None
+
+
+def contract_cells(families=None, backends=None, entries=None):
+    """Enumerate the audited (family, backend, entry) cells.
+
+    The analyzer's cell source — driven off the same ``_FAMILIES`` registry
+    as ``spec_for_backend`` so a newly registered family is audited (and
+    must declare budgets) automatically.
+    """
+    for name in families if families is not None else list_resamplers():
+        _family(name)  # raise (with the registry's nearest-match hint) early
+        for backend in backends if backends is not None else BACKENDS:
+            for entry in entries if entries is not None else ENTRY_POINTS:
+                yield name, backend, entry

@@ -61,6 +61,35 @@ STATE_PLANE_TILE = SUBLANES
 MAX_VMEM_STATE = 2 * MAX_VMEM_PARTICLES
 
 
+# Static per-launch footprint budget (DESIGN.md §13, pass 4): the analyzer
+# prices every pallas_call's VMEM-resident bytes straight off its traced
+# BlockSpecs — whole-array operands + per-grid-step blocks + vmem scratch —
+# and checks the total against the residency budgets above.  The slack term
+# covers what the word budgets deliberately exclude: grid-blocked operand
+# windows, scratch accumulators and f32 output tiles.
+VMEM_FOOTPRINT_SLACK_BYTES = 2 << 20
+
+
+def vmem_budget_bytes() -> int:
+    """Static VMEM byte budget for ONE kernel launch.
+
+    Every plane the word budgets admit may be resident at most TWICE —
+    pallas kernels take inputs and outputs as separate refs, so a fused
+    step at the residency edge holds state in + state out plus a few
+    weight planes (measured worst case: the prefix-family fused step at
+    N*pad_state_dim == MAX_VMEM_STATE costs 19.0 MiB).  At the defaults
+    this is 2 * (4 MB + 8 MB) + 2 MB = 26 MB inside a 32 MB core."""
+    return 2 * 4 * (MAX_VMEM_PARTICLES + MAX_VMEM_STATE) + VMEM_FOOTPRINT_SLACK_BYTES
+
+
+def block_bytes(shape, dtype) -> int:
+    """Resident bytes of one kernel operand/scratch block."""
+    size = 1
+    for s in shape:
+        size *= int(s)
+    return size * np.dtype(dtype).itemsize
+
+
 def pad_state_dim(state_dim: int) -> int:
     """Padded plane count for a ``state_dim``-component particle state."""
     if state_dim <= 1:

@@ -28,7 +28,6 @@ from repro.kernels.common import (  # noqa: F401  (MAX_VMEM_PARTICLES re-export)
 )
 from repro.kernels.common import run_step_bank
 from repro.kernels.metropolis.c1c2 import (
-    PARTITION_BYTES,
     metropolis_c1_pallas,
     metropolis_c1_pallas_fused,
     metropolis_c1_pallas_step,

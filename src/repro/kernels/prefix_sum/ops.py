@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro.kernels.common import (
     TILE,
     check_state_resident,
-    check_tile_aligned,
     check_vmem_resident,
     pack_state_planes,
     state_dim_of,

@@ -34,7 +34,7 @@ import traceback
 
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, verbose: bool = True):
-    import jax  # deferred: XLA_FLAGS must be set first
+    import jax  # noqa: F401  (deferred side-effect: XLA_FLAGS must be set first)
 
     from repro.configs import SHAPES, get_arch
     from repro.launch import hlo, memmodel

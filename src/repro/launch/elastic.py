@@ -14,12 +14,12 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.checkpoint import restore_checkpoint
 from repro.launch.sharding import fsdp_axes, model_pspecs
 from repro.models import ModelConfig, init_params
-from repro.optim import adamw_init, opt_state_pspecs
+from repro.optim import opt_state_pspecs
 
 
 def state_pspecs(cfg: ModelConfig, mesh, *, fsdp: bool = True, zero1: bool = True,

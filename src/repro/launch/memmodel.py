@@ -19,8 +19,6 @@ Decode/prefill: params + caches + transients.
 
 from __future__ import annotations
 
-import jax
-import numpy as np
 
 from repro.models import ModelConfig
 
@@ -150,12 +148,12 @@ def traffic_train_bytes(cfg: ModelConfig, *, global_batch: int, seq: int,
     n_exp = _expert_params(cfg)
     n_dense = n - n_exp
     rows = max(1, global_batch // micro // dp)
-    l = cfg.num_layers
+    nl = cfg.num_layers
     weights = 3.0 * (2.0 * n_dense / tp + 2.0 * n_exp / (dp * tp))
-    act = 6.0 * l * rows * seq * cfg.d_model * 2.0
+    act = 6.0 * nl * rows * seq * cfg.d_model * 2.0
     heads_loc = max(1, cfg.num_heads // tp)
     kspan = min(seq, 2 * cfg.window) if cfg.window else seq
-    scores = 4.0 * l * rows * heads_loc * seq * kspan * 4.0
+    scores = 4.0 * nl * rows * heads_loc * seq * kspan * 4.0
     logits = 3.0 * rows * seq * cfg.vocab_size / tp * 4.0
     opt = (4.0 + 2 * 4.0) * 2.0 * n / (dp * tp)  # r+w of f32 params + moments
     return micro * (weights + act + scores + logits) + opt
@@ -165,7 +163,7 @@ def traffic_serve_bytes(cfg: ModelConfig, *, batch: int, seq: int, dp: int,
                         tp: int, kind: str) -> float:
     """Fusion-aware per-chip HBM traffic for one prefill or decode step."""
     rows = max(1, batch // dp)
-    l = cfg.num_layers
+    nl = cfg.num_layers
     n_active = cfg.num_active_params()
     cdt = 1.0  # cache dtype bytes handled by cfg.cache_dtype? default bf16=2
     cache_bytes = 0.0
@@ -186,8 +184,8 @@ def traffic_serve_bytes(cfg: ModelConfig, *, batch: int, seq: int, dp: int,
     kspan = min(seq, 2 * cfg.window) if cfg.window else seq
     return (2.0 * (cfg.num_params() - _expert_params(cfg)) / tp
             + 2.0 * _expert_params(cfg) / (dp * tp)
-            + 3.0 * l * rows * seq * cfg.d_model * 2.0
-            + 2.0 * l * rows * heads_loc * seq * kspan * 4.0
+            + 3.0 * nl * rows * seq * cfg.d_model * 2.0
+            + 2.0 * nl * rows * heads_loc * seq * kspan * 4.0
             + cache_bytes)
 
 

@@ -12,7 +12,6 @@ standard FSDP traffic pattern.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import ModelConfig, init_params, param_pspecs

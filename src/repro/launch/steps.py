@@ -18,11 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchSpec, ShapeSpec, SHAPES, get_arch
@@ -194,8 +193,8 @@ def make_train_plan(arch: ArchSpec, shape: ShapeSpec, mesh) -> CellPlan:
         else:
             def body(carry, mb):
                 l_acc, g_acc = carry
-                l, g = jax.value_and_grad(loss_of)(params_c, mb)
-                return (l_acc + l, jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)), None
+                loss_mb, g = jax.value_and_grad(loss_of)(params_c, mb)
+                return (l_acc + loss_mb, jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)), None
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), batch)

@@ -59,10 +59,10 @@ def init_mamba(key, cfg):
 
 def _segsum(x):
     """(..., l) -> (..., l, l) lower-tri cumulative segment sums."""
-    l = x.shape[-1]
+    sl = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)
     d = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool))
+    mask = jnp.tril(jnp.ones((sl, sl), bool))
     return jnp.where(mask, d, -jnp.inf)
 
 
@@ -153,7 +153,9 @@ def mamba_block(p, cfg, x, *, chunk: int = 256):
     chunk = min(chunk, s)
     pad = (-s) % chunk
     if pad:
-        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def zpad(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+
         x_scaled, log_da = zpad(x_scaled), zpad(log_da)
         b_pad, c_pad = zpad(b_ssm.astype(jnp.float32)), zpad(c_ssm.astype(jnp.float32))
     else:

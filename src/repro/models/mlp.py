@@ -4,7 +4,6 @@ squared-ReLU (nemotron), GELU (musicgen/chameleon-style)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.layers import init_linear, linear
 

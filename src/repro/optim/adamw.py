@@ -18,7 +18,6 @@ DP, the redundant optimizer memory does not (ZeRO stage 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +63,9 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 def adamw_init(params, moment_dtype=jnp.float32):
-    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype)
+
     return {
         "step": jnp.zeros((), jnp.int32),
         "mu": jax.tree.map(zeros, params),

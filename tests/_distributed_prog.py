@@ -14,7 +14,7 @@ os.environ["XLA_FLAGS"] = (
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core.distributed import (  # noqa: E402
     _static_shard_schedule,

@@ -8,3 +8,18 @@ import pytest
 @pytest.fixture(scope="session")
 def base_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_per_module():
+    """Release each module's compiled executables when it finishes.
+
+    A full single-process run compiles thousands of XLA programs; every
+    loaded executable holds mmapped regions, and boxes with the default
+    ``vm.max_map_count`` (65530) run out mid-suite — XLA then SEGFAULTS on
+    the next compile instead of raising.  Clearing the caches at module
+    teardown keeps the map count bounded; modules stay fast internally and
+    only pay recompiles across module boundaries.
+    """
+    yield
+    jax.clear_caches()

@@ -1,0 +1,291 @@
+"""Static contract auditor quality gate (DESIGN.md §13).
+
+Three layers:
+
+  1. **pass unit tests** — each jaxpr-level pass (launch counting, taint,
+     RNG lint, VMEM pricing) on minimal synthetic programs;
+  2. **fixtures** — every deliberately-broken program in
+     ``repro.analysis.fixtures`` is caught by exactly its intended pass
+     (a checker that has never caught anything checks nothing);
+  3. **the real stack** — the full family × backend × entry matrix, the
+     residency-edge footprints, the consumer programs and the §2.4
+     transaction table are all clean, and the CLI round-trips a JSON
+     report with exit 0.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import (
+    ancestor_roundtrips,
+    audit_jaxpr,
+    audit_matrix,
+    auto_reference_rng,
+    count_pallas_calls,
+    count_primitive,
+    kernel_footprints,
+    rng_findings,
+    trace_cell,
+    vmem_findings,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.contracts import (
+    Contract,
+    audit_large_n_footprints,
+    cell_contract,
+)
+from repro.analysis.fixtures import FIXTURES, audit_fixtures, selftest
+from repro.core.spec import (
+    BACKENDS,
+    ENTRY_POINTS,
+    contract_cells,
+    launch_budget,
+    list_resamplers,
+)
+from repro.core.transactions import (
+    MEGOPOLIS_EXACT,
+    declared_transaction_bound,
+    measured_transaction_stats,
+)
+
+N = 2048
+
+
+# ------------------------------------------------------------ 1. the passes
+def _copy_launch(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: o_ref.__setitem__(..., x_ref[...]),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def test_count_pallas_calls_nested_in_scan():
+    def f(x):
+        def body(c, _):
+            return _copy_launch(c), None
+
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return _copy_launch(out)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((N,), jnp.float32))
+    assert count_pallas_calls(jaxpr) == 2  # static launch SITES, not trips
+
+
+def test_count_primitive_kernel_internal_cond_excluded():
+    """pl.when lowers to a cond INSIDE the kernel jaxpr; the host-side
+    census must not charge it (the §12 rule is about HOST branching)."""
+    jaxpr = trace_cell("megopolis", "pallas_interpret", "step")
+    assert count_primitive(jaxpr, "cond", into_kernels=False) == 0
+    assert count_primitive(jaxpr, "cond", into_kernels=True) > 0
+
+
+def test_taint_flags_kernel_derived_gather_only():
+    def bad(x, state):
+        idx = _copy_launch(jnp.zeros((N,), jnp.int32))
+        return jnp.take(state, idx, axis=0) + x[:, None]
+
+    def clean(x, state):
+        idx = jnp.arange(N)  # host-derived indices: allowed
+        _ = _copy_launch(x)
+        return jnp.take(state, idx, axis=0)
+
+    args = (jnp.zeros((N,), jnp.float32), jnp.zeros((N, 4), jnp.float32))
+    assert ancestor_roundtrips(jax.make_jaxpr(bad)(*args))
+    assert not ancestor_roundtrips(jax.make_jaxpr(clean)(*args))
+
+
+def test_rng_lint_key_reuse_and_clean_split():
+    def reused(key):
+        return jax.random.uniform(key, (4,)) + jax.random.normal(key, (4,))
+
+    def clean(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.uniform(k1, (4,)) + jax.random.normal(k2, (4,))
+
+    key = jax.random.PRNGKey(0)
+    assert any(
+        f.code == "key-reuse" for f in rng_findings(jax.make_jaxpr(reused)(key))
+    )
+    assert not rng_findings(jax.make_jaxpr(clean)(key))
+
+
+def test_rng_lint_fold_in_distinct_data_is_idiom():
+    def folds(key):
+        ka = jax.random.fold_in(key, 0)
+        kb = jax.random.fold_in(key, 1)
+        return jax.random.uniform(ka, (4,)) + jax.random.uniform(kb, (4,))
+
+    def folds_same(key):
+        ka = jax.random.fold_in(key, 7)
+        kb = jax.random.fold_in(key, 7)
+        return jax.random.uniform(ka, (4,)) + jax.random.uniform(kb, (4,))
+
+    key = jax.random.PRNGKey(0)
+    assert not rng_findings(jax.make_jaxpr(folds)(key))
+    assert any(
+        f.code == "key-reuse"
+        for f in rng_findings(jax.make_jaxpr(folds_same)(key))
+    )
+
+
+def test_rng_lint_loop_invariant_key():
+    def loopkey(key, xs):
+        def body(c, x):
+            return c + jax.random.uniform(key, ()), None  # same draw each trip
+
+        out, _ = jax.lax.scan(body, 0.0, xs)
+        return out
+
+    def loopfold(key, xs):
+        def body(c, x):
+            k = jax.random.fold_in(key, c.astype(jnp.int32))  # varies per trip
+            return c + jax.random.uniform(k, ()), None
+
+        out, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+        return out
+
+    key, xs = jax.random.PRNGKey(0), jnp.arange(3.0)
+    assert any(
+        f.code == "loop-invariant-key"
+        for f in rng_findings(jax.make_jaxpr(loopkey)(key, xs))
+    )
+    assert not rng_findings(jax.make_jaxpr(loopfold)(key, xs))
+
+
+def test_vmem_footprint_and_budget():
+    jaxpr = jax.make_jaxpr(_copy_launch)(jnp.zeros((N,), jnp.float32))
+    (fp,) = kernel_footprints(jaxpr)
+    assert fp.vmem_bytes == 2 * N * 4  # input block + output block
+    assert fp.within_budget
+    assert not vmem_findings(jaxpr)
+    assert vmem_findings(jaxpr, budget_bytes=N)  # tightened budget fires
+
+
+# ------------------------------------------------------------- 2. fixtures
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_caught_by_its_pass(name):
+    results = {n: (expected, rep) for n, expected, rep in audit_fixtures()}
+    expected, rep = results[name]
+    assert not rep.ok, f"fixture {name} should violate its contract"
+    markers = {
+        "launches": "launches exceed",
+        "census": "ancestor-roundtrip",
+        "rng": "[rng:",
+        "vmem": "[vmem:",
+    }
+    assert any(markers[expected] in v for v in rep.violations), rep.violations
+    for other, marker in markers.items():
+        if other != expected:
+            assert not any(marker in v for v in rep.violations), (
+                f"fixture {name} also tripped the {other} pass: {rep.violations}"
+            )
+
+
+def test_fixture_selftest_clean():
+    assert selftest() == []
+
+
+# ------------------------------------------------------------ 3. the stack
+def test_contract_table_covers_registry():
+    cells = list(contract_cells())
+    names = list_resamplers()
+    assert len(cells) == len(names) * len(BACKENDS) * len(ENTRY_POINTS)
+    for name in names:
+        for backend in ("reference", "xla"):
+            assert launch_budget(name, backend, "step") == 0
+        assert launch_budget(name, "pallas", "step") == 1  # §12: fused
+    with pytest.raises(KeyError):
+        launch_budget("nonesuch", "pallas", "step")
+
+
+def test_full_matrix_is_clean():
+    """Every (family, backend, entry) cell honours its declared contract —
+    the tentpole gate, on real traces of the whole registry."""
+    bad = [rep for rep in audit_matrix() if not rep.ok]
+    assert not bad, [(r.cell, r.violations) for r in bad]
+
+
+def test_interpret_matches_pallas_launch_counts():
+    for name in list_resamplers():
+        for entry in ("apply", "step"):
+            ji = trace_cell(name, "pallas_interpret", entry)
+            jp = trace_cell(name, "pallas", entry)
+            assert count_pallas_calls(ji) == count_pallas_calls(jp)
+
+
+def test_residency_edge_footprints_within_budget():
+    bad = [rep for rep in audit_large_n_footprints() if not rep.ok]
+    assert not bad, [(r.cell, r.violations) for r in bad]
+    reps = list(audit_large_n_footprints(families=("megopolis",)))
+    assert reps and all(rep.footprints for rep in reps)
+
+
+def test_auto_reference_rng_sweep():
+    """The adaptive-iteration reference paths are RNG-clean, except the
+    documented Megopolis identical-split — which must appear as a WAIVED
+    finding, not vanish."""
+    rows = {cell: (kept, waived) for cell, kept, waived in auto_reference_rng()}
+    for cell, (kept, waived) in rows.items():
+        assert not kept, (cell, [str(f) for f in kept])
+    assert len(rows["megopolis/reference/auto"][1]) == 1
+    assert not rows["metropolis/reference/auto"][1]
+
+
+def test_tightened_contract_reports_violation():
+    jaxpr = trace_cell("megopolis", "pallas_interpret", "step")
+    rep = audit_jaxpr("megopolis/tight", jaxpr, Contract(max_launches=0))
+    assert not rep.ok and "exceed the declared budget" in rep.violations[0]
+    assert cell_contract("megopolis", "pallas_interpret", "step").max_launches == 1
+
+
+def test_transaction_model_matches_paper_claims():
+    stats = measured_transaction_stats("megopolis")
+    assert stats["max"] == stats["mean"] == MEGOPOLIS_EXACT  # §2.4 equality
+    for name in ("metropolis", "metropolis_c1", "metropolis_c2"):
+        s = measured_transaction_stats(name)
+        assert s["max"] <= s["bound"] == declared_transaction_bound(name)
+    assert declared_transaction_bound("megopolis") == MEGOPOLIS_EXACT
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_selftest_exits_zero(capsys):
+    assert analysis_main(["--selftest"]) == 0
+    assert "selftest: OK" in capsys.readouterr().out
+
+
+def test_cli_check_writes_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = analysis_main(
+        [
+            "--check",
+            "--families", "megopolis",
+            "--backends", "pallas_interpret",
+            "--entries", "call,step",
+            "--no-consumers", "--no-large-n", "--no-transactions",
+            "--json", str(out),
+        ]
+    )
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["ok"] and report["matrix_cells"] == 2
+    assert "OK" in capsys.readouterr().out
+
+
+def test_cli_check_nonzero_on_violation(monkeypatch):
+    import repro.analysis.report as report_mod
+
+    broken = {
+        "matrix": [],
+        "matrix_cells": 0,
+        "matrix_violations": [
+            {"cell": "x/pallas/step", "violations": ["2 launches exceed 1"]}
+        ],
+        "ok": False,
+    }
+    monkeypatch.setattr(report_mod, "build_report", lambda **kw: broken)
+    assert analysis_main(["--check", "--no-consumers"]) == 1

@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_arch
-from repro.models import decode_step, forward, init_cache, init_params, loss_fn, prefill
+from repro.configs import ARCH_IDS, applicable_shapes, get_arch
+from repro.models import decode_step, forward, init_params, loss_fn, prefill
 
 
 def _smoke_cfg(arch_id):
@@ -90,10 +90,10 @@ def test_exact_assigned_configs():
         "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
         "mamba2_1_3b": (48, 2048, 32, 32, 0, 50304),  # vocab padded 50280->50304
     }
-    for arch_id, (l, d, h, kv, ff, v) in expect.items():
+    for arch_id, (nl, d, h, kv, ff, v) in expect.items():
         m = get_arch(arch_id).model
         assert (m.num_layers, m.d_model, m.num_heads, m.num_kv_heads, m.d_ff,
-                m.vocab_size) == (l, d, h, kv, ff, v), arch_id
+                m.vocab_size) == (nl, d, h, kv, ff, v), arch_id
 
 
 def test_moe_param_counts_match_published():

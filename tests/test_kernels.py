@@ -16,11 +16,10 @@ from repro.kernels.common import TILE, flat_roll, hash_uniform, key_to_seed
 from repro.kernels.megopolis.megopolis import megopolis_pallas
 from repro.kernels.megopolis.ref import megopolis_ref
 from repro.kernels.metropolis.c1c2 import metropolis_c1_pallas, metropolis_c2_pallas
-from repro.kernels.metropolis.metropolis import metropolis_pallas, metropolis_pallas_batch
+from repro.kernels.metropolis.metropolis import metropolis_pallas
 from repro.kernels.metropolis.ops import metropolis_tpu_batch
 from repro.kernels.metropolis.ref import metropolis_c1_ref, metropolis_c2_ref, metropolis_ref
 from repro.kernels.prefix_sum.ops import prefix_resample_tpu, searchsorted_tpu
-from repro.kernels.prefix_sum.prefix_sum import prefix_sum_pallas
 from repro.kernels.prefix_sum.ref import prefix_resample_ref, prefix_sum_ref, prefix_sum_tiled_ref
 from repro.kernels.rejection.ops import rejection_tpu, rejection_tpu_batch
 from repro.kernels.rejection.ref import rejection_ref

@@ -13,7 +13,6 @@
      ``ParticleFilter.resampler_kwargs``) degrade gracefully.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

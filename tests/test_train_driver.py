@@ -2,10 +2,8 @@
 compressed-DP mode convergence."""
 
 import json
-import os
 
 import numpy as np
-import pytest
 
 from repro.launch.train import TrainRun, run
 
@@ -33,7 +31,7 @@ def test_resume_reproduces_uninterrupted_run(tmp_path):
 def test_heartbeat_written(tmp_path):
     run(TrainRun(arch="qwen3-0.6b", steps=3, smoke=True, global_batch=4,
                  seq_len=32, ckpt_dir=str(tmp_path)))
-    hb = [json.loads(l) for l in open(tmp_path / "heartbeat.json")]
+    hb = [json.loads(line) for line in open(tmp_path / "heartbeat.json")]
     assert [r["step"] for r in hb] == [0, 1, 2]
     assert all(np.isfinite(r["loss"]) and r["step_time_s"] > 0 for r in hb)
 
