@@ -38,7 +38,11 @@ import time
 
 from benchmarks.common import OUT_DIR, ensure_out, print_table, write_csv
 from repro.core.spec import spec_for_backend
+from repro.kernels.common import plane_itemsize
 from repro.launch.memmodel import resample_step_bytes
+
+#: The DESIGN.md §14 compression axis swept by default.
+PLANE_DTYPES = ("float32", "bfloat16")
 
 FAMILIES = (
     "megopolis",
@@ -84,8 +88,9 @@ def _time_pair(fused, unfused, *args, repeats: int):
 
 
 def _cell(name, backend, state_dim, *, n, num_iters, max_iters, repeats,
-          chain: int):
-    r = spec_for_backend(name, backend, num_iters=num_iters, max_iters=max_iters).build()
+          chain: int, plane_dtype: str = "float32"):
+    r = spec_for_backend(name, backend, num_iters=num_iters,
+                         max_iters=max_iters, plane_dtype=plane_dtype).build()
     key = jax.random.PRNGKey(7)
     w = jax.random.uniform(jax.random.PRNGKey(1), (n,)) + 1e-3
     shape = (n,) if state_dim == 1 else (n, state_dim)
@@ -119,29 +124,38 @@ def _cell(name, backend, state_dim, *, n, num_iters, max_iters, repeats,
     got_p, got_a = r.apply(key, w, p)
     want_a = r(key, w)
     np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    # Compressed cells gather the QUANTISED plane (DESIGN.md §14): the
+    # oracle is take over r.quantise(p) — a no-op at f32.
     np.testing.assert_array_equal(
-        np.asarray(got_p), np.asarray(jnp.take(p, want_a, axis=0))
+        np.asarray(got_p), np.asarray(jnp.take(r.quantise(p), want_a, axis=0))
     )
 
     # "No slower" on the composition backends is proven STRUCTURALLY: the
     # fused and unfused chains must trace to the identical jaxpr (same
     # program => same wall time, deterministically — wall clocks on this
     # class of shared CPU box swing ±30% between identical programs, so a
-    # timing gate would only measure the scheduler).
+    # timing gate would only measure the scheduler).  f32 cells only: the
+    # compressed fused chain quantises the carried particles each step,
+    # which the take-composition above deliberately does not.
+    perf_gated = backend in TIMED_GATE_BACKENDS and plane_dtype == "float32"
     identical_program = False
-    if backend in TIMED_GATE_BACKENDS:
+    if perf_gated:
         identical_program = str(jax.make_jaxpr(fused_chain)(p)) == str(
             jax.make_jaxpr(unfused_chain)(p)
         )
 
     t_fused, t_unfused = _time_pair(fused, unfused, p, repeats=repeats)
     t_fused, t_unfused = t_fused / chain, t_unfused / chain
-    model_fused = resample_step_bytes(n, state_dim, fused=True)["total"]
-    model_unfused = resample_step_bytes(n, state_dim, fused=False)["total"]
+    wb = plane_itemsize(plane_dtype)
+    model_fused = resample_step_bytes(
+        n, state_dim, fused=True, state_bytes=wb, weight_bytes=wb)["total"]
+    model_unfused = resample_step_bytes(
+        n, state_dim, fused=False, state_bytes=wb, weight_bytes=wb)["total"]
     return {
         "family": name,
         "backend": backend,
         "state_dim": state_dim,
+        "plane_dtype": plane_dtype,
         "n": n,
         "fused_ms": t_fused * 1e3,
         "unfused_ms": t_unfused * 1e3,
@@ -150,7 +164,7 @@ def _cell(name, backend, state_dim, *, n, num_iters, max_iters, repeats,
         "model_bytes_unfused": model_unfused,
         "model_speedup": model_unfused / model_fused,
         "parity": True,
-        "perf_gated": backend in TIMED_GATE_BACKENDS,
+        "perf_gated": perf_gated,
         "identical_program": identical_program,
     }
 
@@ -161,6 +175,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes, parity gate only (the perf-smoke CI job)")
     ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--dtypes", type=lambda v: tuple(x for x in v.split(",") if x),
+                    default=PLANE_DTYPES,
+                    help="comma-separated plane dtypes to sweep "
+                         "(default: float32,bfloat16)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -173,25 +191,28 @@ def main(argv=None):
         n = args.n
 
     rows = []
-    for name in FAMILIES:
-        for backend in BACKENDS:
-            for d in STATE_DIMS:
-                rows.append(_cell(name, backend, d, n=n, num_iters=num_iters,
-                                  max_iters=max_iters, repeats=repeats,
-                                  chain=chain))
-                print(f"[fused_gather] {name}/{backend}/d={d}: "
-                      f"fused {rows[-1]['fused_ms']:.2f}ms "
-                      f"unfused {rows[-1]['unfused_ms']:.2f}ms "
-                      f"(model {rows[-1]['model_speedup']:.2f}x)")
+    for dtype in args.dtypes:
+        for name in FAMILIES:
+            for backend in BACKENDS:
+                for d in STATE_DIMS:
+                    rows.append(_cell(name, backend, d, n=n, num_iters=num_iters,
+                                      max_iters=max_iters, repeats=repeats,
+                                      chain=chain, plane_dtype=dtype))
+                    print(f"[fused_gather] {name}/{backend}/d={d}@{dtype}: "
+                          f"fused {rows[-1]['fused_ms']:.2f}ms "
+                          f"unfused {rows[-1]['unfused_ms']:.2f}ms "
+                          f"(model {rows[-1]['model_speedup']:.2f}x)")
 
-    print_table(rows, cols=["family", "backend", "state_dim", "fused_ms",
-                            "unfused_ms", "speedup", "model_speedup"])
+    print_table(rows, cols=["family", "backend", "state_dim", "plane_dtype",
+                            "fused_ms", "unfused_ms", "speedup",
+                            "model_speedup"])
     write_csv("fused_gather.csv", rows)
     ensure_out()
     with open(os.path.join(OUT_DIR, "BENCH_fused_gather.json"), "w") as f:
         json.dump({"config": {"n": n, "num_iters": num_iters,
                               "max_iters": max_iters, "repeats": repeats,
-                              "chain": chain, "smoke": args.smoke},
+                              "chain": chain, "smoke": args.smoke,
+                              "plane_dtypes": list(args.dtypes)},
                    "rows": rows}, f, indent=2)
 
     # The "no slower" gate on the composition-oracle CPU cells: the fused

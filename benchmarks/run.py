@@ -89,9 +89,10 @@ def _fused_gather_stats():
     return {
         "config": payload.get("config"),
         "cells": [
-            {k: r[k] for k in ("family", "backend", "state_dim", "fused_ms",
-                               "unfused_ms", "speedup", "model_speedup",
-                               "parity", "perf_gated", "identical_program")}
+            {k: r.get(k, "float32" if k == "plane_dtype" else None)
+             for k in ("family", "backend", "state_dim", "plane_dtype",
+                       "fused_ms", "unfused_ms", "speedup", "model_speedup",
+                       "parity", "perf_gated", "identical_program")}
             for r in payload.get("rows", [])
         ],
     }
@@ -110,9 +111,11 @@ def _step_stats():
     return {
         "config": payload.get("config"),
         "cells": [
-            {k: r[k] for k in ("family", "backend", "step_ms", "composed_ms",
-                               "speedup", "launches_step", "launches_composed",
-                               "parity", "perf_gated", "identical_program")}
+            {k: r.get(k, "float32" if k == "plane_dtype" else None)
+             for k in ("family", "backend", "plane_dtype", "step_ms",
+                       "composed_ms", "speedup", "launches_step",
+                       "launches_composed", "parity", "perf_gated",
+                       "identical_program")}
             for r in payload.get("rows", [])
         ],
     }

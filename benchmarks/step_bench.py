@@ -44,7 +44,11 @@ from repro.core.metrics import (
 )
 from repro.analysis import count_pallas_calls as _count_pallas_calls
 from repro.core.spec import spec_for_backend
+from repro.kernels.common import plane_itemsize
 from repro.launch.memmodel import smc_step_bytes
+
+#: The DESIGN.md §14 compression axis swept by default.
+PLANE_DTYPES = ("float32", "bfloat16")
 
 FAMILIES = (
     "megopolis",
@@ -65,6 +69,12 @@ THRESHOLD = 0.5
 
 
 def _composed(r, key, log_w, particles, thr):
+    # Quantise at the boundary first — the value the fused step's in-kernel
+    # requantise matches (DESIGN.md §14); ``r.apply`` re-lands the
+    # normalised weights on the same grid.  Identity at f32, so the f32
+    # structural no-slower gate still sees the identical jaxpr.
+    log_w = r.quantise(log_w)
+    particles = r.quantise(particles)
     n = log_w.shape[-1]
     ess_n = effective_sample_size(log_w) / jnp.float32(n)
     do = ess_n < thr
@@ -101,9 +111,9 @@ def _time_pair(fused, unfused, *args, repeats: int):
 
 
 def _cell(name, backend, *, n, state_dim, num_iters, max_iters, repeats,
-          chain: int):
+          chain: int, plane_dtype: str = "float32"):
     r = spec_for_backend(name, backend, num_iters=num_iters,
-                         max_iters=max_iters).build()
+                         max_iters=max_iters, plane_dtype=plane_dtype).build()
     key = jax.random.PRNGKey(7)
     lw = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 2.0
     p = jax.random.normal(jax.random.PRNGKey(2), (n, state_dim))
@@ -132,9 +142,12 @@ def _cell(name, backend, *, n, state_dim, num_iters, max_iters, repeats,
 
     # Structural no-slower on the composition backends: identical jaxpr ⇒
     # identical program (wall clocks on this shared CPU box swing ±30%, so
-    # a timing gate would only measure the scheduler).
+    # a timing gate would only measure the scheduler).  f32 cells only —
+    # the compressed fused step folds the plane casts into one kernel the
+    # composition necessarily spells out as separate convert ops.
+    perf_gated = backend in TIMED_GATE_BACKENDS and plane_dtype == "float32"
     identical_program = False
-    if backend in TIMED_GATE_BACKENDS:
+    if perf_gated:
         identical_program = str(jax.make_jaxpr(fused_chain)(p)) == str(
             jax.make_jaxpr(composed_chain)(p)
         )
@@ -151,19 +164,23 @@ def _cell(name, backend, *, n, state_dim, num_iters, max_iters, repeats,
 
     t_fused, t_composed = _time_pair(fused, composed, p, repeats=repeats)
     t_fused, t_composed = t_fused / chain, t_composed / chain
+    wb = plane_itemsize(plane_dtype)
     return {
         "family": name,
         "backend": backend,
+        "plane_dtype": plane_dtype,
         "n": n,
         "step_ms": t_fused * 1e3,
         "composed_ms": t_composed * 1e3,
         "speedup": t_composed / t_fused,
         "launches_step": launches_step,
         "launches_composed": launches_composed,
-        "model_bytes_step": smc_step_bytes(n, state_dim, fused=True)["total"],
-        "model_bytes_composed": smc_step_bytes(n, state_dim, fused=False)["total"],
+        "model_bytes_step": smc_step_bytes(
+            n, state_dim, fused=True, state_bytes=wb, weight_bytes=wb)["total"],
+        "model_bytes_composed": smc_step_bytes(
+            n, state_dim, fused=False, state_bytes=wb, weight_bytes=wb)["total"],
         "parity": True,
-        "perf_gated": backend in TIMED_GATE_BACKENDS,
+        "perf_gated": perf_gated,
         "identical_program": identical_program,
     }
 
@@ -174,6 +191,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes, parity gate only (the perf-smoke CI job)")
     ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--dtypes", type=lambda v: tuple(x for x in v.split(",") if x),
+                    default=PLANE_DTYPES,
+                    help="comma-separated plane dtypes to sweep "
+                         "(default: float32,bfloat16)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -186,27 +207,32 @@ def main(argv=None):
         n = args.n
 
     rows = []
-    for name in FAMILIES:
-        for backend in BACKENDS:
-            rows.append(_cell(name, backend, n=n, state_dim=4,
-                              num_iters=num_iters, max_iters=max_iters,
-                              repeats=repeats, chain=chain))
-            msg = (f"[step] {name}/{backend}: step {rows[-1]['step_ms']:.2f}ms "
-                   f"composed {rows[-1]['composed_ms']:.2f}ms")
-            if rows[-1]["launches_step"] is not None:
-                msg += (f" launches {rows[-1]['launches_composed']}"
-                        f"→{rows[-1]['launches_step']}")
-            print(msg)
+    for dtype in args.dtypes:
+        for name in FAMILIES:
+            for backend in BACKENDS:
+                rows.append(_cell(name, backend, n=n, state_dim=4,
+                                  num_iters=num_iters, max_iters=max_iters,
+                                  repeats=repeats, chain=chain,
+                                  plane_dtype=dtype))
+                msg = (f"[step] {name}/{backend}@{dtype}: "
+                       f"step {rows[-1]['step_ms']:.2f}ms "
+                       f"composed {rows[-1]['composed_ms']:.2f}ms")
+                if rows[-1]["launches_step"] is not None:
+                    msg += (f" launches {rows[-1]['launches_composed']}"
+                            f"→{rows[-1]['launches_step']}")
+                print(msg)
 
-    print_table(rows, cols=["family", "backend", "step_ms", "composed_ms",
-                            "speedup", "launches_step", "launches_composed"])
+    print_table(rows, cols=["family", "backend", "plane_dtype", "step_ms",
+                            "composed_ms", "speedup", "launches_step",
+                            "launches_composed"])
     write_csv("step_bench.csv", rows)
     ensure_out()
     with open(os.path.join(OUT_DIR, "BENCH_step.json"), "w") as f:
         json.dump({"config": {"n": n, "num_iters": num_iters,
                               "max_iters": max_iters, "repeats": repeats,
                               "chain": chain, "threshold": THRESHOLD,
-                              "smoke": args.smoke},
+                              "smoke": args.smoke,
+                              "plane_dtypes": list(args.dtypes)},
                    "rows": rows}, f, indent=2)
 
     # The single-launch gate on every kernel cell, and the structural
@@ -225,7 +251,7 @@ def main(argv=None):
         raise SystemExit(1)
     n_kernel = sum(1 for r in rows if r["launches_step"] == 1)
     print(f"step_bench: all parity cells bit-exact; {n_kernel} kernel cells "
-          "single-launch; all composition cells identical-program")
+          "single-launch; all f32 composition cells identical-program")
 
 
 if __name__ == "__main__":

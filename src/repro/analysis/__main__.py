@@ -38,6 +38,9 @@ def main(argv=None) -> int:
                     help="comma-separated backends (default: all)")
     ap.add_argument("--entries", type=_csv, default=None,
                     help="comma-separated entry points (default: all)")
+    ap.add_argument("--plane-dtypes", type=_csv, default=None,
+                    help="comma-separated plane dtypes for the §14 "
+                         "compression axis (default: float32,bfloat16)")
     ap.add_argument("--no-consumers", action="store_true",
                     help="skip the consumer-program audits")
     ap.add_argument("--no-large-n", action="store_true",
@@ -63,6 +66,9 @@ def main(argv=None) -> int:
     if args.check:
         from repro.analysis.report import build_report, summarise
 
+        kw = {}
+        if args.plane_dtypes is not None:
+            kw["plane_dtypes"] = args.plane_dtypes
         report = build_report(
             families=args.families,
             backends=args.backends,
@@ -70,6 +76,7 @@ def main(argv=None) -> int:
             consumers=not args.no_consumers,
             large_n=not args.no_large_n,
             transactions=not args.no_transactions,
+            **kw,
         )
         if args.json:
             with open(args.json, "w") as fh:

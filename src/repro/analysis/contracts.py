@@ -215,10 +215,12 @@ def entry_callable(resampler, entry: str, args: Optional[dict] = None):
     return table[entry]
 
 
-def trace_cell(name: str, backend: str, entry: str, args: Optional[dict] = None):
+def trace_cell(name: str, backend: str, entry: str, args: Optional[dict] = None,
+               *, plane_dtype: str = "float32"):
     """Trace one matrix cell to a ClosedJaxpr (no execution)."""
     resampler = spec_for_backend(
-        name, backend, num_iters=AUDIT_NUM_ITERS, max_iters=AUDIT_MAX_ITERS
+        name, backend, num_iters=AUDIT_NUM_ITERS, max_iters=AUDIT_MAX_ITERS,
+        plane_dtype=plane_dtype,
     ).build()
     fn, call_args = entry_callable(resampler, entry, args)
     return jax.make_jaxpr(fn)(*call_args)
@@ -228,17 +230,23 @@ def cell_contract(name: str, backend: str, entry: str) -> Contract:
     return Contract(max_launches=launch_budget(name, backend, entry))
 
 
-def audit_matrix(families=None, backends=None, entries=None):
+def audit_matrix(families=None, backends=None, entries=None, plane_dtypes=None):
     """Trace + audit every requested matrix cell; yields CellReports.
 
     One shared args dict keeps tracing cheap; cells are independent, so a
-    failure in one family still reports every other cell.
+    failure in one family still reports every other cell.  ``plane_dtypes``
+    adds the DESIGN.md §14 compression axis (default: float32 only);
+    compressed cells are named ``family/backend/entry@dtype`` and graded
+    against the SAME contract — compression narrows words, never adds
+    launches, host conds or HBM ancestor round-trips.
     """
     args = _audit_args()
-    for name, backend, entry in contract_cells(families, backends, entries):
-        cell = f"{name}/{backend}/{entry}"
-        jaxpr = trace_cell(name, backend, entry, args)
-        yield audit_jaxpr(cell, jaxpr, cell_contract(name, backend, entry))
+    for dtype in plane_dtypes if plane_dtypes is not None else ("float32",):
+        suffix = "" if dtype == "float32" else f"@{dtype}"
+        for name, backend, entry in contract_cells(families, backends, entries):
+            cell = f"{name}/{backend}/{entry}{suffix}"
+            jaxpr = trace_cell(name, backend, entry, args, plane_dtype=dtype)
+            yield audit_jaxpr(cell, jaxpr, cell_contract(name, backend, entry))
 
 
 def audit_large_n_footprints(families=None):

@@ -23,18 +23,21 @@ from repro.core.transactions import (
 TRANSACTION_FAMILIES = ("megopolis", "metropolis", "metropolis_c1", "metropolis_c2")
 
 
-def transaction_report(*, n: int = 4096, num_iters: int = 32) -> dict:
+def transaction_report(*, n: int = 4096, num_iters: int = 32,
+                       word_bytes: int = 4) -> dict:
     """Measured vs declared §2.4 transactions per warp-iteration; each
     family entry carries ``ok`` (measured max within the declared bound;
-    Megopolis additionally max == mean == 4 exactly)."""
+    Megopolis additionally max == mean == the exact coalesced count — 4 at
+    f32 words, 2 at bf16's ``word_bytes=2``, DESIGN.md §14)."""
     out = {}
+    exact = (MEGOPOLIS_EXACT * word_bytes) // 4
     for name in TRANSACTION_FAMILIES:
-        stats = measured_transaction_stats(name, n=n, num_iters=num_iters)
+        stats = measured_transaction_stats(
+            name, n=n, num_iters=num_iters, word_bytes=word_bytes
+        )
         ok = stats["max"] <= stats["bound"]
         if name == "megopolis":
-            ok = ok and stats["max"] == MEGOPOLIS_EXACT and stats["mean"] == float(
-                MEGOPOLIS_EXACT
-            )
+            ok = ok and stats["max"] == exact and stats["mean"] == float(exact)
         out[name] = {**stats, "ok": ok}
     return out
 
@@ -47,16 +50,22 @@ def build_report(
     consumers: bool = True,
     large_n: bool = True,
     transactions: bool = True,
+    plane_dtypes=("float32", "bfloat16"),
 ) -> dict:
     """Run every audit and return one JSON-serialisable report.
 
     ``report["ok"]`` is the single bit CI gates on: every cell honest,
     every consumer honest, no unwaived RNG finding, every measured
-    transaction count within its declared §2.4 bound.
+    transaction count within its declared §2.4 bound.  ``plane_dtypes``
+    spans the DESIGN.md §14 compression axis: compressed cells are audited
+    against the SAME launch budgets, and the transaction table is re-priced
+    per word size (``transactions@bfloat16`` at ``word_bytes=2``).
     """
     matrix = [
         rep.as_dict()
-        for rep in contracts_mod.audit_matrix(families, backends, entries)
+        for rep in contracts_mod.audit_matrix(
+            families, backends, entries, plane_dtypes=plane_dtypes
+        )
     ]
     report: dict = {
         "matrix": matrix,
@@ -91,6 +100,14 @@ def build_report(
         report["transaction_violations"] = {
             k: v for k, v in tx.items() if not v["ok"]
         }
+        for dtype, wb in (("bfloat16", 2), ("float16", 2)):
+            if dtype not in plane_dtypes:
+                continue
+            txc = transaction_report(word_bytes=wb)
+            report[f"transactions@{dtype}"] = txc
+            report["transaction_violations"].update({
+                f"{k}@{dtype}": v for k, v in txc.items() if not v["ok"]
+            })
 
     report["ok"] = not (
         report["matrix_violations"]

@@ -30,14 +30,22 @@ def normalise_log_weights(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     return jnp.exp(log_w - _guarded_shift(log_w, axis))
 
 
-def log_weights_from_linear(w: jnp.ndarray) -> jnp.ndarray:
-    """Log-weights from unnormalised linear weights, floored at 1e-30.
+def _tiny_floor(dtype) -> float:
+    """Smallest safe positive floor for guards in ``dtype``: 1e-30 where
+    that is a normal number (f32, bf16 — both carry the 8-bit exponent),
+    else the dtype's min normal (f16: ~6.1e-5).  Anything below min normal
+    flushes to zero under XLA and a ``log``/division guard built on it
+    silently reintroduces the ``-inf``/``inf`` it was meant to stop."""
+    return max(float(jnp.finfo(dtype).tiny), 1e-30)
 
-    The floor must stay in float32 normal range: subnormals (e.g. 1e-38)
-    flush to zero under XLA and the log would reintroduce ``-inf``.
-    Centralised from the ad-hoc filter-diagnostic guard so filter/AIS/
-    decode all floor identically."""
-    return jnp.log(jnp.maximum(w, 1e-30))
+
+def log_weights_from_linear(w: jnp.ndarray) -> jnp.ndarray:
+    """Log-weights from unnormalised linear weights, floored dtype-aware.
+
+    The floor must stay in the input dtype's NORMAL range (``_tiny_floor``):
+    1e-30 for f32/bf16, min normal for f16.  Centralised from the ad-hoc
+    filter-diagnostic guard so filter/AIS/decode all floor identically."""
+    return jnp.log(jnp.maximum(w, _tiny_floor(w.dtype)))
 
 
 def effective_sample_size(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
@@ -56,7 +64,10 @@ def effective_sample_size(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     w = normalise_log_weights(log_w, axis=axis)
     s1 = jnp.sum(w, axis=axis)
     s2 = jnp.sum(w * w, axis=axis)
-    return jnp.square(s1) / jnp.maximum(s2, 1e-30)
+    # Dtype-aware guard: 1e-30 is a flush-to-zero subnormal in f16, which
+    # would leave the degenerate-row division at inf (bitwise unchanged for
+    # f32/bf16 inputs).
+    return jnp.square(s1) / jnp.maximum(s2, _tiny_floor(s2.dtype))
 
 
 def log_mean_weight(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
@@ -103,7 +114,10 @@ def bias_variance(offsprings: jnp.ndarray, weights: jnp.ndarray):
     k = offsprings.shape[0]
     target = expected_offspring(weights)
     o_hat = jnp.mean(offsprings.astype(jnp.float32), axis=0)  # eq. 19
-    var = jnp.sum(jnp.sum((offsprings - o_hat) ** 2, axis=0) / (k - 1))  # eqs. 17/20
+    # K=1 carries no variance information: eq. (17)'s k-1 denominator would
+    # be 0/0 = nan.  The deviations are identically zero there, so dividing
+    # by 1 instead yields the defined limit var = 0 (mse degrades to bias²).
+    var = jnp.sum(jnp.sum((offsprings - o_hat) ** 2, axis=0) / max(k - 1, 1))
     bias_sq = jnp.sum((o_hat - target) ** 2)  # eq. 18
     return var, bias_sq, var + bias_sq  # eq. 16
 

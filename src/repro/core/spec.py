@@ -81,6 +81,7 @@ from repro.core.resamplers.prefix_sum import (
     systematic_batch,
 )
 from repro.core.resamplers.rejection import rejection, rejection_batch
+from repro.kernels.common import PLANE_DTYPES, quantise_plane
 
 AUTO = "auto"
 BACKENDS = ("reference", "xla", "pallas_interpret", "pallas")
@@ -119,6 +120,13 @@ def _check_num_iters(value, cls: str):
 def _check_backend(value, cls: str):
     if value not in BACKENDS:
         raise ValueError(f"{cls}.backend must be one of {BACKENDS}; got {value!r}")
+
+
+def _check_plane_dtype(value, cls: str):
+    if value not in PLANE_DTYPES:
+        raise ValueError(
+            f"{cls}.plane_dtype must be one of {PLANE_DTYPES}; got {value!r}"
+        )
 
 
 def _take_rows(particles: jnp.ndarray, ancestors: jnp.ndarray) -> jnp.ndarray:
@@ -184,6 +192,10 @@ class Resampler:
     ):
         self.spec = spec
         self.name = spec.name
+        # The plane-compression axis (DESIGN.md §14).  Quantisation happens
+        # HERE — once, at the public entry — for EVERY backend, so the
+        # reference lane is the bit-exact oracle of the compressed kernels.
+        self.plane_dtype = getattr(spec, "plane_dtype", "float32")
         self._single = single
         self._batch = batch
 
@@ -220,12 +232,16 @@ class Resampler:
         # the oracle the fused step kernels are gated against.
         if step is None:
             apply_fn = apply
+            plane_dtype = self.plane_dtype
 
             def step(key, log_w, particles, ess_threshold):
                 n = log_w.shape[-1]
                 ess_n = effective_sample_size(log_w) / jnp.float32(n)
                 do = ess_n < ess_threshold
-                w = normalise_log_weights(log_w)
+                # Normalised weights re-land on the plane-dtype grid — the
+                # value the fused step kernels' in-body requantise matches.
+                # A no-op at f32.
+                w = quantise_plane(normalise_log_weights(log_w), plane_dtype)
                 p_res, a_res = apply_fn(key, w, particles)
                 ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
                 p_out = jnp.where(do, p_res, particles)
@@ -245,20 +261,28 @@ class Resampler:
         self.__name__ = f"{self.name}_resampler"
         self.__qualname__ = self.__name__
 
+    def quantise(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Round a float array onto the spec's plane-dtype grid — the value
+        the compressed tiles represent on the wire (DESIGN.md §14).
+        Identity at ``plane_dtype='float32'`` and for non-float arrays.
+        Applied by every public entry, so ``r_bf16(key, w)`` equals
+        ``r_f32(key, r_bf16.quantise(w))`` ancestor-for-ancestor."""
+        return quantise_plane(x, self.plane_dtype)
+
     def __call__(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 1:
             raise ValueError(
                 f"{self.name}: expected weights[N]; got shape {weights.shape} "
                 "(use .batch for weights[B, N])"
             )
-        return self._single(key, weights)
+        return self._single(key, self.quantise(weights))
 
     def batch(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 2:
             raise ValueError(
                 f"{self.name}.batch: expected weights[B, N]; got shape {weights.shape}"
             )
-        return self._batch(key, weights)
+        return self._batch(key, self.quantise(weights))
 
     def batch_rows(self, keys: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         """vmap the single-population call over explicit per-row keys.
@@ -271,7 +295,7 @@ class Resampler:
             raise ValueError(
                 f"{self.name}.batch_rows: expected weights[B, N]; got shape {weights.shape}"
             )
-        return jax.vmap(self._single)(keys, weights)
+        return jax.vmap(self._single)(keys, self.quantise(weights))
 
     def _check_state(self, weights, particles, who: str, lead: int = 1):
         if particles.ndim < lead or particles.shape[:lead] != weights.shape[:lead]:
@@ -291,7 +315,7 @@ class Resampler:
                 "(use .apply_batch for weights[B, N])"
             )
         self._check_state(weights, particles, "apply")
-        return self._apply(key, weights, particles)
+        return self._apply(key, self.quantise(weights), self.quantise(particles))
 
     def apply_batch(self, key: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
         """Bank form of ``apply`` under the §4 split-key contract."""
@@ -301,7 +325,9 @@ class Resampler:
                 f"{weights.shape}"
             )
         self._check_state(weights, particles, "apply_batch", lead=2)
-        return self._apply_batch(key, weights, particles)
+        return self._apply_batch(
+            key, self.quantise(weights), self.quantise(particles)
+        )
 
     def apply_rows(self, keys: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
         """``apply`` over explicit per-row keys (the filter-bank path): row
@@ -323,7 +349,9 @@ class Resampler:
                 f"{keys.shape[0]} keys for weights[{weights.shape[0]}, ...]"
             )
         self._check_state(weights, particles, "apply_rows", lead=2)
-        return self._apply_rows(keys, weights, particles)
+        return self._apply_rows(
+            keys, self.quantise(weights), self.quantise(particles)
+        )
 
     def step(
         self,
@@ -346,7 +374,9 @@ class Resampler:
                 f"{log_weights.shape} (use .step_rows for log_weights[B, N])"
             )
         self._check_state(log_weights, particles, "step")
-        return self._step(key, log_weights, particles, ess_threshold)
+        return self._step(
+            key, self.quantise(log_weights), self.quantise(particles), ess_threshold
+        )
 
     def step_rows(
         self,
@@ -371,7 +401,9 @@ class Resampler:
                 f"{keys.shape[0]} keys for log_weights[{log_weights.shape[0]}, ...]"
             )
         self._check_state(log_weights, particles, "step_rows", lead=2)
-        return self._step_rows(keys, log_weights, particles, ess_threshold)
+        return self._step_rows(
+            keys, self.quantise(log_weights), self.quantise(particles), ess_threshold
+        )
 
     def __repr__(self):
         return f"Resampler({self.spec!r})"
@@ -504,6 +536,7 @@ class MegopolisSpec(ResamplerSpec):
     num_iters: Union[int, str] = AUTO
     segment: int = DEFAULT_SEGMENT
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     _NAME: ClassVar[str] = "megopolis"
 
@@ -511,6 +544,7 @@ class MegopolisSpec(ResamplerSpec):
         _check_num_iters(self.num_iters, "MegopolisSpec")
         _check_positive_int(self.segment, "segment", "MegopolisSpec")
         _check_backend(self.backend, "MegopolisSpec")
+        _check_plane_dtype(self.plane_dtype, "MegopolisSpec")
         if self.backend in ("pallas", "pallas_interpret") and self.segment != KERNEL_SEGMENT:
             raise ValueError(
                 f"MegopolisSpec: the pallas kernel coalesces at segment="
@@ -532,24 +566,28 @@ class MegopolisSpec(ResamplerSpec):
             )
 
             interpret = self.backend == "pallas_interpret"
+            pd = self.plane_dtype
 
             def single(key, w):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return megopolis_tpu(key, w, b, interpret=interpret)
+                return megopolis_tpu(key, w, b, interpret=interpret, plane_dtype=pd)
 
             def batch(key, w):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return megopolis_tpu_batch(key, w, b, interpret=interpret)
+                return megopolis_tpu_batch(key, w, b, interpret=interpret,
+                                           plane_dtype=pd)
 
             def apply(key, w, p):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return megopolis_tpu_apply(key, w, p, b, interpret=interpret)
+                return megopolis_tpu_apply(key, w, p, b, interpret=interpret,
+                                           plane_dtype=pd)
 
             def apply_batch(key, w, p):
                 # Same bank-level resolve + shared-offset contract as .batch,
                 # so apply_batch ancestors == .batch ancestors under 'auto'.
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return megopolis_tpu_apply_batch(key, w, p, b, interpret=interpret)
+                return megopolis_tpu_apply_batch(key, w, p, b, interpret=interpret,
+                                                 plane_dtype=pd)
 
             def step(key, lw, p, thr):
                 # eq. (3) sees the SAME normalised weights the composed
@@ -557,7 +595,8 @@ class MegopolisSpec(ResamplerSpec):
                 b = _resolve_iters_static(
                     self.num_iters, normalise_log_weights(lw), self.name
                 )
-                return megopolis_tpu_step(key, lw, p, b, thr, interpret=interpret)
+                return megopolis_tpu_step(key, lw, p, b, thr, interpret=interpret,
+                                          plane_dtype=pd)
 
             if self.num_iters == AUTO:
                 # batch_rows' per-row contract needs eq. (3) PER ROW.
@@ -567,12 +606,14 @@ class MegopolisSpec(ResamplerSpec):
 
                 def apply_rows(keys, w, p):
                     return megopolis_tpu_apply_rows(
-                        keys, w, p, self.num_iters, interpret=interpret
+                        keys, w, p, self.num_iters, interpret=interpret,
+                        plane_dtype=pd,
                     )
 
                 def step_rows(keys, lw, p, thr):
                     return megopolis_tpu_step_rows(
-                        keys, lw, p, self.num_iters, thr, interpret=interpret
+                        keys, lw, p, self.num_iters, thr, interpret=interpret,
+                        plane_dtype=pd,
                     )
 
             return Resampler(self, single, batch, apply=apply,
@@ -623,12 +664,14 @@ class MetropolisSpec(ResamplerSpec):
 
     num_iters: Union[int, str] = AUTO
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     _NAME: ClassVar[str] = "metropolis"
 
     def __post_init__(self):
         _check_num_iters(self.num_iters, "MetropolisSpec")
         _check_backend(self.backend, "MetropolisSpec")
+        _check_plane_dtype(self.plane_dtype, "MetropolisSpec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -643,20 +686,23 @@ class MetropolisSpec(ResamplerSpec):
             )
 
             interpret = self.backend == "pallas_interpret"
+            pd = self.plane_dtype
 
             def single(key, w):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return metropolis_tpu(key, w, b, interpret=interpret)
+                return metropolis_tpu(key, w, b, interpret=interpret, plane_dtype=pd)
 
             def apply(key, w, p):
                 b = _resolve_iters_static(self.num_iters, w, self.name)
-                return metropolis_tpu_apply(key, w, p, b, interpret=interpret)
+                return metropolis_tpu_apply(key, w, p, b, interpret=interpret,
+                                            plane_dtype=pd)
 
             def step(key, lw, p, thr):
                 b = _resolve_iters_static(
                     self.num_iters, normalise_log_weights(lw), self.name
                 )
-                return metropolis_tpu_step(key, lw, p, b, thr, interpret=interpret)
+                return metropolis_tpu_step(key, lw, p, b, thr, interpret=interpret,
+                                           plane_dtype=pd)
 
             if self.num_iters == AUTO:
                 batch = _per_row_auto_batch(self, single)
@@ -670,22 +716,25 @@ class MetropolisSpec(ResamplerSpec):
                     # single kernel with split(key, B)[b] (held on-kernel,
                     # DESIGN.md §4).
                     return metropolis_tpu_batch(
-                        key, w, self.num_iters, interpret=interpret
+                        key, w, self.num_iters, interpret=interpret, plane_dtype=pd
                     )
 
                 def apply_batch(key, w, p):
                     return metropolis_tpu_apply_batch(
-                        key, w, p, self.num_iters, interpret=interpret
+                        key, w, p, self.num_iters, interpret=interpret,
+                        plane_dtype=pd,
                     )
 
                 def apply_rows(keys, w, p):
                     return metropolis_tpu_apply_rows(
-                        keys, w, p, self.num_iters, interpret=interpret
+                        keys, w, p, self.num_iters, interpret=interpret,
+                        plane_dtype=pd,
                     )
 
                 def step_rows(keys, lw, p, thr):
                     return metropolis_tpu_step_rows(
-                        keys, lw, p, self.num_iters, thr, interpret=interpret
+                        keys, lw, p, self.num_iters, thr, interpret=interpret,
+                        plane_dtype=pd,
                     )
 
             return Resampler(self, single, batch, apply=apply,
@@ -716,20 +765,21 @@ def _c1c2_pallas_build(spec, tpu_fn, tpu_apply_fn, tpu_step_fn) -> Resampler:
     leading-batch-grid kernel, so the bank forms map the fused single."""
 
     interpret = spec.backend == "pallas_interpret"
+    pd = spec.plane_dtype
 
     def single(key, w):
         b = _resolve_iters_static(spec.num_iters, w, spec.name)
-        return tpu_fn(key, w, b, interpret=interpret)
+        return tpu_fn(key, w, b, interpret=interpret, plane_dtype=pd)
 
     def apply(key, w, p):
         b = _resolve_iters_static(spec.num_iters, w, spec.name)
-        return tpu_apply_fn(key, w, p, b, interpret=interpret)
+        return tpu_apply_fn(key, w, p, b, interpret=interpret, plane_dtype=pd)
 
     def step(key, lw, p, thr):
         b = _resolve_iters_static(
             spec.num_iters, normalise_log_weights(lw), spec.name
         )
-        return tpu_step_fn(key, lw, p, b, thr, interpret=interpret)
+        return tpu_step_fn(key, lw, p, b, thr, interpret=interpret, plane_dtype=pd)
 
     if spec.num_iters == AUTO:
         batch = _per_row_auto_batch(spec, single)
@@ -772,6 +822,7 @@ class MetropolisC1Spec(ResamplerSpec):
     partition_size_bytes: int = 128
     warp: int = WARP
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     _NAME: ClassVar[str] = "metropolis_c1"
 
@@ -781,6 +832,7 @@ class MetropolisC1Spec(ResamplerSpec):
         _check_positive_int(self.warp, "warp", "MetropolisC1Spec")
         _check_backend(self.backend, "MetropolisC1Spec")
         _check_kernel_partition(self, "MetropolisC1Spec")
+        _check_plane_dtype(self.plane_dtype, "MetropolisC1Spec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -813,6 +865,7 @@ class MetropolisC2Spec(ResamplerSpec):
     partition_size_bytes: int = 128
     warp: int = WARP
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     _NAME: ClassVar[str] = "metropolis_c2"
 
@@ -822,6 +875,7 @@ class MetropolisC2Spec(ResamplerSpec):
         _check_positive_int(self.warp, "warp", "MetropolisC2Spec")
         _check_backend(self.backend, "MetropolisC2Spec")
         _check_kernel_partition(self, "MetropolisC2Spec")
+        _check_plane_dtype(self.plane_dtype, "MetropolisC2Spec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -848,12 +902,14 @@ class RejectionSpec(ResamplerSpec):
 
     max_iters: int = 1024
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     _NAME: ClassVar[str] = "rejection"
 
     def __post_init__(self):
         _check_positive_int(self.max_iters, "max_iters", "RejectionSpec")
         _check_backend(self.backend, "RejectionSpec")
+        _check_plane_dtype(self.plane_dtype, "RejectionSpec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -868,38 +924,46 @@ class RejectionSpec(ResamplerSpec):
             )
 
             interpret = self.backend == "pallas_interpret"
+            pd = self.plane_dtype
 
             def single(key, w):
-                return rejection_tpu(key, w, max_iters=self.max_iters, interpret=interpret)
+                return rejection_tpu(key, w, max_iters=self.max_iters,
+                                     interpret=interpret, plane_dtype=pd)
 
             def batch(key, w):
                 return rejection_tpu_batch(
-                    key, w, max_iters=self.max_iters, interpret=interpret
+                    key, w, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             def apply(key, w, p):
                 return rejection_tpu_apply(
-                    key, w, p, max_iters=self.max_iters, interpret=interpret
+                    key, w, p, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             def apply_batch(key, w, p):
                 return rejection_tpu_apply_batch(
-                    key, w, p, max_iters=self.max_iters, interpret=interpret
+                    key, w, p, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             def apply_rows(keys, w, p):
                 return rejection_tpu_apply_rows(
-                    keys, w, p, max_iters=self.max_iters, interpret=interpret
+                    keys, w, p, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             def step(key, lw, p, thr):
                 return rejection_tpu_step(
-                    key, lw, p, thr, max_iters=self.max_iters, interpret=interpret
+                    key, lw, p, thr, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             def step_rows(keys, lw, p, thr):
                 return rejection_tpu_step_rows(
-                    keys, lw, p, thr, max_iters=self.max_iters, interpret=interpret
+                    keys, lw, p, thr, max_iters=self.max_iters, interpret=interpret,
+                    plane_dtype=pd,
                 )
 
             return Resampler(self, single, batch, apply=apply,
@@ -931,6 +995,7 @@ class PrefixSumSpec(ResamplerSpec):
 
     kind: str = "systematic"
     backend: str = "reference"
+    plane_dtype: str = "float32"
 
     def __post_init__(self):
         if self.kind not in _PREFIX_SUM_KINDS:
@@ -941,6 +1006,7 @@ class PrefixSumSpec(ResamplerSpec):
                 f"got {self.kind!r}{did_you_mean}"
             )
         _check_backend(self.backend, "PrefixSumSpec")
+        _check_plane_dtype(self.plane_dtype, "PrefixSumSpec")
 
     @property
     def name(self) -> str:
@@ -956,9 +1022,11 @@ class PrefixSumSpec(ResamplerSpec):
 
             interpret = self.backend == "pallas_interpret"
             kind = self.kind
+            pd = self.plane_dtype
 
             def single(key, w):
-                return prefix_resample_tpu(key, w, kind, interpret=interpret)
+                return prefix_resample_tpu(key, w, kind, interpret=interpret,
+                                           plane_dtype=pd)
 
             def batch(key, w):
                 # Scan + search per row under lax.map (row b == single with
@@ -967,7 +1035,8 @@ class PrefixSumSpec(ResamplerSpec):
                 return jax.lax.map(lambda kw: single(kw[0], kw[1]), (keys, w))
 
             def apply(key, w, p):
-                return prefix_resample_tpu_apply(key, w, p, kind, interpret=interpret)
+                return prefix_resample_tpu_apply(key, w, p, kind, interpret=interpret,
+                                                 plane_dtype=pd)
 
             def apply_batch(key, w, p):
                 keys = split_batch_keys(key, w.shape[0])
@@ -978,7 +1047,7 @@ class PrefixSumSpec(ResamplerSpec):
 
             def step(key, lw, p, thr):
                 return prefix_resample_tpu_step(
-                    key, lw, p, thr, kind, interpret=interpret
+                    key, lw, p, thr, kind, interpret=interpret, plane_dtype=pd
                 )
 
             def step_rows(keys, lw, p, thr):
@@ -1087,7 +1156,8 @@ def spec_from_name(name: str, **kwargs) -> ResamplerSpec:
 
 
 def spec_for_backend(
-    name: str, backend: str, *, num_iters: Union[int, str] = 16, max_iters: int = 64
+    name: str, backend: str, *, num_iters: Union[int, str] = 16,
+    max_iters: int = 64, plane_dtype: str = "float32",
 ) -> ResamplerSpec:
     """A kernel-legal spec for any (family, backend) cell of the matrix.
 
@@ -1104,18 +1174,20 @@ def spec_for_backend(
     if fam.spec_cls is MegopolisSpec:
         return MegopolisSpec(num_iters=num_iters,
                              segment=KERNEL_SEGMENT if pallas else DEFAULT_SEGMENT,
-                             backend=backend)
+                             backend=backend, plane_dtype=plane_dtype)
     if fam.spec_cls in (MetropolisC1Spec, MetropolisC2Spec):
         return fam.spec_cls(
             num_iters=num_iters,
             partition_size_bytes=KERNEL_PARTITION_BYTES if pallas else 128,
-            backend=backend,
+            backend=backend, plane_dtype=plane_dtype,
         )
     if fam.spec_cls is RejectionSpec:
-        return RejectionSpec(max_iters=max_iters, backend=backend)
+        return RejectionSpec(max_iters=max_iters, backend=backend,
+                             plane_dtype=plane_dtype)
     if fam.spec_cls is MetropolisSpec:
-        return MetropolisSpec(num_iters=num_iters, backend=backend)
-    return PrefixSumSpec(kind=name, backend=backend)
+        return MetropolisSpec(num_iters=num_iters, backend=backend,
+                              plane_dtype=plane_dtype)
+    return PrefixSumSpec(kind=name, backend=backend, plane_dtype=plane_dtype)
 
 
 def coerce_spec(resampler: Union[str, ResamplerSpec], /, **defaults) -> ResamplerSpec:

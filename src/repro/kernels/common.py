@@ -36,8 +36,73 @@ def tile_lane_ids(t) -> jnp.ndarray:
 # Residency budget for kernels that keep a whole f32[N] array VMEM-resident
 # (the Metropolis/rejection random gather, the search kernel's CDF): ~4 MB,
 # comfortably inside a 16 MB VMEM core.  ONE definition — DESIGN.md §2
-# cites it, three ops modules enforce it.
+# cites it, three ops modules enforce it.  The budget is BYTES underneath
+# (MAX_VMEM_PARTICLE_BYTES): compressed planes (DESIGN.md §14) double the
+# admissible N because a bf16/f16 word is half an f32 word.
 MAX_VMEM_PARTICLES = 1 << 20
+MAX_VMEM_PARTICLE_BYTES = 4 * MAX_VMEM_PARTICLES
+
+# ---------------------------------------------------------------------------
+# Compressed particle planes (DESIGN.md §14)
+#
+# The ``plane_dtype`` spec axis compresses what the fused path MOVES — the
+# weight/CDF tiles and the float state planes — while every kernel body
+# upcasts its loads so selection arithmetic, RNG, ESS/log-evidence stats and
+# bisection boundaries stay f32 on-chip.  ``quantise_plane`` is the ONE
+# rounding point (idempotent, applied at the Resampler entry for every
+# backend); ``compress_plane`` is the lossless wire-narrowing the ops
+# wrappers apply to already-quantised operands.
+# ---------------------------------------------------------------------------
+
+#: Spec-level names for the plane-compression axis.  float16 is experimental:
+#: its 5-bit exponent underflows genuinely small weights (min normal ~6.1e-5)
+#: so only bf16 (f32 exponent range) is quality-gated.
+PLANE_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def canonical_plane_dtype(plane_dtype) -> jnp.dtype:
+    """Validate and canonicalise a ``plane_dtype`` spec value to a dtype."""
+    if plane_dtype is None:
+        return jnp.dtype(jnp.float32)
+    name = (
+        plane_dtype if isinstance(plane_dtype, str) else jnp.dtype(plane_dtype).name
+    )
+    if name not in PLANE_DTYPES:
+        raise ValueError(
+            f"plane_dtype must be one of {PLANE_DTYPES}; got {plane_dtype!r}"
+        )
+    return jnp.dtype(name)
+
+
+def plane_itemsize(plane_dtype) -> int:
+    """Bytes per compressed-plane word (4, 2, 2)."""
+    return canonical_plane_dtype(plane_dtype).itemsize
+
+
+def quantise_plane(x: jnp.ndarray, plane_dtype) -> jnp.ndarray:
+    """Round ``x`` onto the ``plane_dtype`` grid, keeping its own dtype.
+
+    Identity for f32 planes (a same-dtype convert is elided from the
+    jaxpr, preserving the structural identical-program gates) and for
+    NON-float arrays (int particle states pass through untouched).
+    Idempotent: ``quantise(quantise(x)) == quantise(x)`` bitwise, which is
+    what makes the ops-layer ``compress_plane`` narrowing lossless.
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    dt = canonical_plane_dtype(plane_dtype)
+    return x.astype(dt).astype(x.dtype)
+
+
+def compress_plane(x: jnp.ndarray, plane_dtype) -> jnp.ndarray:
+    """Narrow an (already quantised) float plane to the wire dtype the
+    kernel DMAs.  Non-float planes (int state) keep their dtype — the
+    compression axis only ever touches float planes."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    return x.astype(canonical_plane_dtype(plane_dtype))
 
 # ---------------------------------------------------------------------------
 # Fused resample+gather state layout (DESIGN.md §11)
@@ -58,7 +123,9 @@ STATE_PLANE_TILE = SUBLANES
 
 # Resident-state budget in f32 words (n * d_pad): ~8 MB, alongside at most
 # ~4 MB of resident weights (MAX_VMEM_PARTICLES) still inside a 16 MB core.
+# Bytes underneath (MAX_VMEM_STATE_BYTES): compressed planes double the edge.
 MAX_VMEM_STATE = 2 * MAX_VMEM_PARTICLES
+MAX_VMEM_STATE_BYTES = 4 * MAX_VMEM_STATE
 
 
 # Static per-launch footprint budget (DESIGN.md §13, pass 4): the analyzer
@@ -97,16 +164,20 @@ def pad_state_dim(state_dim: int) -> int:
     return -(-state_dim // STATE_PLANE_TILE) * STATE_PLANE_TILE
 
 
-def check_state_resident(n: int, state_dim: int, who: str):
+def check_state_resident(n: int, state_dim: int, who: str, itemsize: int = 4):
     """Raise when the fused kernels' resident plane stack exceeds the VMEM
-    state budget (``n * pad_state_dim(state_dim)`` f32 words)."""
+    state budget: ``n * pad_state_dim(state_dim) * itemsize`` bytes against
+    ``MAX_VMEM_STATE_BYTES``.  At the f32 default this is the historical
+    word cap ``n * d_pad <= MAX_VMEM_STATE``; compressed planes
+    (``itemsize == 2``) double the residency edge (DESIGN.md §14)."""
     d_pad = pad_state_dim(state_dim)
-    if n * d_pad > MAX_VMEM_STATE:
+    if n * d_pad * itemsize > MAX_VMEM_STATE_BYTES:
         raise ValueError(
             f"{who} keeps the whole particle state VMEM-resident and caps "
-            f"N * pad_state_dim(state_dim) at {MAX_VMEM_STATE} (got N={n}, "
-            f"state_dim={state_dim} -> {n * d_pad}). Use apply on the "
-            "reference/xla backend (index + XLA gather) above this size."
+            f"N * pad_state_dim(state_dim) * itemsize at {MAX_VMEM_STATE_BYTES} "
+            f"bytes (got N={n}, state_dim={state_dim}, itemsize={itemsize} -> "
+            f"{n * d_pad * itemsize}). Use apply on the reference/xla backend "
+            "(index + XLA gather) above this size."
         )
 
 
@@ -127,20 +198,35 @@ def state_dim_of(particles: jnp.ndarray, n: int, who: str, lead: int = 1) -> int
     return d
 
 
-def run_fused_bank(launch, weights: jnp.ndarray, particles: jnp.ndarray, who: str):
+def state_itemsize(particles: jnp.ndarray, plane_dtype) -> int:
+    """Resident bytes per state word under the compression axis: the plane
+    dtype's width for float states, the state's own width otherwise (int
+    states never compress)."""
+    if jnp.issubdtype(jnp.asarray(particles).dtype, jnp.floating):
+        return plane_itemsize(plane_dtype)
+    return jnp.dtype(particles.dtype).itemsize
+
+
+def run_fused_bank(launch, weights: jnp.ndarray, particles: jnp.ndarray, who: str,
+                   plane_dtype="float32"):
     """Shared bank scaffolding for every family's fused apply launch:
-    residency check, per-row plane pack, ``launch(w3, planes4d) -> (k3,
-    out4d)``, per-row unpack.  Returns ``(particles'[B, N, ...],
-    ancestors int32[B, N])``."""
+    residency check, per-row plane pack (+ §14 wire narrowing),
+    ``launch(w3, planes4d) -> (k3, out4d)``, per-row unpack.  Returns
+    ``(particles'[B, N, ...], ancestors int32[B, N])``."""
     import jax
 
     bsz, n = weights.shape
-    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who)
-    w3 = weights.reshape(bsz, n // LANES, LANES)
-    planes = jax.vmap(lambda p: pack_state_planes(p)[0])(particles)
+    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who,
+                         itemsize=state_itemsize(particles, plane_dtype))
+    w3 = compress_plane(weights.reshape(bsz, n // LANES, LANES), plane_dtype)
+    planes = compress_plane(
+        jax.vmap(lambda p: pack_state_planes(p)[0])(particles), plane_dtype
+    )
     k3, out = launch(w3, planes)
     state_shape = particles.shape[2:]
-    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(out)
+    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(
+        out.astype(particles.dtype)
+    )
     return out_rows, k3.reshape(bsz, n)
 
 
@@ -230,7 +316,8 @@ def gather_state_full(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray
     return jnp.take(flat, k_global.reshape(-1), axis=1).reshape(d_pad, rows, lanes)
 
 
-def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who: str):
+def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who: str,
+                  plane_dtype="float32"):
     """Bank scaffolding for every family's fused STEP launch — the step
     analogue of ``run_fused_bank``: residency check, per-row plane pack,
     ``launch(lw3, planes4d) -> (k3, out4d, stats2)`` with ``stats2`` =
@@ -240,12 +327,17 @@ def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who:
     import jax
 
     bsz, n = log_weights.shape
-    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who)
-    lw3 = log_weights.reshape(bsz, n // LANES, LANES)
-    planes = jax.vmap(lambda p: pack_state_planes(p)[0])(particles)
+    check_state_resident(n, state_dim_of(particles, n, who, lead=2), who,
+                         itemsize=state_itemsize(particles, plane_dtype))
+    lw3 = compress_plane(log_weights.reshape(bsz, n // LANES, LANES), plane_dtype)
+    planes = compress_plane(
+        jax.vmap(lambda p: pack_state_planes(p)[0])(particles), plane_dtype
+    )
     k3, out, stats = launch(lw3, planes)
     state_shape = particles.shape[2:]
-    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(out)
+    out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(
+        out.astype(particles.dtype)
+    )
     return out_rows, k3.reshape(bsz, n), stats[:, 0], stats[:, 1]
 
 
@@ -260,13 +352,16 @@ def check_vmem_resident(
     who: str,
     what: str = "weight array",
     remedy: str = "Use megopolis_tpu (streams tiles at any N).",
+    itemsize: int = 4,
 ):
-    """Raise when a whole-array-resident kernel exceeds the VMEM budget."""
-    if n > MAX_VMEM_PARTICLES:
+    """Raise when a whole-array-resident kernel exceeds the VMEM budget
+    (``n * itemsize`` bytes against ``MAX_VMEM_PARTICLE_BYTES``; the f32
+    default reproduces the historical ``n <= MAX_VMEM_PARTICLES`` cap)."""
+    if n * itemsize > MAX_VMEM_PARTICLE_BYTES:
         raise ValueError(
-            f"{who} keeps the whole {what} VMEM-resident and caps N at "
-            f"{MAX_VMEM_PARTICLES} — the scaling wall the paper's coalescing "
-            f"removes. {remedy}"
+            f"{who} keeps the whole {what} VMEM-resident and caps N * itemsize "
+            f"at {MAX_VMEM_PARTICLE_BYTES} bytes — the scaling wall the "
+            f"paper's coalescing removes. {remedy}"
         )
 
 

@@ -76,7 +76,8 @@ def _kernel(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
     n_total = pl.num_programs(0) * SEG
     k_new, wk_new = _sweep(
         t, b, offsets_ref[b], seed_ref[0],
-        w_own_ref[...], w_cmp_ref[...], k_ref[...], wk_ref[...], n_total,
+        w_own_ref[...].astype(jnp.float32), w_cmp_ref[...].astype(jnp.float32),
+        k_ref[...], wk_ref[...], n_total,
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -95,7 +96,8 @@ def _kernel_batch(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref, k_ref, wk_ref):
     n_total = pl.num_programs(1) * SEG
     k_new, wk_new = _sweep(
         t, b, offsets_ref[b], seeds_ref[s],
-        w_own_ref[0], w_cmp_ref[0], k_ref[0], wk_ref[...], n_total,
+        w_own_ref[0].astype(jnp.float32), w_cmp_ref[0].astype(jnp.float32),
+        k_ref[0], wk_ref[...], n_total,
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
@@ -113,7 +115,8 @@ def _kernel_fused(offsets_ref, seed_ref, w_own_ref, w_cmp_ref, planes_ref,
     n_total = pl.num_programs(0) * SEG
     k_new, wk_new = _sweep(
         t, b, offsets_ref[b], seed_ref[0],
-        w_own_ref[...], w_cmp_ref[...], k_ref[...], wk_ref[...], n_total,
+        w_own_ref[...].astype(jnp.float32), w_cmp_ref[...].astype(jnp.float32),
+        k_ref[...], wk_ref[...], n_total,
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -135,7 +138,8 @@ def _kernel_fused_rows(offsets_ref, seeds_ref, w_own_ref, w_cmp_ref,
     n_total = pl.num_programs(1) * SEG
     k_new, wk_new = _sweep(
         t, b, offsets_ref[s, b], seeds_ref[s],
-        w_own_ref[0], w_cmp_ref[0], k_ref[0], wk_ref[...], n_total,
+        w_own_ref[0].astype(jnp.float32), w_cmp_ref[0].astype(jnp.float32),
+        k_ref[0], wk_ref[...], n_total,
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
@@ -163,7 +167,8 @@ def _kernel_step(offsets_ref, seed_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(lw_full_ref[...].reshape(n_total), n_total)
+        m, ess_norm, incr = step_stats(
+            lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -172,8 +177,12 @@ def _kernel_step(offsets_ref, seed_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
-    w_own = jnp.exp(lw_own_ref[...] - m)
-    w_cmp = jnp.exp(lw_cmp_ref[...] - m)
+    # Normalised weights re-land on the plane-dtype grid (the composed path
+    # quantises at the public ``apply`` boundary); a no-op at f32.
+    w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+    w_cmp = jnp.exp(lw_cmp_ref[...].astype(jnp.float32) - m)
+    w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
+    w_cmp = w_cmp.astype(lw_cmp_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
         t, b, offsets_ref[b], seed_ref[0],
         w_own, w_cmp, k_ref[...], wk_ref[...], n_total,
@@ -202,7 +211,8 @@ def _kernel_step_rows(offsets_ref, seeds_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(lw_full_ref[0].reshape(n_total), n_total)
+        m, ess_norm, incr = step_stats(
+            lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -211,8 +221,10 @@ def _kernel_step_rows(offsets_ref, seeds_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
-    w_own = jnp.exp(lw_own_ref[0] - m)
-    w_cmp = jnp.exp(lw_cmp_ref[0] - m)
+    w_own = jnp.exp(lw_own_ref[0].astype(jnp.float32) - m)
+    w_cmp = jnp.exp(lw_cmp_ref[0].astype(jnp.float32) - m)
+    w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
+    w_cmp = w_cmp.astype(lw_cmp_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
         t, b, offsets_ref[s, b], seeds_ref[s],
         w_own, w_cmp, k_ref[0], wk_ref[...], n_total,
@@ -255,7 +267,7 @@ def megopolis_pallas(
             pl.BlockSpec((SUBLANES, LANES), _cmp_index),
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel,
@@ -305,7 +317,7 @@ def megopolis_pallas_batch(
             pl.BlockSpec((1, SUBLANES, LANES), _cmp_index),
         ],
         out_specs=pl.BlockSpec((1, SUBLANES, LANES), _own_index),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_batch,
@@ -353,7 +365,7 @@ def megopolis_pallas_fused(
             pl.BlockSpec((SUBLANES, LANES), lambda t, b, offs, seed: (t, 0)),
             pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, offs, seed: (0, t, 0)),
         ],
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_fused,
@@ -413,7 +425,7 @@ def megopolis_pallas_fused_rows(
                 (1, d_pad, SUBLANES, LANES), lambda s, t, b, offs, seeds: (s, 0, t, 0)
             ),
         ],
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_fused_rows,
@@ -469,7 +481,7 @@ def megopolis_pallas_step(
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.SMEM((2,), jnp.float32),  # (m, do) latch across grid steps
         ],
     )
@@ -531,7 +543,7 @@ def megopolis_pallas_step_rows(
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), log_weights3d.dtype),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.SMEM((2,), jnp.float32),
         ],
     )

@@ -17,11 +17,14 @@ from repro.kernels.common import (
     TILE,
     check_state_resident,
     check_vmem_resident,
+    compress_plane,
     key_to_seed,
     pack_state_planes,
+    plane_itemsize,
     run_fused_bank,
     run_step_bank,
     state_dim_of,
+    state_itemsize,
     unpack_state_planes,
 )
 from repro.kernels.megopolis.megopolis import (
@@ -41,6 +44,7 @@ def megopolis_tpu(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """Resample with the Pallas Megopolis kernel; returns int32[N] ancestors.
 
@@ -56,7 +60,7 @@ def megopolis_tpu(
     key_off, key_seed = jax.random.split(key)
     offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
     seed = key_to_seed(key_seed).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     k2 = megopolis_pallas(w2, offsets, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
 
@@ -67,6 +71,7 @@ def megopolis_tpu_batch(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """Resample a ``[B, N]`` weight bank in one kernel launch (DESIGN.md §4).
 
@@ -86,7 +91,7 @@ def megopolis_tpu_batch(
     key_off, key_rows = jax.random.split(key)
     offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
     seeds = key_to_seed(jax.random.split(key_rows, bsz))
-    w3 = weights.reshape(bsz, n // LANES, LANES)
+    w3 = compress_plane(weights.reshape(bsz, n // LANES, LANES), plane_dtype)
     k3 = megopolis_pallas_batch(w3, offsets, seeds, num_iters=num_iters, interpret=interpret)
     return k3.reshape(bsz, n)
 
@@ -98,6 +103,7 @@ def megopolis_tpu_apply(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused resample+gather (DESIGN.md §11): ONE kernel launch selects the
     ancestors (identical stream to ``megopolis_tpu``) and copies each
@@ -109,15 +115,18 @@ def megopolis_tpu_apply(
             f"megopolis_tpu_apply requires N % {TILE} == 0 (one f32 VMEM tile); got N={n}."
         )
     check_state_resident(n, state_dim_of(particles, n, "megopolis_tpu_apply"),
-                         "megopolis_tpu_apply")
+                         "megopolis_tpu_apply",
+                         itemsize=state_itemsize(particles, plane_dtype))
     key_off, key_seed = jax.random.split(key)
     offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
     seed = key_to_seed(key_seed).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
     k2, out = megopolis_pallas_fused(
         w2, planes, offsets, seed, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
@@ -128,6 +137,7 @@ def megopolis_tpu_apply_batch(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused bank launch under the ``megopolis_tpu_batch`` contract: the
     offset table is drawn ONCE (same key derivation) and shared by every
@@ -148,7 +158,8 @@ def megopolis_tpu_apply_batch(
     seeds = key_to_seed(jax.random.split(key_rows, bsz))
     return _apply_rows_launch(weights, particles, offsets2d, seeds,
                               num_iters=num_iters, interpret=interpret,
-                              who="megopolis_tpu_apply_batch")
+                              who="megopolis_tpu_apply_batch",
+                              plane_dtype=plane_dtype)
 
 
 def megopolis_tpu_apply_rows(
@@ -158,6 +169,7 @@ def megopolis_tpu_apply_rows(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused bank launch over EXPLICIT per-row keys (the filter-bank path):
     each row derives its own offset table and seed exactly as the single
@@ -180,16 +192,17 @@ def megopolis_tpu_apply_rows(
     seeds = key_to_seed(keys_seed)
     return _apply_rows_launch(weights, particles, offsets2d, seeds,
                               num_iters=num_iters, interpret=interpret,
-                              who="megopolis_tpu_apply_rows")
+                              who="megopolis_tpu_apply_rows",
+                              plane_dtype=plane_dtype)
 
 
 def _apply_rows_launch(weights, particles, offsets2d, seeds, *, num_iters,
-                       interpret, who):
+                       interpret, who, plane_dtype="float32"):
     return run_fused_bank(
         lambda w3, planes: megopolis_pallas_fused_rows(
             w3, planes, offsets2d, seeds, num_iters=num_iters, interpret=interpret
         ),
-        weights, particles, who,
+        weights, particles, who, plane_dtype=plane_dtype,
     )
 
 
@@ -201,6 +214,7 @@ def megopolis_tpu_step(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional
     resample → state copy in ONE kernel launch.  ``log_weights``: f32[N]
@@ -215,18 +229,22 @@ def megopolis_tpu_step(
         )
     check_vmem_resident(n, "megopolis_tpu_step", "log-weight array",
                         remedy="Compose Resampler.step on the reference/xla backend "
-                               "above this size.")
+                               "above this size.",
+                        itemsize=plane_itemsize(plane_dtype))
     check_state_resident(n, state_dim_of(particles, n, "megopolis_tpu_step"),
-                         "megopolis_tpu_step")
+                         "megopolis_tpu_step",
+                         itemsize=state_itemsize(particles, plane_dtype))
     key_off, key_seed = jax.random.split(key)
     offsets = jax.random.randint(key_off, (num_iters,), 0, n, dtype=jnp.int32)
     seed = key_to_seed(key_seed).reshape(1)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
-    lw2 = log_weights.reshape(n // LANES, LANES)
+    lw2 = compress_plane(log_weights.reshape(n // LANES, LANES), plane_dtype)
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
     k2, out, stats = megopolis_pallas_step(
         lw2, planes, offsets, seed, thr, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])
 
@@ -239,6 +257,7 @@ def megopolis_tpu_step_rows(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC-step bank over EXPLICIT per-row keys: row b is
     bit-identical to ``megopolis_tpu_step(keys[b], ...)`` — each row takes
@@ -256,7 +275,8 @@ def megopolis_tpu_step_rows(
         )
     check_vmem_resident(n, "megopolis_tpu_step_rows", "log-weight array",
                         remedy="Compose Resampler.step_rows on the reference/xla "
-                               "backend above this size.")
+                               "backend above this size.",
+                        itemsize=plane_itemsize(plane_dtype))
     split = jax.vmap(jax.random.split)(keys)
     keys_off, keys_seed = split[:, 0], split[:, 1]
     offsets2d = jax.vmap(
@@ -270,4 +290,5 @@ def megopolis_tpu_step_rows(
             interpret=interpret
         ),
         log_weights, particles, "megopolis_tpu_step_rows",
+        plane_dtype=plane_dtype,
     )

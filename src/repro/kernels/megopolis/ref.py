@@ -31,12 +31,16 @@ def megopolis_ref(
     n = weights.shape[0]
     i = jnp.arange(n, dtype=jnp.int32)
     seed = jnp.asarray(seed).reshape(-1)[0]
+    # Selection arithmetic is ALWAYS f32, whatever dtype the weight plane
+    # arrives in (DESIGN.md §14: the kernel upcasts compressed operands on
+    # load) — a no-op for the f32 golden streams.
+    weights = weights.astype(jnp.float32)
 
     def body(b, state):
         k, wk = state
         j = megopolis_indices(i, offsets[b], SEG, n).astype(jnp.int32)
         w_j = weights[j]
-        u = hash_uniform(seed, i, b, dtype=weights.dtype)
+        u = hash_uniform(seed, i, b, dtype=jnp.float32)
         accept = u * wk <= w_j
         return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
 

@@ -79,7 +79,8 @@ def _kernel_c1(p_ref, seed_ref, w_own_ref, w_part_ref, k_ref, wk_ref):
     n_total = pl.num_programs(0) * SEG
     k_new, wk_new = _sweep_partition(
         t, b, p_ref[t], seed_ref[0],
-        w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+        w_own_ref[...].astype(jnp.float32), w_part_ref[...].astype(jnp.float32),
+        k_ref[...], wk_ref[...], n_total,
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -92,7 +93,9 @@ def _make_kernel_c2(num_iters: int):
         n_total = pl.num_programs(0) * SEG
         k_new, wk_new = _sweep_partition(
             t, b, p_ref[t * num_iters + b], seed_ref[0],
-            w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+            w_own_ref[...].astype(jnp.float32),
+            w_part_ref[...].astype(jnp.float32),
+            k_ref[...], wk_ref[...], n_total,
         )
         k_ref[...] = k_new
         wk_ref[...] = wk_new
@@ -111,7 +114,8 @@ def _kernel_c1_fused(p_ref, seed_ref, w_own_ref, w_part_ref, planes_ref,
     n_total = pl.num_programs(0) * SEG
     k_new, wk_new = _sweep_partition(
         t, b, p_ref[t], seed_ref[0],
-        w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+        w_own_ref[...].astype(jnp.float32), w_part_ref[...].astype(jnp.float32),
+        k_ref[...], wk_ref[...], n_total,
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -129,7 +133,9 @@ def _make_kernel_c2_fused(num_iters: int):
         n_total = pl.num_programs(0) * SEG
         k_new, wk_new = _sweep_partition(
             t, b, p_ref[t * num_iters + b], seed_ref[0],
-            w_own_ref[...], w_part_ref[...], k_ref[...], wk_ref[...], n_total,
+            w_own_ref[...].astype(jnp.float32),
+            w_part_ref[...].astype(jnp.float32),
+            k_ref[...], wk_ref[...], n_total,
         )
         k_ref[...] = k_new
         wk_ref[...] = wk_new
@@ -158,7 +164,7 @@ def _make_kernel_step(p_at):
         @pl.when((t == 0) & (b == 0))
         def _prelude():
             m, ess_norm, incr = step_stats(
-                lw_full_ref[...].reshape(n_total), n_total
+                lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
@@ -168,8 +174,12 @@ def _make_kernel_step(p_at):
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
-        w_own = jnp.exp(lw_own_ref[...] - m)
-        w_part = jnp.exp(lw_part_ref[...] - m)
+        # Normalised weights re-land on the plane-dtype grid (the composed
+        # path quantises at the public ``apply`` boundary); a no-op at f32.
+        w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+        w_part = jnp.exp(lw_part_ref[...].astype(jnp.float32) - m)
+        w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
+        w_part = w_part.astype(lw_part_ref.dtype).astype(jnp.float32)
         k_new, wk_new = _sweep_partition(
             t, b, p_at(p_ref, t, b), seed_ref[0],
             w_own, w_part, k_ref[...], wk_ref[...], n_total,
@@ -212,7 +222,7 @@ def _c1c2_step_call(kernel, log_weights2d, planes, partitions, seed, thr, *,
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.SMEM((2,), jnp.float32),
         ],
     )
@@ -295,7 +305,7 @@ def _c1c2_fused_call(kernel, weights2d, planes, partitions, seed, *,
             pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
             pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, p, seed: (0, t, 0)),
         ],
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         kernel,
@@ -374,7 +384,7 @@ def metropolis_c1_pallas(
             pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (p[t], 0)),
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_c1,
@@ -411,7 +421,7 @@ def metropolis_c2_pallas(
             ),
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, p, seed: (t, 0)),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _make_kernel_c2(num_iters),

@@ -57,7 +57,8 @@ def _kernel(seed_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
     t = pl.program_id(0)
     b = pl.program_id(1)
     k_new, wk_new = _sweep(
-        t, b, seed_ref[0], w_full_ref[...], w_own_ref[...], k_ref[...], wk_ref[...]
+        t, b, seed_ref[0], w_full_ref[...].astype(jnp.float32),
+        w_own_ref[...].astype(jnp.float32), k_ref[...], wk_ref[...]
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -74,7 +75,8 @@ def _kernel_batch(seeds_ref, w_full_ref, w_own_ref, k_ref, wk_ref):
     t = pl.program_id(1)
     b = pl.program_id(2)
     k_new, wk_new = _sweep(
-        t, b, seeds_ref[s], w_full_ref[0], w_own_ref[0], k_ref[0], wk_ref[...]
+        t, b, seeds_ref[s], w_full_ref[0].astype(jnp.float32),
+        w_own_ref[0].astype(jnp.float32), k_ref[0], wk_ref[...]
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
@@ -89,7 +91,8 @@ def _kernel_fused(seed_ref, w_full_ref, w_own_ref, planes_ref, k_ref, out_ref,
     t = pl.program_id(0)
     b = pl.program_id(1)
     k_new, wk_new = _sweep(
-        t, b, seed_ref[0], w_full_ref[...], w_own_ref[...], k_ref[...], wk_ref[...]
+        t, b, seed_ref[0], w_full_ref[...].astype(jnp.float32),
+        w_own_ref[...].astype(jnp.float32), k_ref[...], wk_ref[...]
     )
     k_ref[...] = k_new
     wk_ref[...] = wk_new
@@ -107,7 +110,8 @@ def _kernel_fused_batch(seeds_ref, w_full_ref, w_own_ref, planes_ref, k_ref,
     t = pl.program_id(1)
     b = pl.program_id(2)
     k_new, wk_new = _sweep(
-        t, b, seeds_ref[s], w_full_ref[0], w_own_ref[0], k_ref[0], wk_ref[...]
+        t, b, seeds_ref[s], w_full_ref[0].astype(jnp.float32),
+        w_own_ref[0].astype(jnp.float32), k_ref[0], wk_ref[...]
     )
     k_ref[0] = k_new
     wk_ref[...] = wk_new
@@ -129,7 +133,8 @@ def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(lw_full_ref[...].reshape(n_total), n_total)
+        m, ess_norm, incr = step_stats(
+            lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -138,8 +143,12 @@ def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
-    w_full = jnp.exp(lw_full_ref[...] - m)
-    w_own = jnp.exp(lw_own_ref[...] - m)
+    # Normalised weights re-land on the plane-dtype grid (the composed path
+    # quantises at the public ``apply`` boundary); a no-op at f32.
+    w_full = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
+    w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+    w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
+    w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
         t, b, seed_ref[0], w_full, w_own, k_ref[...], wk_ref[...]
     )
@@ -165,7 +174,8 @@ def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(lw_full_ref[0].reshape(n_total), n_total)
+        m, ess_norm, incr = step_stats(
+            lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -174,8 +184,10 @@ def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
-    w_full = jnp.exp(lw_full_ref[0] - m)
-    w_own = jnp.exp(lw_own_ref[0] - m)
+    w_full = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
+    w_own = jnp.exp(lw_own_ref[0].astype(jnp.float32) - m)
+    w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
+    w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
         t, b, seeds_ref[s], w_full, w_own, k_ref[0], wk_ref[...]
     )
@@ -210,7 +222,7 @@ def metropolis_pallas(
             pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel,
@@ -250,7 +262,7 @@ def metropolis_pallas_batch(
             pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
         ],
         out_specs=pl.BlockSpec((1, SUBLANES, LANES), lambda s, t, b, seeds: (s, t, 0)),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_batch,
@@ -290,7 +302,7 @@ def metropolis_pallas_fused(
             pl.BlockSpec((SUBLANES, LANES), lambda t, b, seed: (t, 0)),
             pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, b, seed: (0, t, 0)),
         ],
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights2d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_fused,
@@ -337,7 +349,7 @@ def metropolis_pallas_fused_batch(
                 (1, d_pad, SUBLANES, LANES), lambda s, t, b, seeds: (s, 0, t, 0)
             ),
         ],
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), weights3d.dtype)],
+        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), jnp.float32)],
     )
     return pl.pallas_call(
         _kernel_fused_batch,
@@ -385,7 +397,7 @@ def metropolis_pallas_step(
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), log_weights2d.dtype),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.SMEM((2,), jnp.float32),
         ],
     )
@@ -439,7 +451,7 @@ def metropolis_pallas_step_rows(
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), log_weights3d.dtype),
+            pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.SMEM((2,), jnp.float32),
         ],
     )

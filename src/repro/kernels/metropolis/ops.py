@@ -20,10 +20,13 @@ from repro.kernels.common import (  # noqa: F401  (MAX_VMEM_PARTICLES re-export)
     check_state_resident,
     check_tile_aligned,
     check_vmem_resident,
+    compress_plane,
     key_to_seed,
     pack_state_planes,
+    plane_itemsize,
     run_fused_bank,
     state_dim_of,
+    state_itemsize,
     unpack_state_planes,
 )
 from repro.kernels.common import run_step_bank
@@ -52,12 +55,13 @@ def metropolis_tpu(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     n = weights.shape[0]
     check_tile_aligned(n, "metropolis_tpu")
-    check_vmem_resident(n, "metropolis_tpu")
+    check_vmem_resident(n, "metropolis_tpu", itemsize=plane_itemsize(plane_dtype))
     seed = key_to_seed(key).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     k2 = metropolis_pallas(w2, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
 
@@ -68,6 +72,7 @@ def metropolis_tpu_batch(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """One ``[B, R, 128]`` launch; row b == ``metropolis_tpu(split(key,B)[b],
     weights[b])`` bit-exactly (the §4 split-key contract, held on-kernel)."""
@@ -75,21 +80,25 @@ def metropolis_tpu_batch(
         raise ValueError(f"metropolis_tpu_batch expects weights[B, N]; got {weights.shape}")
     bsz, n = weights.shape
     check_tile_aligned(n, "metropolis_tpu_batch")
-    check_vmem_resident(n, "metropolis_tpu_batch")
+    check_vmem_resident(n, "metropolis_tpu_batch",
+                        itemsize=plane_itemsize(plane_dtype))
     seeds = key_to_seed(split_batch_keys(key, bsz))
-    w3 = weights.reshape(bsz, n // LANES, LANES)
+    w3 = compress_plane(weights.reshape(bsz, n // LANES, LANES), plane_dtype)
     k3 = metropolis_pallas_batch(w3, seeds, num_iters=num_iters, interpret=interpret)
     return k3.reshape(bsz, n)
 
 
-def _pack_single(weights, particles, who, *, weights_resident: bool = True):
+def _pack_single(weights, particles, who, *, weights_resident: bool = True,
+                 plane_dtype="float32"):
     n = weights.shape[0]
     check_tile_aligned(n, who)
     if weights_resident:  # C1/C2 only keep partition tiles resident
-        check_vmem_resident(n, who)
-    check_state_resident(n, state_dim_of(particles, n, who), who)
+        check_vmem_resident(n, who, itemsize=plane_itemsize(plane_dtype))
+    check_state_resident(n, state_dim_of(particles, n, who), who,
+                         itemsize=state_itemsize(particles, plane_dtype))
     planes, state_shape = pack_state_planes(particles)
-    return n, weights.reshape(n // LANES, LANES), planes, state_shape
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
+    return n, w2, compress_plane(planes, plane_dtype), state_shape
 
 
 def metropolis_tpu_apply(
@@ -99,27 +108,32 @@ def metropolis_tpu_apply(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused resample+gather (DESIGN.md §11): ancestors identical to
     ``metropolis_tpu``; the state copy happens in VMEM.  Returns
     ``(particles', ancestors)``."""
-    n, w2, planes, state_shape = _pack_single(weights, particles, "metropolis_tpu_apply")
+    n, w2, planes, state_shape = _pack_single(
+        weights, particles, "metropolis_tpu_apply", plane_dtype=plane_dtype
+    )
     seed = key_to_seed(key).reshape(1)
     k2, out = metropolis_pallas_fused(
         w2, planes, seed, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
-def _metropolis_apply_bank(seeds, weights, particles, num_iters, *, interpret, who):
+def _metropolis_apply_bank(seeds, weights, particles, num_iters, *, interpret,
+                           who, plane_dtype="float32"):
     n = weights.shape[1]
     check_tile_aligned(n, who)
-    check_vmem_resident(n, who)
+    check_vmem_resident(n, who, itemsize=plane_itemsize(plane_dtype))
     return run_fused_bank(
         lambda w3, planes: metropolis_pallas_fused_batch(
             w3, planes, seeds, num_iters=num_iters, interpret=interpret
         ),
-        weights, particles, who,
+        weights, particles, who, plane_dtype=plane_dtype,
     )
 
 
@@ -130,6 +144,7 @@ def metropolis_tpu_apply_batch(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused ``[B, R, 128]`` bank launch under the §4 split-key contract;
     row b == ``metropolis_tpu_apply(split(key, B)[b], ...)`` bit-exactly."""
@@ -140,7 +155,7 @@ def metropolis_tpu_apply_batch(
     seeds = key_to_seed(split_batch_keys(key, weights.shape[0]))
     return _metropolis_apply_bank(
         seeds, weights, particles, num_iters, interpret=interpret,
-        who="metropolis_tpu_apply_batch",
+        who="metropolis_tpu_apply_batch", plane_dtype=plane_dtype,
     )
 
 
@@ -151,6 +166,7 @@ def metropolis_tpu_apply_rows(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused bank launch over EXPLICIT per-row keys (the filter-bank path);
     row b == ``metropolis_tpu_apply(keys[b], ...)`` bit-exactly, in ONE
@@ -161,7 +177,7 @@ def metropolis_tpu_apply_rows(
         )
     return _metropolis_apply_bank(
         key_to_seed(keys), weights, particles, num_iters, interpret=interpret,
-        who="metropolis_tpu_apply_rows",
+        who="metropolis_tpu_apply_rows", plane_dtype=plane_dtype,
     )
 
 
@@ -173,19 +189,21 @@ def metropolis_tpu_step(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional Alg. 2
     resample → state copy in ONE launch; the resample branch is
     bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
     Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
     n, lw2, planes, state_shape = _pack_single(
-        log_weights, particles, "metropolis_tpu_step"
+        log_weights, particles, "metropolis_tpu_step", plane_dtype=plane_dtype
     )
     seed = key_to_seed(key).reshape(1)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
     k2, out, stats = metropolis_pallas_step(
         lw2, planes, seed, thr, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])
 
@@ -198,6 +216,7 @@ def metropolis_tpu_step_rows(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
     ``metropolis_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
@@ -208,7 +227,8 @@ def metropolis_tpu_step_rows(
         )
     n = log_weights.shape[1]
     check_tile_aligned(n, "metropolis_tpu_step_rows")
-    check_vmem_resident(n, "metropolis_tpu_step_rows")
+    check_vmem_resident(n, "metropolis_tpu_step_rows",
+                        itemsize=plane_itemsize(plane_dtype))
     seeds = key_to_seed(keys)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
     return run_step_bank(
@@ -216,6 +236,7 @@ def metropolis_tpu_step_rows(
             lw3, planes, seeds, thr, num_iters=num_iters, interpret=interpret
         ),
         log_weights, particles, "metropolis_tpu_step_rows",
+        plane_dtype=plane_dtype,
     )
 
 
@@ -225,6 +246,7 @@ def metropolis_c1_tpu(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """Alg. 3 at tile granularity: ONE partition tile per own-tile, kept for
     all iterations.  Key split mirrors the reference ``metropolis_c1``:
@@ -236,7 +258,7 @@ def metropolis_c1_tpu(
     kp, kloop = jax.random.split(key)
     partitions = jax.random.randint(kp, (num_tiles,), 0, num_tiles, dtype=jnp.int32)
     seed = key_to_seed(kloop).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     k2 = metropolis_c1_pallas(w2, partitions, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
 
@@ -247,6 +269,7 @@ def metropolis_c2_tpu(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """Alg. 4 at tile granularity: a FRESH partition tile per (tile,
     iteration) — table laid out row-major by tile, ``p[t * B + b]``."""
@@ -258,7 +281,7 @@ def metropolis_c2_tpu(
         kp, (num_tiles * num_iters,), 0, num_tiles, dtype=jnp.int32
     )
     seed = key_to_seed(kloop).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     k2 = metropolis_c2_pallas(w2, partitions, seed, num_iters=num_iters, interpret=interpret)
     return k2.reshape(n)
 
@@ -270,11 +293,13 @@ def metropolis_c1_tpu_apply(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused C1 resample+gather; same key split as ``metropolis_c1_tpu``.
     Returns ``(particles', ancestors)``."""
     n, w2, planes, state_shape = _pack_single(
-        weights, particles, "metropolis_c1_tpu_apply", weights_resident=False
+        weights, particles, "metropolis_c1_tpu_apply", weights_resident=False,
+        plane_dtype=plane_dtype,
     )
     num_tiles = n // TILE
     kp, kloop = jax.random.split(key)
@@ -283,6 +308,7 @@ def metropolis_c1_tpu_apply(
     k2, out = metropolis_c1_pallas_fused(
         w2, planes, partitions, seed, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
@@ -293,11 +319,13 @@ def metropolis_c2_tpu_apply(
     num_iters: int,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused C2 resample+gather; same key split as ``metropolis_c2_tpu``.
     Returns ``(particles', ancestors)``."""
     n, w2, planes, state_shape = _pack_single(
-        weights, particles, "metropolis_c2_tpu_apply", weights_resident=False
+        weights, particles, "metropolis_c2_tpu_apply", weights_resident=False,
+        plane_dtype=plane_dtype,
     )
     num_tiles = n // TILE
     kp, kloop = jax.random.split(key)
@@ -308,6 +336,7 @@ def metropolis_c2_tpu_apply(
     k2, out = metropolis_c2_pallas_fused(
         w2, planes, partitions, seed, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
@@ -319,13 +348,14 @@ def metropolis_c1_tpu_step(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused C1 SMC step; same key split as ``metropolis_c1_tpu``.  Unlike
     the C1 apply form, the step prelude needs the WHOLE log-weight array
     resident (the ESS reduction), so the VMEM particle cap applies here.
     Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
     n, lw2, planes, state_shape = _pack_single(
-        log_weights, particles, "metropolis_c1_tpu_step"
+        log_weights, particles, "metropolis_c1_tpu_step", plane_dtype=plane_dtype
     )
     num_tiles = n // TILE
     kp, kloop = jax.random.split(key)
@@ -335,6 +365,7 @@ def metropolis_c1_tpu_step(
     k2, out, stats = metropolis_c1_pallas_step(
         lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])
 
@@ -347,12 +378,13 @@ def metropolis_c2_tpu_step(
     ess_threshold,
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused C2 SMC step; same key split as ``metropolis_c2_tpu``; the
     whole-log-weight residency cap applies as for the C1 step.
     Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
     n, lw2, planes, state_shape = _pack_single(
-        log_weights, particles, "metropolis_c2_tpu_step"
+        log_weights, particles, "metropolis_c2_tpu_step", plane_dtype=plane_dtype
     )
     num_tiles = n // TILE
     kp, kloop = jax.random.split(key)
@@ -364,5 +396,6 @@ def metropolis_c2_tpu_step(
     k2, out, stats = metropolis_c2_pallas_step(
         lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])

@@ -22,12 +22,14 @@ def metropolis_ref(
     n = weights.shape[0]
     i = jnp.arange(n, dtype=jnp.int32)
     seed = jnp.asarray(seed).reshape(-1)[0]
+    # Selection arithmetic is ALWAYS f32 (DESIGN.md §14); no-op at f32.
+    weights = weights.astype(jnp.float32)
 
     def body(b, state):
         k, wk = state
         j = (hash_bits(seed, i, b) % jnp.uint32(n)).astype(jnp.int32)
         w_j = weights[j]
-        u = hash_uniform(seed, i + n, b, dtype=weights.dtype)
+        u = hash_uniform(seed, i + n, b, dtype=jnp.float32)
         accept = u * wk <= w_j
         return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
 
@@ -39,6 +41,7 @@ def _partition_body(weights, i, seed, p_tile_of_b):
     """Shared C1/C2 oracle sweep: ``p_tile_of_b(b)`` names each particle's
     partition tile at iteration b (C1: constant in b; C2: fresh per b)."""
     n = weights.shape[0]
+    weights = weights.astype(jnp.float32)  # §14: selection stays f32
 
     def body(b, state):
         k, wk = state
@@ -46,7 +49,7 @@ def _partition_body(weights, i, seed, p_tile_of_b):
         j_local = (hash_bits(seed, i, b) % jnp.uint32(SEG)).astype(jnp.int32)
         j = p * SEG + j_local
         w_j = weights[j]
-        u = hash_uniform(seed, i + n, b, dtype=weights.dtype)
+        u = hash_uniform(seed, i + n, b, dtype=jnp.float32)
         accept = u * wk <= w_j
         return jnp.where(accept, j, k), jnp.where(accept, w_j, wk)
 

@@ -29,8 +29,10 @@ from repro.kernels.common import (
     TILE,
     check_state_resident,
     check_vmem_resident,
+    compress_plane,
     pack_state_planes,
     state_dim_of,
+    state_itemsize,
     unpack_state_planes,
 )
 from repro.kernels.prefix_sum.prefix_sum import LANES, prefix_sum_pallas
@@ -100,6 +102,7 @@ def prefix_resample_tpu(
     kind: str = "systematic",
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """Resample via the scan + search kernels; returns int32[N] ancestors."""
     if kind not in PREFIX_KINDS:
@@ -117,8 +120,11 @@ def prefix_resample_tpu(
         remedy="Use backend='reference'/'xla' for this family at larger N.",
     )
     if kind == "residual":
-        return _residual_tpu(key, weights, interpret=interpret)
-    c = prefix_sum_tpu(weights, interpret=interpret)
+        return _residual_tpu(key, weights, interpret=interpret,
+                             plane_dtype=plane_dtype)
+    # Only the scan INPUT travels compressed (DESIGN.md §14); the CDF the
+    # scan emits — and hence every bisection boundary — is always f32.
+    c = prefix_sum_tpu(compress_plane(weights, plane_dtype), interpret=interpret)
     u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
     return searchsorted_tpu(c, u, side=side, interpret=interpret)
 
@@ -130,6 +136,7 @@ def prefix_resample_tpu_apply(
     kind: str = "systematic",
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused resample+gather for the prefix-sum family (DESIGN.md §11): the
     final search kernel also copies each slot's ancestor state from the
@@ -151,17 +158,21 @@ def prefix_resample_tpu_apply(
     check_state_resident(
         n, state_dim_of(particles, n, "prefix_resample_tpu_apply"),
         "prefix_resample_tpu_apply",
+        itemsize=state_itemsize(particles, plane_dtype),
     )
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
     if kind == "residual":
-        k2, out = _residual_tpu_fused(key, weights, planes, interpret=interpret)
+        k2, out = _residual_tpu_fused(key, weights, planes, interpret=interpret,
+                                      plane_dtype=plane_dtype)
     else:
-        c = prefix_sum_tpu(weights, interpret=interpret)
+        c = prefix_sum_tpu(compress_plane(weights, plane_dtype), interpret=interpret)
         u, side = kind_draws(key, n, c[-1], weights.dtype, kind)
         k2, out = searchsorted_gather_pallas(
             c.reshape(n // LANES, LANES), u.reshape(n // LANES, LANES), planes,
             side=side, interpret=interpret,
         )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
@@ -173,6 +184,7 @@ def prefix_resample_tpu_step(
     kind: str = "systematic",
     *,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC step for the prefix-sum family (DESIGN.md §12): normalise →
     ESS → conditional scan+search+gather in ONE launch — the family's
@@ -197,6 +209,7 @@ def prefix_resample_tpu_step(
     check_state_resident(
         n, state_dim_of(particles, n, "prefix_resample_tpu_step"),
         "prefix_resample_tpu_step",
+        itemsize=state_itemsize(particles, plane_dtype),
     )
     dtype = log_weights.dtype
     # Key-only halves of kind_draws, with IDENTICAL key usage per kind.
@@ -208,20 +221,27 @@ def prefix_resample_tpu_step(
         ubase = jax.random.uniform(key, (n,), dtype)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
+    lw2 = compress_plane(log_weights.reshape(n // LANES, LANES), plane_dtype)
     k2, out, stats = prefix_pallas_step(
-        log_weights.reshape(n // LANES, LANES), planes,
+        lw2, planes,
         ubase.reshape(n // LANES, LANES), u0, thr,
         kind=kind, interpret=interpret,
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])
 
 
-def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *, interpret):
+def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *,
+                        interpret, plane_dtype="float32"):
     """The fused form of ``_residual_tpu``: same three block-scans, then ONE
-    kernel runs both searches, the slot select and the state gather."""
+    kernel runs both searches, the slot select and the state gather.  Only
+    the FIRST scan's input compresses; counts and residual CDFs are derived
+    f32 quantities (DESIGN.md §14)."""
     n = weights.shape[0]
-    total = prefix_sum_tpu(weights, interpret=interpret)[-1]
+    total = prefix_sum_tpu(compress_plane(weights, plane_dtype),
+                           interpret=interpret)[-1]
     w = weights / total
     counts = jnp.floor(n * w)
     n_det = jnp.sum(counts).astype(jnp.int32).reshape(1)
@@ -236,7 +256,8 @@ def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *, interpr
     )
 
 
-def _residual_tpu(key: jax.Array, weights: jnp.ndarray, *, interpret: bool) -> jnp.ndarray:
+def _residual_tpu(key: jax.Array, weights: jnp.ndarray, *, interpret: bool,
+                  plane_dtype="float32") -> jnp.ndarray:
     """Residual resampling on the kernel lane (mirrors the reference's
     "deterministic offsets into the cumsum" form, Alg. of §6.5 extras).
 
@@ -244,7 +265,8 @@ def _residual_tpu(key: jax.Array, weights: jnp.ndarray, *, interpret: bool) -> j
     residual CDF) run on the block-scan kernel; both searches run on the
     search kernel.  Counts are scanned as f32 — exact for N <= 2^24."""
     n = weights.shape[0]
-    total = prefix_sum_tpu(weights, interpret=interpret)[-1]
+    total = prefix_sum_tpu(compress_plane(weights, plane_dtype),
+                           interpret=interpret)[-1]
     w = weights / total
     counts = jnp.floor(n * w)  # f32 integer values
     n_det = jnp.sum(counts).astype(jnp.int32)

@@ -29,9 +29,12 @@ def _kernel(x_ref, y_ref, carry_ref):
 
     @pl.when(t == 0)
     def _init():
-        carry_ref[0] = jnp.zeros((), x_ref.dtype)
+        carry_ref[0] = jnp.zeros((), jnp.float32)
 
-    flat = x_ref[...].reshape(SEG)
+    # Operand tiles may arrive compressed (DESIGN.md §14); the scan itself —
+    # and the CDF it emits — is always f32, so bisection boundaries match the
+    # f32 kernels bitwise.
+    flat = x_ref[...].astype(jnp.float32).reshape(SEG)
     local = jnp.cumsum(flat)
     y_ref[...] = (local + carry_ref[0]).reshape(SUBLANES, LANES)
     carry_ref[0] = carry_ref[0] + local[-1]
@@ -48,12 +51,12 @@ def scan_tiles(x2d: jnp.ndarray) -> jnp.ndarray:
     num_tiles = rows // SUBLANES
 
     def body(carry, tile):
-        local = jnp.cumsum(tile.reshape(SEG))
+        local = jnp.cumsum(tile.astype(jnp.float32).reshape(SEG))
         y = local + carry
         return carry + local[-1], y.reshape(SUBLANES, LANES)
 
     _, ys = jax.lax.scan(
-        body, jnp.zeros((), x2d.dtype), x2d.reshape(num_tiles, SUBLANES, LANES)
+        body, jnp.zeros((), jnp.float32), x2d.reshape(num_tiles, SUBLANES, LANES)
     )
     return ys.reshape(x2d.shape)
 
@@ -68,7 +71,7 @@ def prefix_sum_pallas(x2d: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarra
         grid=(num_tiles,),
         in_specs=[pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, lanes), x2d.dtype),
-        scratch_shapes=[pltpu.SMEM((1,), x2d.dtype)],
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
         interpret=interpret,
     )(x2d)

@@ -10,11 +10,14 @@ from repro.kernels.common import (
     check_state_resident,
     check_tile_aligned,
     check_vmem_resident,
+    compress_plane,
     key_to_seed,
     pack_state_planes,
+    plane_itemsize,
     run_fused_bank,
     run_step_bank,
     state_dim_of,
+    state_itemsize,
     unpack_state_planes,
 )
 from repro.kernels.rejection.rejection import (
@@ -28,10 +31,10 @@ from repro.kernels.rejection.rejection import (
 )
 
 
-def _check(n: int, who: str):
+def _check(n: int, who: str, plane_dtype="float32"):
     # Same residency cap as the Metropolis strawman (random full-array gather).
     check_tile_aligned(n, who)
-    check_vmem_resident(n, who)
+    check_vmem_resident(n, who, itemsize=plane_itemsize(plane_dtype))
 
 
 def rejection_tpu(
@@ -40,11 +43,12 @@ def rejection_tpu(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     n = weights.shape[0]
-    _check(n, "rejection_tpu")
+    _check(n, "rejection_tpu", plane_dtype)
     seed = key_to_seed(key).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     k2 = rejection_pallas(w2, seed, max_iters=max_iters, interpret=interpret)
     return k2.reshape(n)
 
@@ -55,15 +59,16 @@ def rejection_tpu_batch(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ) -> jnp.ndarray:
     """One ``[B, R, 128]`` launch; row b == ``rejection_tpu(split(key,B)[b],
     weights[b])`` bit-exactly (the §4 split-key contract, held on-kernel)."""
     if weights.ndim != 2:
         raise ValueError(f"rejection_tpu_batch expects weights[B, N]; got {weights.shape}")
     bsz, n = weights.shape
-    _check(n, "rejection_tpu_batch")
+    _check(n, "rejection_tpu_batch", plane_dtype)
     seeds = key_to_seed(split_batch_keys(key, bsz))
-    w3 = weights.reshape(bsz, n // LANES, LANES)
+    w3 = compress_plane(weights.reshape(bsz, n // LANES, LANES), plane_dtype)
     k3 = rejection_pallas_batch(w3, seeds, max_iters=max_iters, interpret=interpret)
     return k3.reshape(bsz, n)
 
@@ -75,30 +80,35 @@ def rejection_tpu_apply(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused resample+gather (DESIGN.md §11): ancestors identical to
     ``rejection_tpu``.  Returns ``(particles', ancestors)``."""
     n = weights.shape[0]
-    _check(n, "rejection_tpu_apply")
+    _check(n, "rejection_tpu_apply", plane_dtype)
     check_state_resident(
-        n, state_dim_of(particles, n, "rejection_tpu_apply"), "rejection_tpu_apply"
+        n, state_dim_of(particles, n, "rejection_tpu_apply"), "rejection_tpu_apply",
+        itemsize=state_itemsize(particles, plane_dtype),
     )
     seed = key_to_seed(key).reshape(1)
-    w2 = weights.reshape(n // LANES, LANES)
+    w2 = compress_plane(weights.reshape(n // LANES, LANES), plane_dtype)
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
     k2, out = rejection_pallas_fused(
         w2, planes, seed, max_iters=max_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return unpack_state_planes(out, state_shape), k2.reshape(n)
 
 
-def _rejection_apply_bank(seeds, weights, particles, *, max_iters, interpret, who):
-    _check(weights.shape[1], who)
+def _rejection_apply_bank(seeds, weights, particles, *, max_iters, interpret,
+                          who, plane_dtype="float32"):
+    _check(weights.shape[1], who, plane_dtype)
     return run_fused_bank(
         lambda w3, planes: rejection_pallas_fused_batch(
             w3, planes, seeds, max_iters=max_iters, interpret=interpret
         ),
-        weights, particles, who,
+        weights, particles, who, plane_dtype=plane_dtype,
     )
 
 
@@ -109,6 +119,7 @@ def rejection_tpu_apply_batch(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused bank launch under the §4 split-key contract; row b ==
     ``rejection_tpu_apply(split(key, B)[b], ...)`` bit-exactly."""
@@ -119,7 +130,7 @@ def rejection_tpu_apply_batch(
     seeds = key_to_seed(split_batch_keys(key, weights.shape[0]))
     return _rejection_apply_bank(
         seeds, weights, particles, max_iters=max_iters, interpret=interpret,
-        who="rejection_tpu_apply_batch",
+        who="rejection_tpu_apply_batch", plane_dtype=plane_dtype,
     )
 
 
@@ -131,23 +142,27 @@ def rejection_tpu_step(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional
     rejection chain → state copy in ONE launch; the resample branch is
     bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
     Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
     n = log_weights.shape[0]
-    _check(n, "rejection_tpu_step")
+    _check(n, "rejection_tpu_step", plane_dtype)
     check_state_resident(
-        n, state_dim_of(particles, n, "rejection_tpu_step"), "rejection_tpu_step"
+        n, state_dim_of(particles, n, "rejection_tpu_step"), "rejection_tpu_step",
+        itemsize=state_itemsize(particles, plane_dtype),
     )
     seed = key_to_seed(key).reshape(1)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
-    lw2 = log_weights.reshape(n // LANES, LANES)
+    lw2 = compress_plane(log_weights.reshape(n // LANES, LANES), plane_dtype)
     planes, state_shape = pack_state_planes(particles)
+    planes = compress_plane(planes, plane_dtype)
     k2, out, stats = rejection_pallas_step(
         lw2, planes, seed, thr, max_iters=max_iters, interpret=interpret
     )
+    out = out.astype(particles.dtype)
     return (unpack_state_planes(out, state_shape), k2.reshape(n),
             stats[0], stats[1])
 
@@ -160,6 +175,7 @@ def rejection_tpu_step_rows(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
     ``rejection_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
@@ -168,7 +184,7 @@ def rejection_tpu_step_rows(
         raise ValueError(
             f"rejection_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"
         )
-    _check(log_weights.shape[1], "rejection_tpu_step_rows")
+    _check(log_weights.shape[1], "rejection_tpu_step_rows", plane_dtype)
     seeds = key_to_seed(keys)
     thr = jnp.asarray(ess_threshold, jnp.float32).reshape(1)
     return run_step_bank(
@@ -176,6 +192,7 @@ def rejection_tpu_step_rows(
             lw3, planes, seeds, thr, max_iters=max_iters, interpret=interpret
         ),
         log_weights, particles, "rejection_tpu_step_rows",
+        plane_dtype=plane_dtype,
     )
 
 
@@ -186,6 +203,7 @@ def rejection_tpu_apply_rows(
     *,
     max_iters: int = 1024,
     interpret: bool = True,
+    plane_dtype="float32",
 ):
     """Fused bank launch over EXPLICIT per-row keys; row b ==
     ``rejection_tpu_apply(keys[b], ...)`` bit-exactly, ONE launch."""
@@ -196,4 +214,5 @@ def rejection_tpu_apply_rows(
     return _rejection_apply_bank(
         key_to_seed(keys), weights, particles, max_iters=max_iters,
         interpret=interpret, who="rejection_tpu_apply_rows",
+        plane_dtype=plane_dtype,
     )

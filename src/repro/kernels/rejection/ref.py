@@ -20,9 +20,11 @@ def rejection_ref(
     n = weights.shape[0]
     i = jnp.arange(n, dtype=jnp.int32)
     seed = jnp.asarray(seed).reshape(-1)[0]
+    # Selection arithmetic is ALWAYS f32 (DESIGN.md §14); no-op at f32.
+    weights = weights.astype(jnp.float32)
     w_max = jnp.max(weights)
 
-    u0 = hash_uniform(seed, i + n, 0, dtype=weights.dtype)
+    u0 = hash_uniform(seed, i + n, 0, dtype=jnp.float32)
     done0 = u0 * w_max <= weights
     k0 = i
 
@@ -30,7 +32,7 @@ def rejection_ref(
         k, done = state
         j = (hash_bits(seed, i, t) % jnp.uint32(n)).astype(jnp.int32)
         w_j = weights[j]
-        u = hash_uniform(seed, i + n, t, dtype=weights.dtype)
+        u = hash_uniform(seed, i + n, t, dtype=jnp.float32)
         accept = (~done) & (u * w_max <= w_j)
         return jnp.where(accept, j, k), done | accept
 

@@ -80,7 +80,8 @@ def _make_kernel(max_iters: int):
     def _kernel(seed_ref, wmax_ref, w_full_ref, w_own_ref, k_ref):
         t = pl.program_id(0)
         k_ref[...] = _rejection_loop(
-            t, seed_ref[0], wmax_ref[0], w_full_ref[...], w_own_ref[...], max_iters
+            t, seed_ref[0], wmax_ref[0], w_full_ref[...].astype(jnp.float32),
+            w_own_ref[...].astype(jnp.float32), max_iters
         )
 
     return _kernel
@@ -91,7 +92,8 @@ def _make_kernel_batch(max_iters: int):
         s = pl.program_id(0)
         t = pl.program_id(1)
         k_ref[0] = _rejection_loop(
-            t, seeds_ref[s], wmax_ref[s], w_full_ref[0], w_own_ref[0], max_iters
+            t, seeds_ref[s], wmax_ref[s], w_full_ref[0].astype(jnp.float32),
+            w_own_ref[0].astype(jnp.float32), max_iters
         )
 
     return _kernel
@@ -102,7 +104,8 @@ def _make_kernel_fused(max_iters: int):
                 out_ref):
         t = pl.program_id(0)
         k = _rejection_loop(
-            t, seed_ref[0], wmax_ref[0], w_full_ref[...], w_own_ref[...], max_iters
+            t, seed_ref[0], wmax_ref[0], w_full_ref[...].astype(jnp.float32),
+            w_own_ref[...].astype(jnp.float32), max_iters
         )
         k_ref[...] = k
         out_ref[...] = gather_state(planes_ref[...], k)
@@ -116,7 +119,8 @@ def _make_kernel_fused_batch(max_iters: int):
         s = pl.program_id(0)
         t = pl.program_id(1)
         k = _rejection_loop(
-            t, seeds_ref[s], wmax_ref[s], w_full_ref[0], w_own_ref[0], max_iters
+            t, seeds_ref[s], wmax_ref[s], w_full_ref[0].astype(jnp.float32),
+            w_own_ref[0].astype(jnp.float32), max_iters
         )
         k_ref[0] = k
         out_ref[0] = gather_state(planes_ref[0], k)
@@ -138,19 +142,25 @@ def _make_kernel_step(max_iters: int):
         @pl.when(t == 0)
         def _prelude():
             m, ess_norm, incr = step_stats(
-                lw_full_ref[...].reshape(n_total), n_total
+                lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
-            st_ref[2] = jnp.max(jnp.exp(lw_full_ref[...] - m))
+            w_all = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
+            st_ref[2] = jnp.max(
+                w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
             stats_ref[0] = ess_norm
             stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
-        w_full = jnp.exp(lw_full_ref[...] - m)
-        w_own = jnp.exp(lw_own_ref[...] - m)
+        # Normalised weights re-land on the plane-dtype grid (the composed
+        # path quantises at the public ``apply`` boundary); a no-op at f32.
+        w_full = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
+        w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+        w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
+        w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
         k = _rejection_loop(t, seed_ref[0], st_ref[2], w_full, w_own, max_iters)
         k_sel = step_select(do, k, t)
         k_ref[...] = k_sel
@@ -172,19 +182,23 @@ def _make_kernel_step_rows(max_iters: int):
         @pl.when(t == 0)
         def _prelude():
             m, ess_norm, incr = step_stats(
-                lw_full_ref[0].reshape(n_total), n_total
+                lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
-            st_ref[2] = jnp.max(jnp.exp(lw_full_ref[0] - m))
+            w_all = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
+            st_ref[2] = jnp.max(
+                w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
             stats_ref[s, 0] = ess_norm
             stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
-        w_full = jnp.exp(lw_full_ref[0] - m)
-        w_own = jnp.exp(lw_own_ref[0] - m)
+        w_full = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
+        w_own = jnp.exp(lw_own_ref[0].astype(jnp.float32) - m)
+        w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
+        w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
         k = _rejection_loop(t, seeds_ref[s], st_ref[2], w_full, w_own, max_iters)
         k_sel = step_select(do, k, t)
         k_ref[0] = k_sel
@@ -311,7 +325,7 @@ def rejection_pallas_fused(
     d_pad = planes.shape[0]
     assert planes.shape[1:] == (rows, lanes)
     num_tiles = rows // SUBLANES
-    w_max = jnp.max(weights2d).reshape(1)
+    w_max = jnp.max(weights2d).astype(jnp.float32).reshape(1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -353,7 +367,7 @@ def rejection_pallas_fused_batch(
     d_pad = planes4d.shape[1]
     assert planes4d.shape == (bsz, d_pad, rows, lanes)
     num_tiles = rows // SUBLANES
-    w_max = jnp.max(weights3d, axis=(1, 2))
+    w_max = jnp.max(weights3d, axis=(1, 2)).astype(jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -396,7 +410,7 @@ def rejection_pallas(
     rows, lanes = weights2d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     num_tiles = rows // SUBLANES
-    w_max = jnp.max(weights2d).reshape(1)
+    w_max = jnp.max(weights2d).astype(jnp.float32).reshape(1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # seed + sup w (reduced once, host of the grid)
@@ -428,7 +442,7 @@ def rejection_pallas_batch(
     bsz, rows, lanes = weights3d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     num_tiles = rows // SUBLANES
-    w_max = jnp.max(weights3d, axis=(1, 2))  # per-row sup w, reduced once
+    w_max = jnp.max(weights3d, axis=(1, 2)).astype(jnp.float32)  # per-row sup w
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -25,7 +25,7 @@ from repro.models import ModelConfig
 
 def resample_step_bytes(num_particles: int, state_dim: int = 1, *,
                         fused: bool, batch: int = 1,
-                        state_bytes: int = 4) -> dict:
+                        state_bytes: int = 4, weight_bytes: int = 4) -> dict:
     """Analytic peak HBM liveness of ONE resampling step (DESIGN.md §11).
 
     The unfused path (index generation + XLA gather) holds, simultaneously
@@ -36,9 +36,13 @@ def resample_step_bytes(num_particles: int, state_dim: int = 1, *,
     never leaves VMEM) and writes the gathered state directly, so its peak
     is two state buffers + weights.  Used by tests/test_fused_apply.py to
     pin fused < unfused for every (N, state_dim).
+
+    ``state_bytes``/``weight_bytes`` price the compressed-plane axis
+    (DESIGN.md §14): bf16 tiles carry 2 bytes per word, halving the weight
+    plane and float state terms; the int32 ancestor vector stays 4-byte.
     """
     state = float(batch * num_particles * state_dim * state_bytes)
-    weights = float(batch * num_particles * 4)
+    weights = float(batch * num_particles * weight_bytes)
     out = {
         "state_in": state,
         "state_out": state,
@@ -52,7 +56,7 @@ def resample_step_bytes(num_particles: int, state_dim: int = 1, *,
 
 def smc_step_bytes(num_particles: int, state_dim: int = 1, *,
                    fused: bool, batch: int = 1,
-                   state_bytes: int = 4) -> dict:
+                   state_bytes: int = 4, weight_bytes: int = 4) -> dict:
     """Analytic peak HBM liveness of ONE full SMC step (DESIGN.md §12):
     reweight → ESS → conditional resample → state copy.
 
@@ -67,16 +71,20 @@ def smc_step_bytes(num_particles: int, state_dim: int = 1, *,
     bytes (4 N normalised weights + 4 N ancestors) than the composition.
     Used by tests/test_step_fused.py to pin fused < composed for every
     (N, state_dim).
+
+    ``state_bytes``/``weight_bytes`` price the compressed-plane axis
+    (DESIGN.md §14): log-weight and normalised-weight planes scale with the
+    plane word; the int32 ancestor vector stays 4-byte.
     """
     state = float(batch * num_particles * state_dim * state_bytes)
-    log_weights = float(batch * num_particles * 4)
+    log_weights = float(batch * num_particles * weight_bytes)
     out = {
         "state_in": state,
         "state_out": state,
         "log_weights": log_weights,
     }
     if not fused:
-        out["weights_normalised"] = float(batch * num_particles * 4)
+        out["weights_normalised"] = float(batch * num_particles * weight_bytes)
         out["ancestors_i32"] = float(batch * num_particles * 4)
     out["total"] = float(sum(out.values()))
     return out

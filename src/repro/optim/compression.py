@@ -54,11 +54,14 @@ def compress_and_correct(cfg: CompressionConfig, grads, residuals):
     def one(g, r):
         acc = g.astype(jnp.float32) + r
         if acc.size < cfg.min_size:
-            return acc.astype(wire_dtype), jnp.zeros_like(r)
+            sent = acc.astype(wire_dtype)
+            # The wire cast itself drops mass; error feedback must carry
+            # the cast error too or small dense tensors drift every step.
+            return sent, acc - sent.astype(jnp.float32)
         k = max(1, int(acc.size * cfg.ratio))
         mask = _topk_mask(acc, k)
-        sent = acc * mask
-        return sent.astype(wire_dtype), acc - sent
+        sent = (acc * mask).astype(wire_dtype)
+        return sent, acc - sent.astype(jnp.float32)
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = treedef.flatten_up_to(residuals)

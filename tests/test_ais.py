@@ -68,6 +68,27 @@ def test_logz_recovers_analytic_truth(family, backend):
         assert a.shape == (N, target.dim) and np.all(np.isfinite(a))
 
 
+@pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
+@pytest.mark.parametrize("family", FAMILIES)
+def test_logz_recovers_analytic_truth_bf16_planes(family, backend):
+    """DESIGN.md §14 quality gate: with the weight/state tiles compressed
+    to bf16 the sampler must still anneal to the analytic logZ within the
+    SAME rtol gate as the f32 lanes — selection stays f32 on-chip, only
+    the stored operands coarsen."""
+    temps = 12 if backend == "reference" else 8
+    cfg = SMCSamplerConfig(
+        num_particles=N, num_temps=temps,
+        resampler=spec_for_backend(family, backend, plane_dtype="bfloat16"),
+    )
+    target = isotropic_gaussian(dim=2)
+    out = jax.jit(lambda k: run_smc_sampler(k, target, cfg))(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(
+        float(out["log_z"]), target.log_z, rtol=0.1, atol=0.1,
+        err_msg=f"{family}/{backend}@bfloat16 missed logZ on {target.name}",
+    )
+    assert np.all(np.isfinite(np.asarray(out["particles"])))
+
+
 def test_logz_on_banana_and_correlated():
     """The non-Gaussian closed forms (volume-preserving shear, correlated
     precision) hold too — the analytic-logZ story is not Gaussian-only."""

@@ -272,8 +272,30 @@ def test_cli_check_writes_report(tmp_path, capsys):
     )
     assert rc == 0
     report = json.loads(out.read_text())
-    assert report["ok"] and report["matrix_cells"] == 2
+    # 2 entries × the default (float32, bfloat16) plane-dtype axis
+    assert report["ok"] and report["matrix_cells"] == 4
+    cells = {c["cell"] for c in report["matrix"]}
+    assert "megopolis/pallas_interpret/step" in cells
+    assert "megopolis/pallas_interpret/step@bfloat16" in cells
     assert "OK" in capsys.readouterr().out
+
+
+def test_cli_check_plane_dtypes_flag(tmp_path):
+    out = tmp_path / "report.json"
+    rc = analysis_main(
+        [
+            "--check",
+            "--families", "megopolis",
+            "--backends", "pallas_interpret",
+            "--entries", "call,step",
+            "--plane-dtypes", "float32",
+            "--no-consumers", "--no-large-n", "--no-transactions",
+            "--json", str(out),
+        ]
+    )
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["matrix_cells"] == 2
 
 
 def test_cli_check_nonzero_on_violation(monkeypatch):

@@ -55,10 +55,13 @@ FAMILIES = (
     "residual",
 )
 BACKENDS = ("reference", "xla", "pallas_interpret")
+#: The DESIGN.md §14 compression axis the parity tests sweep.
+PLANE_DTYPES_TESTED = ("float32", "bfloat16")
 
 
-def _build(name, backend):
-    return spec_for_backend(name, backend, num_iters=ITERS, max_iters=MAX_ITERS).build()
+def _build(name, backend, plane_dtype="float32"):
+    return spec_for_backend(name, backend, num_iters=ITERS, max_iters=MAX_ITERS,
+                            plane_dtype=plane_dtype).build()
 
 
 @pytest.fixture(scope="module")
@@ -86,34 +89,45 @@ def _assert_equal(a, b):
 
 
 # ------------------------------------------------- 1. composition parity
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_apply_single_matches_take(name, backend, w_single, p_single, base_key):
-    r = _build(name, backend)
+def test_apply_single_matches_take(name, backend, plane_dtype, w_single,
+                                   p_single, base_key):
+    r = _build(name, backend, plane_dtype)
     ancestors = r(base_key, w_single)
     got_p, got_a = r.apply(base_key, w_single, p_single)
     _assert_equal(got_a, ancestors)
-    _assert_equal(got_p, jnp.take(p_single, ancestors, axis=0))
+    # Compressed cells gather the QUANTISED plane (DESIGN.md §14); at f32
+    # ``quantise`` is the identity and this is the original oracle.
+    _assert_equal(got_p, jnp.take(r.quantise(p_single), ancestors, axis=0))
 
 
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_apply_batch_matches_take(name, backend, w_bank, p_bank, base_key):
-    r = _build(name, backend)
+def test_apply_batch_matches_take(name, backend, plane_dtype, w_bank, p_bank,
+                                  base_key):
+    r = _build(name, backend, plane_dtype)
     ancestors = r.batch(base_key, w_bank)
     got_p, got_a = r.apply_batch(base_key, w_bank, p_bank)
     _assert_equal(got_a, ancestors)
     _assert_equal(
-        got_p, jax.vmap(lambda p, a: jnp.take(p, a, axis=0))(p_bank, ancestors)
+        got_p,
+        jax.vmap(lambda p, a: jnp.take(p, a, axis=0))(
+            r.quantise(p_bank), ancestors
+        ),
     )
 
 
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_apply_rows_matches_rows(name, backend, w_bank, p_bank, base_key):
+def test_apply_rows_matches_rows(name, backend, plane_dtype, w_bank, p_bank,
+                                 base_key):
     """apply_rows row b == apply(keys[b], w[b], p[b]) — the filter-bank
     contract — and its ancestors == batch_rows."""
-    r = _build(name, backend)
+    r = _build(name, backend, plane_dtype)
     keys = split_batch_keys(base_key, BATCH)
     got_p, got_a = r.apply_rows(keys, w_bank, p_bank)
     _assert_equal(got_a, r.batch_rows(keys, w_bank))
@@ -209,6 +223,21 @@ def test_apply_rows_rejects_short_key_array(name, backend, w_bank, p_bank, base_
         r.apply_rows(keys, w_bank, p_bank)
 
 
+# ----------------------------------- 1b. cross-dtype ancestor bit-parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+def test_compressed_ancestors_bit_identical_to_f32(name, backend, w_single,
+                                                   base_key):
+    """The DESIGN.md §14 headline claim: compressing the planes never
+    perturbs the ancestor stream.  ``r_bf16(key, w)`` equals
+    ``r_f32(key, r_bf16.quantise(w))`` ancestor-for-ancestor, because
+    selection arithmetic, RNG and bisection all stay f32 on-chip — only
+    the stored operand values move to the bf16 grid."""
+    rb = _build(name, backend, "bfloat16")
+    rf = _build(name, backend, "float32")
+    _assert_equal(rb(base_key, w_single), rf(base_key, rb.quantise(w_single)))
+
+
 # ------------------------------------------------------- 4. residency cap
 def test_apply_state_residency_cap(base_key):
     d = MAX_VMEM_STATE // N // STATE_PLANE_TILE * STATE_PLANE_TILE + STATE_PLANE_TILE
@@ -217,6 +246,23 @@ def test_apply_state_residency_cap(base_key):
     r = _build("megopolis", "pallas_interpret")
     with pytest.raises(ValueError, match="VMEM"):
         r.apply(base_key, w, p)
+
+
+def test_f16_residency_edge_admits_wider_state(base_key):
+    """The eq.(3) residency edge re-derives from the plane itemsize
+    (DESIGN.md §14): at N=1024 a padded state of 2064 components overflows
+    the 4-byte f32 byte budget but fits in half-width f16 planes."""
+    n, d = 1024, 2056  # pad_state_dim(2056) == 2064
+    assert n * pad_state_dim(d) > MAX_VMEM_STATE          # f32: over budget
+    assert n * pad_state_dim(d) * 2 <= MAX_VMEM_STATE * 4  # f16: within bytes
+    w = jnp.ones((n,), jnp.float32)
+    p = jnp.zeros((n, d), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        _build("megopolis", "pallas_interpret").apply(base_key, w, p)
+    r16 = _build("megopolis", "pallas_interpret", "float16")
+    got_p, got_a = r16.apply(base_key, w, p)
+    assert got_p.shape == (n, d)
+    _assert_equal(got_p, jnp.take(r16.quantise(p), got_a, axis=0))
 
 
 # ----------------------------------------------------------- 5. consumers

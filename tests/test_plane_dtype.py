@@ -1,0 +1,245 @@
+"""Compressed particle planes (DESIGN.md §14): the plane-dtype axis.
+
+Contract under test:
+
+  1. **quantise/compress algebra** — ``quantise_plane`` is idempotent, an
+     elided no-op at f32 (the structural identical-program gates depend on
+     it), and passes int states through untouched; ``compress_plane`` is a
+     lossless narrowing of quantised operands.
+  2. **spec surface** — every spec validates ``plane_dtype`` at
+     construction; ``Resampler.quantise`` exposes the grid.
+  3. **cross-dtype step contract** — the bf16 fused step equals the
+     composed oracle on quantised inputs; int states keep their dtype.
+  4. **precision-bug sweep** (the satellites) — dtype-aware floors in
+     ``log_weights_from_linear``/ESS at bf16/f16; ``bias_variance`` K=1;
+     ragged-tail transaction counting; error-feedback residual carrying
+     the wire-cast error.
+  5. **byte model** — memmodel and the §2.4 transaction model both report
+     ≥ 1.8× fewer modelled bytes/transactions for the weight/CDF plane at
+     bf16 words, while analyzer launch budgets stay unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    bias_variance,
+    effective_sample_size,
+    log_weights_from_linear,
+)
+from repro.core.spec import MegopolisSpec, spec_for_backend
+from repro.core.transactions import (
+    declared_transaction_bound,
+    measured_transaction_stats,
+    transactions_per_group,
+)
+from repro.kernels.common import (
+    PLANE_DTYPES,
+    TILE,
+    compress_plane,
+    plane_itemsize,
+    quantise_plane,
+    state_itemsize,
+)
+
+N = 2 * TILE
+
+
+# ------------------------------------------------ 1. quantise/compress algebra
+def test_quantise_plane_identity_at_f32():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    np.testing.assert_array_equal(np.asarray(quantise_plane(x, "float32")),
+                                  np.asarray(x))
+    # The f32 path must be ELIDED from the jaxpr — a same-dtype convert
+    # would break the benches' structural identical-program gates.
+    jaxpr = str(jax.make_jaxpr(lambda a: quantise_plane(a, "float32"))(x))
+    assert "convert_element_type" not in jaxpr
+
+
+@pytest.mark.parametrize("dtype", ("bfloat16", "float16"))
+def test_quantise_plane_idempotent(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    q1 = quantise_plane(x, dtype)
+    assert q1.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(quantise_plane(q1, dtype)),
+                                  np.asarray(q1))
+    # compress is a LOSSLESS narrowing of the quantised plane
+    wire = compress_plane(q1, dtype)
+    assert wire.dtype == jnp.dtype(dtype)
+    np.testing.assert_array_equal(np.asarray(wire.astype(x.dtype)),
+                                  np.asarray(q1))
+
+
+def test_quantise_plane_int_passthrough():
+    xi = jnp.arange(32, dtype=jnp.int32)
+    assert quantise_plane(xi, "bfloat16") is xi
+    assert compress_plane(xi, "bfloat16").dtype == jnp.int32
+    assert state_itemsize(xi, "bfloat16") == 4
+    assert state_itemsize(jnp.zeros((4,), jnp.float32), "bfloat16") == 2
+
+
+def test_plane_itemsize_values():
+    assert [plane_itemsize(d) for d in PLANE_DTYPES] == [4, 2, 2]
+
+
+# ----------------------------------------------------------- 2. spec surface
+def test_spec_rejects_unknown_plane_dtype():
+    with pytest.raises(ValueError, match="plane_dtype"):
+        MegopolisSpec(plane_dtype="float64")
+    with pytest.raises(ValueError, match="plane_dtype"):
+        spec_for_backend("systematic", "reference", plane_dtype="int8")
+
+
+def test_resampler_quantise_matches_helper():
+    r = spec_for_backend("megopolis", "reference", plane_dtype="bfloat16").build()
+    x = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    np.testing.assert_array_equal(np.asarray(r.quantise(x)),
+                                  np.asarray(quantise_plane(x, "bfloat16")))
+
+
+# ------------------------------------------------- 3. cross-dtype step contract
+@pytest.mark.parametrize("name", ("megopolis", "systematic"))
+def test_step_noop_branch_passes_quantised_state(name, base_key):
+    """thr=0.0 never fires: the compressed step hands back the QUANTISED
+    particles (the value its resident planes hold), identity ancestors."""
+    r = spec_for_backend(name, "pallas_interpret",
+                        plane_dtype="bfloat16").build()
+    lw = jax.random.normal(jax.random.PRNGKey(3), (N,)) * 2.0
+    p = jax.random.normal(jax.random.PRNGKey(4), (N, 4))
+    p_out, anc, _, incr = r.step(base_key, lw, p, 0.0)
+    np.testing.assert_array_equal(np.asarray(anc), np.arange(N))
+    np.testing.assert_array_equal(np.asarray(p_out), np.asarray(r.quantise(p)))
+    assert float(incr) == 0.0
+
+
+def test_apply_int_state_keeps_dtype_at_bf16(base_key):
+    r = spec_for_backend("megopolis", "pallas_interpret",
+                        plane_dtype="bfloat16").build()
+    w = jax.random.uniform(jax.random.PRNGKey(5), (N,)) + 1e-3
+    pi = jax.random.randint(jax.random.PRNGKey(6), (N, 3), 0, 1 << 20)
+    got_p, got_a = r.apply(base_key, w, pi)
+    assert got_p.dtype == pi.dtype
+    np.testing.assert_array_equal(np.asarray(got_p),
+                                  np.asarray(jnp.take(pi, got_a, axis=0)))
+
+
+# ------------------------------------------------- 4. precision-bug sweep
+@pytest.mark.parametrize("dtype", ("bfloat16", "float16"))
+def test_log_weights_floor_is_dtype_aware(dtype):
+    """The 1e-30 floor is BELOW f16's min normal (~6.1e-5): flushed to zero
+    it would reintroduce the -inf it guards against.  The floor must sit in
+    each dtype's normal range."""
+    w = jnp.array([0.0, 1.0], dtype)
+    lw = log_weights_from_linear(w)
+    assert bool(jnp.all(jnp.isfinite(lw)))
+    # and the floored value itself must survive a round-trip in-dtype
+    floor = jnp.exp(lw[0].astype(jnp.float32))
+    assert float(floor.astype(dtype)) > 0.0
+
+
+@pytest.mark.parametrize("dtype", ("bfloat16", "float16"))
+def test_ess_guard_is_dtype_aware(dtype):
+    """ESS's Σw² guard must not flush to zero in half dtypes: all-zero
+    weights still yield a finite ESS."""
+    lw = jnp.full((64,), -jnp.inf).astype(dtype)
+    ess = effective_sample_size(lw)
+    assert bool(jnp.isfinite(ess))
+
+
+def test_bias_variance_single_run_is_finite():
+    """K=1: eq. (17)'s k-1 denominator is 0 — the defined limit is var=0
+    (deviations identically zero), mse degrading to bias², never nan."""
+    w = jnp.array([0.5, 0.3, 0.2], jnp.float32)
+    off = jnp.array([[2, 1, 0]], jnp.int32)
+    var, bias_sq, mse = bias_variance(off, w)
+    assert float(var) == 0.0
+    assert np.isfinite(float(bias_sq)) and np.isfinite(float(mse))
+    assert float(mse) == pytest.approx(float(bias_sq))
+
+
+def test_transactions_count_ragged_tail():
+    """A tail group narrower than the warp still issues transactions; it is
+    padded with the last lane's index, never dropped and never widened."""
+    idx = np.arange(48)  # 1.5 warps of perfectly coalesced reads
+    per = transactions_per_group(idx, group=32, word_bytes=4, segment_bytes=32)
+    assert per.shape == (2,)
+    assert list(per) == [4, 2]  # lanes 32..47 span exactly 2 segments
+    # same stream, no tail: unchanged
+    assert list(transactions_per_group(idx[:32], group=32)) == [4]
+
+
+def test_compression_residual_carries_cast_error():
+    """Error feedback must track what was SENT, not what was masked: the
+    wire cast of a small dense tensor drops mass that has to re-enter the
+    residual or the optimiser drifts a bf16-ulp every step."""
+    from repro.optim.compression import CompressionConfig, compress_and_correct
+
+    cfg = CompressionConfig(min_size=4096, wire_dtype="bfloat16")
+    g = {"w": jnp.full((8,), 1.0 / 3.0, jnp.float32)}  # not on the bf16 grid
+    r0 = {"w": jnp.zeros((8,), jnp.float32)}
+    wire, resid = compress_and_correct(cfg, g, r0)
+    assert wire["w"].dtype == jnp.bfloat16
+    exact = g["w"] - wire["w"].astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(resid["w"]), np.asarray(exact))
+    assert float(jnp.max(jnp.abs(resid["w"]))) > 0.0
+    # the top-k branch carries the same cast error
+    big = {"w": jnp.full((8192,), 1.0 / 3.0, jnp.float32)}
+    rb = {"w": jnp.zeros((8192,), jnp.float32)}
+    wire_b, resid_b = compress_and_correct(
+        CompressionConfig(ratio=0.5, min_size=16), big, rb
+    )
+    exact_b = big["w"] - wire_b["w"].astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(resid_b["w"]), np.asarray(exact_b))
+
+
+# ------------------------------------------------------------- 5. byte model
+def test_memmodel_weight_plane_halves_at_bf16():
+    """The acceptance gate: ≥ 1.8× fewer modelled bytes per step for the
+    weight plane at 2-byte words (exactly 2× here — ancestors stay i32)."""
+    from repro.launch.memmodel import resample_step_bytes, smc_step_bytes
+
+    for n in (1 << 10, 1 << 16):
+        a32 = resample_step_bytes(n, 4, fused=True, weight_bytes=4)
+        a16 = resample_step_bytes(n, 4, fused=True, weight_bytes=2)
+        assert a32["weights"] / a16["weights"] >= 1.8
+        s32 = smc_step_bytes(n, 4, fused=False, weight_bytes=4)
+        s16 = smc_step_bytes(n, 4, fused=False, weight_bytes=2)
+        assert s32["log_weights"] / s16["log_weights"] >= 1.8
+        assert s32["weights_normalised"] / s16["weights_normalised"] >= 1.8
+        assert s16["ancestors_i32"] == s32["ancestors_i32"]  # never compresses
+
+
+def test_transaction_model_halves_at_bf16_words():
+    """§2.4 at word_bytes=2: Megopolis' exact-4 becomes exact-2 (the warp's
+    128 bytes span half the 32-byte segments), every declared bound word-
+    scales, and measured stays within declared."""
+    s32 = measured_transaction_stats("megopolis", word_bytes=4)
+    s16 = measured_transaction_stats("megopolis", word_bytes=2)
+    assert s32["max"] == s32["exact"] == 4
+    assert s16["max"] == s16["exact"] == 2
+    assert s32["max"] / s16["max"] >= 1.8
+    assert declared_transaction_bound("megopolis", word_bytes=2) == 2
+    for name in ("metropolis", "metropolis_c1", "metropolis_c2"):
+        st = measured_transaction_stats(name, word_bytes=2)
+        assert st["max"] <= st["bound"]
+
+
+def test_analyzer_budgets_unchanged_across_dtype_axis():
+    """Compression narrows words; it must never change a cell's launch
+    budget, add a host cond or an HBM ancestor round-trip."""
+    from repro.analysis.contracts import audit_matrix
+
+    reps = list(audit_matrix(
+        families=("megopolis",), backends=("pallas_interpret",),
+        entries=("apply", "step"), plane_dtypes=("float32", "bfloat16"),
+    ))
+    assert len(reps) == 4
+    by_cell = {r.cell: r for r in reps}
+    for entry in ("apply", "step"):
+        f32 = by_cell[f"megopolis/pallas_interpret/{entry}"]
+        bf16 = by_cell[f"megopolis/pallas_interpret/{entry}@bfloat16"]
+        assert f32.ok and bf16.ok, (f32.violations, bf16.violations)
+        assert bf16.launches == f32.launches
+        assert bf16.max_launches == f32.max_launches

@@ -222,3 +222,41 @@ def test_kernel_backend_statistical_parity(family, kweights):
     else:
         b_kern = float(bias_contribution(o_kern, kweights))
         assert b_kern < 0.25, (family, b_kern)
+
+
+# ------------------------------------------ compressed-plane quality gate
+# DESIGN.md §14: packing weight/state tiles as bf16 moves the OPERANDS onto
+# a coarser grid but leaves selection arithmetic f32 on-chip, so each
+# kernel lane's statistics must sit in the same band as its f32 lane.
+
+@pytest.mark.parametrize(
+    "family",
+    [
+        "megopolis",
+        "metropolis",
+        "metropolis_c1",
+        "metropolis_c2",
+        "rejection",
+        "multinomial",
+        "systematic",
+        "improved_systematic",
+        "stratified",
+        "residual",
+    ],
+)
+def test_bf16_plane_statistical_parity(family, kweights):
+    import dataclasses
+
+    kernel_spec, _ = _kernel_vs_reference_specs(kweights)[family]
+    bf16_spec = dataclasses.replace(kernel_spec, plane_dtype="bfloat16")
+    key = jax.random.PRNGKey(15)
+    o_bf16 = _spec_offsprings(bf16_spec, key, kweights)
+    o_f32 = _spec_offsprings(kernel_spec, key, kweights)
+    m_bf16 = float(mse(o_bf16, kweights)) / KN
+    m_f32 = float(mse(o_f32, kweights)) / KN
+    assert abs(m_bf16 - m_f32) < 0.4 * m_f32, (family, m_bf16, m_f32)
+    b_bf16 = float(bias_contribution(o_bf16, kweights))
+    limit = 0.1 if family in ("rejection", "multinomial", "systematic",
+                              "improved_systematic", "stratified",
+                              "residual") else 0.25
+    assert b_bf16 < limit, (family, b_bf16)

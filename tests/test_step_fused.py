@@ -58,11 +58,13 @@ FAMILIES = (
     "residual",
 )
 BACKENDS = ("reference", "xla", "pallas_interpret")
+#: The DESIGN.md §14 compression axis the parity tests sweep.
+PLANE_DTYPES_TESTED = ("float32", "bfloat16")
 
 
-def _build(name, backend, num_iters=ITERS):
+def _build(name, backend, num_iters=ITERS, plane_dtype="float32"):
     return spec_for_backend(name, backend, num_iters=num_iters,
-                            max_iters=MAX_ITERS).build()
+                            max_iters=MAX_ITERS, plane_dtype=plane_dtype).build()
 
 
 @pytest.fixture(scope="module")
@@ -99,7 +101,11 @@ def _assert_equal(a, b):
 def _composed_step(r, key, log_w, particles, thr):
     """The oracle: normalise → ESS → branch → apply, from shared metrics
     helpers and the SAME backend's fused apply — what ``step`` must equal
-    bit for bit."""
+    bit for bit.  Inputs land on the plane-dtype grid first (DESIGN.md
+    §14, identity at f32); ``r.apply`` re-lands the normalised weights on
+    the same grid, matching the fused step's in-kernel requantise."""
+    log_w = r.quantise(log_w)
+    particles = r.quantise(particles)
     n = log_w.shape[-1]
     ess_n = effective_sample_size(log_w) / jnp.float32(n)
     do = ess_n < thr
@@ -112,24 +118,27 @@ def _composed_step(r, key, log_w, particles, thr):
 
 
 # ------------------------------------------------- 1. composition parity
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("thr", (0.0, 0.7, 2.0))
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_step_single_matches_composition(name, backend, thr, lw_spread,
-                                         p_single, base_key):
-    r = _build(name, backend)
+def test_step_single_matches_composition(name, backend, thr, plane_dtype,
+                                         lw_spread, p_single, base_key):
+    r = _build(name, backend, plane_dtype=plane_dtype)
     exp = _composed_step(r, base_key, lw_spread, p_single, thr)
     got = r.step(base_key, lw_spread, p_single, thr)
     for g, e in zip(got, exp):
         _assert_equal(g, e)
 
 
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_step_rows_matches_single(name, backend, lw_bank, p_bank, base_key):
+def test_step_rows_matches_single(name, backend, plane_dtype, lw_bank, p_bank,
+                                  base_key):
     """step_rows row b == step(keys[b], ...) — the filter-bank contract;
     each row takes its OWN branch."""
-    r = _build(name, backend)
+    r = _build(name, backend, plane_dtype=plane_dtype)
     keys = split_batch_keys(base_key, BATCH)
     got = r.step_rows(keys, lw_bank, p_bank, 0.7)
     for b in range(BATCH):
@@ -293,13 +302,15 @@ except ImportError:
 
 
 # ------------------------------------------------------ 5. single launch
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
 @pytest.mark.parametrize("name", FAMILIES)
-def test_step_is_single_launch(name, lw_spread, p_single, base_key):
+def test_step_is_single_launch(name, plane_dtype, lw_spread, p_single, base_key):
     """THE tentpole gate: on the pallas backend the whole reweight → ESS →
     conditional resample → state copy step traces to exactly ONE
     pallas_call — including the prefix-sum family, whose composed apply
-    alone is 2 launches (4 for residual) plus host glue."""
-    r = _build(name, "pallas_interpret")
+    alone is 2 launches (4 for residual) plus host glue.  Compression
+    narrows the tiles, never adds a launch (DESIGN.md §14)."""
+    r = _build(name, "pallas_interpret", plane_dtype=plane_dtype)
     jaxpr = jax.make_jaxpr(lambda k, lw, p: r.step(k, lw, p, 0.5))(
         base_key, lw_spread, p_single
     )
