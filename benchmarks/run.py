@@ -5,9 +5,15 @@
 CI scale by default (~minutes on CPU); ``--full`` restores paper sizes.
 ``--json PATH`` writes the per-suite wall-times (plus the ais suite's logZ
 quality stats) to a machine-readable trajectory file — accrete one
-``BENCH_<date>.json`` per run into the perf history (EXPERIMENTS.md §Perf).
-The dry-run / roofline pipeline is separate (launch/dryrun.py) because it
-re-initialises jax with 512 virtual devices.
+``BENCH_<date>.json`` per run into the perf history (EXPERIMENTS.md §Perf;
+a second run the same day gets ``-2``, ``-3``, … rather than clobbering
+the first).  Every snapshot is stamped with provenance (git SHA, jax/
+jaxlib versions, device kind/platform) so ``benchmarks/trajectory.py``
+can attribute a delta to a code or toolchain change, and the run streams
+``suite_start``/``suite_end``/``run_end`` events to the JSONL flight
+recorder at ``out/events.jsonl`` (DESIGN.md §15).  The dry-run / roofline
+pipeline is separate (launch/dryrun.py) because it re-initialises jax
+with 512 virtual devices.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ import argparse
 import difflib
 import json
 import os
+import subprocess
 import sys
 import time
 from datetime import date
@@ -139,6 +146,44 @@ def _analysis_stats():
     }
 
 
+def _unique_snapshot_path(directory: str) -> str:
+    """``BENCH_<date>.json`` inside ``directory``, suffixed ``-2``, ``-3``,
+    … when today's snapshot already exists — a same-day re-run must accrete
+    a new trajectory point, not overwrite the morning's."""
+    stem = f"BENCH_{date.today().isoformat()}"
+    path = os.path.join(directory, f"{stem}.json")
+    k = 2
+    while os.path.exists(path):
+        path = os.path.join(directory, f"{stem}-{k}.json")
+        k += 1
+    return path
+
+
+def provenance() -> dict:
+    """Who/what produced this snapshot: git SHA (``unknown`` outside a
+    checkout), jax/jaxlib versions, and the device the suites ran on —
+    enough for trajectory.py to attribute a delta."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    import jax
+    import jaxlib
+
+    dev = jax.devices()[0]
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
+        "device_kind": dev.device_kind,
+        "platform": dev.platform,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -151,12 +196,20 @@ def main(argv=None):
     _check_suite_names(args.skip, "--skip")
     _check_suite_names(args.only, "--only")
 
+    from benchmarks.common import ensure_out
+    from repro.obs.sink import JsonlSink
+
+    sink = JsonlSink(os.path.join(ensure_out(), "events.jsonl"))
+    prov = provenance()
+    sink.emit("run_start", full=args.full, **prov)
+
     failures = []
     suite_times = {}
     for name, module, extra in SUITES:
         if name in args.skip or (args.only and name not in args.only):
             continue
         print(f"\n======== {name} ({module}) ========")
+        sink.emit("suite_start", suite=name)
         t0 = time.time()
         argv_m = list(extra) + (["--full"] if args.full and name not in _NO_FULL else [])
         try:
@@ -173,14 +226,19 @@ def main(argv=None):
             import traceback
             traceback.print_exc()
             failures.append(name)
+        sink.emit(
+            "suite_end", suite=name, ok=name not in failures,
+            wall_s=round(suite_times.get(name, time.time() - t0), 3),
+        )
 
     if args.json:
         path = args.json
         if os.path.isdir(path):
-            path = os.path.join(path, f"BENCH_{date.today().isoformat()}.json")
+            path = _unique_snapshot_path(path)
         payload = {
             "date": date.today().isoformat(),
             "full": args.full,
+            "provenance": prov,
             "suite_wall_s": {k: round(v, 3) for k, v in suite_times.items()},
             "failures": failures,
         }
@@ -199,7 +257,9 @@ def main(argv=None):
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"\nwrote trajectory {path}")
+        sink.emit("snapshot_written", path=path)
 
+    sink.emit("run_end", ok=not failures, failures=failures)
     if failures:
         print(f"\nFAILED suites: {failures}")
         sys.exit(1)

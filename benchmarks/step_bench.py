@@ -40,8 +40,11 @@ from benchmarks.common import OUT_DIR, ensure_out, print_table, write_csv
 from repro.core.metrics import (
     effective_sample_size,
     log_mean_weight,
+    max_normalised_weight,
     normalise_log_weights,
+    unique_ancestor_count,
 )
+from repro.obs.stats import stats_from_vector
 from repro.analysis import count_pallas_calls as _count_pallas_calls
 from repro.core.spec import spec_for_backend
 from repro.kernels.common import plane_itemsize
@@ -72,7 +75,9 @@ def _composed(r, key, log_w, particles, thr):
     # Quantise at the boundary first — the value the fused step's in-kernel
     # requantise matches (DESIGN.md §14); ``r.apply`` re-lands the
     # normalised weights on the same grid.  Identity at f32, so the f32
-    # structural no-slower gate still sees the identical jaxpr.
+    # structural no-slower gate still sees the identical jaxpr.  Mirrors
+    # the public ``Resampler.step`` wrapper op-for-op, INCLUDING the §15
+    # StepStats composition (stats4 stack + sort-based survivor count).
     log_w = r.quantise(log_w)
     particles = r.quantise(particles)
     n = log_w.shape[-1]
@@ -83,7 +88,15 @@ def _composed(r, key, log_w, particles, thr):
     ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
     p_out = jnp.where(do, p_res, particles)
     incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
-    return p_out, ancestors, ess_n, incr
+    stats4 = jnp.stack([
+        ess_n,
+        incr,
+        jnp.where(do, jnp.float32(1.0), jnp.float32(0.0)),
+        max_normalised_weight(log_w),
+    ])
+    return p_out, ancestors, stats_from_vector(
+        stats4, unique_ancestor_count(ancestors)
+    )
 
 
 def _time_pair(fused, unfused, *args, repeats: int):
@@ -134,10 +147,12 @@ def _cell(name, backend, *, n, state_dim, num_iters, max_iters, repeats,
     fused = jax.jit(fused_chain)
     composed = jax.jit(composed_chain)
 
-    # Parity first — the CI gate (bit-exact, all four outputs).
+    # Parity first — the CI gate (bit-exact: particles, ancestors, and
+    # every StepStats leaf).
     got = r.step(key, lw, p, THRESHOLD)
     want = _composed(r, key, lw, p, THRESHOLD)
-    for g, e in zip(got, want):
+    for g, e in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
 
     # Structural no-slower on the composition backends: identical jaxpr ⇒

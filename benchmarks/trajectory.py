@@ -1,0 +1,203 @@
+"""Bench-trajectory regression gate (DESIGN.md §15, EXPERIMENTS.md §Trajectory).
+
+    python benchmarks/trajectory.py OLD.json NEW.json [--threshold 0.25]
+                                    [--advisory-wall] [--suite NAME]
+
+Diffs two ``BENCH_<date>.json`` trajectory snapshots (the files
+``benchmarks.run --json DIR`` accretes) and prints a per-suite delta
+report.  Two kinds of change are graded differently:
+
+  * **hard fields** — ``parity`` / ``identical_program`` / ``perf_gated``
+    flipping to False, any ``analysis`` cell going not-ok, or a launch
+    count INCREASING — always fail the gate (exit 1): these are counted
+    contracts, not measurements, so there is no noise to tolerate;
+  * **wall-times** — per-suite wall seconds and per-cell ms regress the
+    gate only beyond ``--threshold`` (fractional; 0.25 = +25%), and
+    ``--advisory-wall`` demotes even those to warnings — CPU CI boxes are
+    noisy, and a wall-time on the wrong hardware should inform, not block.
+
+Suites or cells present in only one snapshot are listed, never failed:
+trajectories legitimately grow suites over time and smoke runs cover a
+subset.  ``NEW`` may also be a raw per-suite payload (a
+``benchmarks/out/BENCH_<suite>.json`` with ``rows``, e.g. from
+``step_bench --smoke``) — pass ``--suite`` or let the filename pick the
+section; this is how the perf-smoke lane compares a fresh smoke run
+against the latest checked-in snapshot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: section -> (cell-list key path, identity fields, hard bool fields,
+#:             launch-count fields, wall-time fields)
+SECTIONS = {
+    "step": ("cells", ("family", "backend", "plane_dtype"),
+             ("parity", "identical_program", "perf_gated"),
+             ("launches_step", "launches_composed"),
+             ("step_ms", "composed_ms")),
+    "fused_gather": ("cells", ("family", "backend", "state_dim", "plane_dtype"),
+                     ("parity", "identical_program", "perf_gated"),
+                     (), ("fused_ms", "unfused_ms")),
+    "ais": ("logz", ("resampler", "backend", "target"), (), (),
+            ("wall_per_run_s",)),
+    "analysis": ("cells", ("family", "backend", "entry"), ("ok",),
+                 ("launches",), ()),
+}
+
+
+def _load(path: str, suite: str | None):
+    """Read a snapshot; wrap a raw per-suite payload (``rows``) into
+    trajectory shape so both sides diff identically."""
+    with open(path) as f:
+        payload = json.load(f)
+    if "rows" in payload and "suite_wall_s" not in payload:
+        if suite is None:
+            stem = os.path.basename(path)
+            for name in SECTIONS:
+                if stem == f"BENCH_{name}.json":
+                    suite = name
+                    break
+        if suite is None:
+            raise SystemExit(
+                f"trajectory: {path} is a raw suite payload; pass --suite "
+                f"to name its section (choices: {sorted(SECTIONS)})"
+            )
+        key = SECTIONS[suite][0]
+        payload = {"suite_wall_s": {}, suite: {key: payload["rows"]}}
+    return payload
+
+
+def _cells(payload: dict, section: str):
+    spec = SECTIONS[section]
+    sec = payload.get(section)
+    if not isinstance(sec, dict):
+        return {}
+    out = {}
+    for row in sec.get(spec[0]) or []:
+        ident = tuple(row.get(f, "float32" if f == "plane_dtype" else None)
+                      for f in spec[1])
+        out[ident] = row
+    return out
+
+
+def _fmt_cell(section: str, ident) -> str:
+    return f"{section}/" + "/".join(str(v) for v in ident)
+
+
+def diff(old: dict, new: dict, threshold: float):
+    """Returns (report lines, hard regressions, wall regressions)."""
+    lines, hard, wall = [], [], []
+
+    def wall_delta(what, o, n):
+        if o is None or n is None or o <= 0:
+            return
+        pct = (n - o) / o * 100.0
+        mark = ""
+        if n > o * (1.0 + threshold):
+            mark = "  << regression"
+            wall.append(f"{what}: {o:.3g} -> {n:.3g} (+{pct:.1f}%)")
+        lines.append(f"  {what}: {o:.3g} -> {n:.3g} ({pct:+.1f}%){mark}")
+
+    ow, nw = old.get("suite_wall_s", {}), new.get("suite_wall_s", {})
+    shared = [s for s in ow if s in nw]
+    if shared:
+        lines.append("suite wall-times (s):")
+        for s in shared:
+            wall_delta(s, ow[s], nw[s])
+    for label, only in (("old", sorted(set(ow) - set(nw))),
+                        ("new", sorted(set(nw) - set(ow)))):
+        if only:
+            lines.append(f"  suites only in {label}: {', '.join(only)}")
+
+    for section, spec in SECTIONS.items():
+        oc, nc = _cells(old, section), _cells(new, section)
+        both = [k for k in oc if k in nc]
+        if not (oc or nc):
+            continue
+        lines.append(f"{section}: {len(both)} shared cell(s), "
+                     f"{len(oc) - len(both)} only-old, "
+                     f"{len(nc) - len(both)} only-new")
+        for ident in both:
+            o, n = oc[ident], nc[ident]
+            name = _fmt_cell(section, ident)
+            for f in spec[2]:  # hard booleans: True -> not-True fails
+                if o.get(f) is True and n.get(f) is not True:
+                    msg = f"{name}: {f} regressed {o.get(f)} -> {n.get(f)}"
+                    hard.append(msg)
+                    lines.append(f"  {msg}  << HARD")
+            for f in spec[3]:  # launch counts: any increase fails
+                if (isinstance(o.get(f), int) and isinstance(n.get(f), int)
+                        and n[f] > o[f]):
+                    msg = f"{name}: {f} grew {o[f]} -> {n[f]}"
+                    hard.append(msg)
+                    lines.append(f"  {msg}  << HARD")
+            for f in spec[4]:  # wall-times: thresholded
+                wall_delta(f"{name}.{f}", o.get(f), n.get(f))
+
+    o_ok = (old.get("analysis") or {}).get("ok")
+    n_ok = (new.get("analysis") or {}).get("ok")
+    if o_ok is True and n_ok is False:
+        msg = "analysis.ok regressed True -> False"
+        hard.append(msg)
+        lines.append(f"  {msg}  << HARD")
+
+    for side, payload in (("old", old), ("new", new)):
+        prov = payload.get("provenance")
+        if prov:
+            lines.append(
+                f"{side}: {payload.get('date', '?')} git {prov.get('git_sha')}"
+                f" jax {prov.get('jax_version')} on {prov.get('device_kind')}"
+                f" ({prov.get('platform')})"
+            )
+    return lines, hard, wall
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/trajectory.py",
+        description="Diff two BENCH_<date>.json snapshots; non-zero exit "
+                    "on regression.",
+    )
+    ap.add_argument("old", help="baseline snapshot (e.g. BENCH_2026-07-31.json)")
+    ap.add_argument("new", help="candidate snapshot, or a raw BENCH_<suite>.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional wall-time slack before a regression "
+                         "(default 0.25 = +25%%)")
+    ap.add_argument("--advisory-wall", action="store_true",
+                    help="report wall-time regressions without failing "
+                         "(for noisy CPU CI boxes)")
+    ap.add_argument("--suite", default=None, choices=sorted(SECTIONS),
+                    help="section name when NEW is a raw per-suite payload")
+    args = ap.parse_args(argv)
+
+    old = _load(args.old, args.suite)
+    new = _load(args.new, args.suite)
+    lines, hard, wall = diff(old, new, args.threshold)
+    print(f"trajectory: {args.old} -> {args.new}")
+    for ln in lines:
+        print(ln)
+
+    rc = 0
+    if wall:
+        verdict = "advisory" if args.advisory_wall else "FAIL"
+        print(f"\nwall-time regressions beyond +{args.threshold:.0%} "
+              f"({verdict}):")
+        for w in wall:
+            print(f"  {w}")
+        if not args.advisory_wall:
+            rc = 1
+    if hard:
+        print("\nHARD regressions (counted contracts, no noise tolerance):")
+        for h in hard:
+            print(f"  {h}")
+        rc = 1
+    print("\n" + ("REGRESSED" if rc else "OK"))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

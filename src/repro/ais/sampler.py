@@ -33,6 +33,7 @@ from repro.ais.targets import Target
 from repro.core.metrics import log_mean_weight
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import ResamplerSpec, coerce_spec
+from repro.obs.telemetry import Telemetry
 
 SCHEDULES = ("geometric", "adaptive")
 
@@ -128,7 +129,9 @@ def _logz_increment(log_w: jnp.ndarray, n: int) -> jnp.ndarray:
     return log_mean_weight(log_w, axis=-1)
 
 
-def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
+def run_smc_sampler(
+    key, target: Target, cfg: SMCSamplerConfig, theta=None, telemetry=False
+):
     """Anneal π0 → γ; returns a dict pytree:
 
     * ``particles`` f32[N, d] — final-temperature particle system;
@@ -137,6 +140,13 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
     * ``betas`` / ``ess`` / ``accept`` f32[T] — per-temperature schedule,
       normalised pre-resampling ESS, and move acceptance;
     * ``num_resamples`` i32[].
+
+    ``telemetry=True`` (DESIGN.md §15) returns ``(result, Telemetry)``
+    instead: ``Telemetry.steps`` carries the full per-temperature
+    ``StepStats`` trajectory (fields ``[T]``), ``accept`` the move
+    acceptance rates and ``betas`` the β ladder actually visited — all
+    values this scan computes anyway, so the flag adds zero launches and
+    leaves the result dict bit-identical (analyzer pass 6 audits this).
 
     Fully jittable (wrap in ``jax.jit``; the config and target are closed
     over as static).  ``theta`` selects a scenario of a theta-family
@@ -173,9 +183,10 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
         #    resampler any more.  The no-op branch returns x bit-identical
         #    with incr = 0, so log_z/log_w advance exactly as the old
         #    host-branched composition did.
-        x, _, ess_norm, incr = resampler.step(k_res, log_w, x, cfg.ess_threshold)
+        x, _, stats = resampler.step(k_res, log_w, x, cfg.ess_threshold)
+        ess_norm = stats.ess_norm
         did = (ess_norm < cfg.ess_threshold).astype(jnp.int32)
-        log_z = log_z + incr
+        log_z = log_z + stats.log_evidence_incr
         log_w = jnp.where(did.astype(bool), jnp.zeros_like(log_w), log_w)
         # 3. rejuvenate against π_β, then adapt the step size
         def log_prob(y):
@@ -188,7 +199,10 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
             step_size, accept, target_accept, cfg.adapt_rate
         )
         carry = (x, log_w, log_z, beta, step_size, k, n_res + did)
-        return carry, (beta, ess_norm, accept)
+        ys = (beta, ess_norm, accept)
+        if telemetry:  # Python-static: absent from the trace when off
+            ys = ys + (stats,)
+        return carry, ys
 
     k0, key = jax.random.split(key)
     x0 = _call(target.sample_base, k0, n, theta=theta)
@@ -201,9 +215,10 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
         key,
         jnp.int32(0),
     )
-    carry, (betas, ess_hist, accepts) = jax.lax.scan(body, carry0, betas_in)
+    carry, ys = jax.lax.scan(body, carry0, betas_in)
+    betas, ess_hist, accepts = ys[:3]
     x, log_w, log_z, _, _, _, n_res = carry
-    return {
+    result = {
         "particles": x,
         "log_w": log_w,
         "log_z": log_z + _logz_increment(log_w, n),
@@ -212,6 +227,9 @@ def run_smc_sampler(key, target: Target, cfg: SMCSamplerConfig, theta=None):
         "accept": accepts,
         "num_resamples": n_res,
     }
+    if telemetry:
+        return result, Telemetry(steps=ys[3], accept=accepts, betas=betas)
+    return result
 
 
 def run_smc_sampler_bank(
@@ -220,6 +238,7 @@ def run_smc_sampler_bank(
     cfg: SMCSamplerConfig,
     thetas=None,
     num_scenarios: Optional[int] = None,
+    telemetry=False,
 ):
     """S independent samplers under ONE jitted scan (the §4 scenario axis).
 
@@ -232,7 +251,9 @@ def run_smc_sampler_bank(
     row ``b`` of every output equals ``run_smc_sampler(split(key, S)[b],
     target, cfg, theta=thetas[b])`` bit-for-bit — the same contract as
     ``run_filter_bank``.  Returns the ``run_smc_sampler`` dict with a
-    leading [S] axis on every leaf.
+    leading [S] axis on every leaf; ``telemetry=True`` returns
+    ``(result, Telemetry)`` with every trajectory field laid out ``[S, T]``
+    (matching the dict's ``betas``/``ess``/``accept``).
     """
     if thetas is None and num_scenarios is None:
         raise ValueError(
@@ -292,11 +313,12 @@ def run_smc_sampler_bank(
         #    row takes its OWN resample-or-not branch on-chip, so the
         #    per-row where-selects of the old apply_rows composition are
         #    gone — row b is bit-identical to the single path's step.
-        xs, _, ess_norm, incr = resampler.step_rows(
+        xs, _, stats = resampler.step_rows(
             k_res, log_w, xs, cfg.ess_threshold
         )
+        ess_norm = stats.ess_norm
         trigger = ess_norm < cfg.ess_threshold
-        log_z = log_z + incr
+        log_z = log_z + stats.log_evidence_incr
         log_w = jnp.where(trigger[:, None], 0.0, log_w)
         # 3. rejuvenate + adapt, per row
         def move_one(k, x, sz, b, th):
@@ -322,7 +344,10 @@ def run_smc_sampler_bank(
             ks_next,
             n_res + trigger.astype(jnp.int32),
         )
-        return carry, (beta, ess_norm, accept)
+        ys = (beta, ess_norm, accept)
+        if telemetry:  # Python-static: absent from the trace when off
+            ys = ys + (stats,)
+        return carry, ys
 
     carry0 = (
         x0,
@@ -333,9 +358,10 @@ def run_smc_sampler_bank(
         carry_keys,
         jnp.zeros((num_s,), jnp.int32),
     )
-    carry, (betas, ess_hist, accepts) = jax.lax.scan(body, carry0, betas_in)
+    carry, ys = jax.lax.scan(body, carry0, betas_in)
+    betas, ess_hist, accepts = ys[:3]
     xs, log_w, log_z, _, _, _, n_res = carry
-    return {
+    result = {
         "particles": xs,
         "log_w": log_w,
         "log_z": log_z + _logz_increment(log_w, n),
@@ -344,3 +370,7 @@ def run_smc_sampler_bank(
         "accept": accepts.T,
         "num_resamples": n_res,
     }
+    if telemetry:
+        steps = jax.tree.map(jnp.transpose, ys[3])  # [T, S] -> [S, T]
+        return result, Telemetry(steps=steps, accept=accepts.T, betas=betas.T)
+    return result

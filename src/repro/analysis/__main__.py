@@ -4,6 +4,7 @@
                              [--families megopolis,...]
                              [--backends pallas_interpret,...]
                              [--no-consumers] [--no-transactions]
+                             [--no-telemetry]
     python -m repro.analysis --selftest
 
 ``--check`` exits non-zero on any unwaived violation; ``--selftest``
@@ -47,6 +48,8 @@ def main(argv=None) -> int:
                     help="skip the residency-edge footprint pricing")
     ap.add_argument("--no-transactions", action="store_true",
                     help="skip the §2.4 transaction pricing")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="skip the §15 telemetry-neutrality pass")
     args = ap.parse_args(argv)
 
     if not (args.check or args.selftest):
@@ -76,6 +79,7 @@ def main(argv=None) -> int:
             consumers=not args.no_consumers,
             large_n=not args.no_large_n,
             transactions=not args.no_transactions,
+            telemetry=not args.no_telemetry,
             **kw,
         )
         if args.json:

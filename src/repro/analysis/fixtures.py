@@ -120,6 +120,63 @@ FIXTURES = {
 }
 
 
+def leaky_telemetry():
+    """The pass-6 anti-fixture: a 'consumer' whose telemetry flag is NOT
+    free — enabling it stages the weights through an extra kernel launch
+    AND threads the record back into the estimate, so both halves of the
+    neutrality check (launch parity, DCE'd-estimates parity) must fire."""
+
+    def fn(telemetry=False):
+        def run(k, z):
+            w = z + jax.random.uniform(k, z.shape)
+            est = jnp.mean(w)
+            if telemetry:
+                record = _copy_launch(w)  # an extra launch just for the record
+                est = est + 0.0 * record[0]  # ...that leaks into the estimate
+                return est, record
+            return est
+
+        return run
+
+    key = jax.random.PRNGKey(0)
+    z = jnp.zeros((_N,), jnp.float32)
+    off = jax.make_jaxpr(fn(telemetry=False))(key, z)
+    on, shape = jax.make_jaxpr(fn(telemetry=True), return_shape=True)(key, z)
+    n_est = len(jax.tree_util.tree_leaves(shape[0]))
+    used = [True] * n_est + [False] * (
+        len(jax.tree_util.tree_leaves(shape)) - n_est
+    )
+    return off, on, used
+
+
+def telemetry_selftest() -> list[str]:
+    """Pass 6 must flag the leaky fixture (both violations) and pass a
+    real cell; returns problems, empty when healthy."""
+    from repro.analysis.telemetry import audit_telemetry_cell, compare_traces
+
+    problems = []
+    rep = compare_traces("fixture:leaky_telemetry", *leaky_telemetry())
+    if rep["ok"]:
+        problems.append(
+            "leaky_telemetry: expected neutrality violations, got none"
+        )
+    else:
+        if rep["launches_on"] == rep["launches_off"]:
+            problems.append(
+                "leaky_telemetry: expected the launch-parity check to fire"
+            )
+        if rep["estimates_jaxpr_match"]:
+            problems.append(
+                "leaky_telemetry: expected the DCE'd-estimates check to fire"
+            )
+    good = audit_telemetry_cell("megopolis", "pallas_interpret")
+    if not good["ok"]:
+        problems.append(
+            f"telemetry pass flags a healthy cell: {good['violations']}"
+        )
+    return problems
+
+
 def audit_fixtures():
     """Audit every fixture; yields ``(name, expected_pass, CellReport)``."""
     for name, (tracer, contract, expected) in FIXTURES.items():
@@ -147,4 +204,5 @@ def selftest() -> list[str]:
         others = [k for k, hit in matched.items() if hit and k != expected]
         if others:
             problems.append(f"{name}: unexpected extra findings from {others}")
+    problems.extend(telemetry_selftest())
     return problems

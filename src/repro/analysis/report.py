@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from repro.analysis import consumers as consumers_mod
 from repro.analysis import contracts as contracts_mod
+from repro.analysis import telemetry as telemetry_mod
 from repro.core.transactions import (
     MEGOPOLIS_EXACT,
     measured_transaction_stats,
@@ -50,16 +51,20 @@ def build_report(
     consumers: bool = True,
     large_n: bool = True,
     transactions: bool = True,
+    telemetry: bool = True,
     plane_dtypes=("float32", "bfloat16"),
 ) -> dict:
     """Run every audit and return one JSON-serialisable report.
 
     ``report["ok"]`` is the single bit CI gates on: every cell honest,
     every consumer honest, no unwaived RNG finding, every measured
-    transaction count within its declared §2.4 bound.  ``plane_dtypes``
-    spans the DESIGN.md §14 compression axis: compressed cells are audited
-    against the SAME launch budgets, and the transaction table is re-priced
-    per word size (``transactions@bfloat16`` at ``word_bytes=2``).
+    transaction count within its declared §2.4 bound, and telemetry free
+    (pass 6, DESIGN.md §15: flipping ``telemetry=True`` adds zero launches
+    and leaves the DCE'd estimates program identical on every cell).
+    ``plane_dtypes`` spans the DESIGN.md §14 compression axis: compressed
+    cells are audited against the SAME launch budgets, and the transaction
+    table is re-priced per word size (``transactions@bfloat16`` at
+    ``word_bytes=2``).
     """
     matrix = [
         rep.as_dict()
@@ -94,6 +99,15 @@ def build_report(
         report["auto_reference_rng"] = auto
         report["auto_reference_violations"] = [a for a in auto if not a["ok"]]
 
+    if telemetry:
+        tel = list(
+            telemetry_mod.audit_telemetry(
+                families, backends, plane_dtypes=plane_dtypes
+            )
+        )
+        report["telemetry"] = tel
+        report["telemetry_violations"] = [c for c in tel if not c["ok"]]
+
     if transactions:
         tx = transaction_report()
         report["transactions"] = tx
@@ -114,6 +128,7 @@ def build_report(
         or report.get("large_n_violations")
         or report.get("consumer_violations")
         or report.get("auto_reference_violations")
+        or report.get("telemetry_violations")
         or report.get("transaction_violations")
     )
     return report
@@ -142,6 +157,11 @@ def summarise(report: dict) -> str:
         )
         if waived:
             lines.append(f"waivers applied: {waived}")
+    if "telemetry" in report:
+        lines.append(
+            f"telemetry neutrality: {len(report['telemetry'])} cells, "
+            f"{len(report['telemetry_violations'])} violation(s)"
+        )
     if "transactions" in report:
         tx = report["transactions"]
         parts = ", ".join(
@@ -159,6 +179,9 @@ def summarise(report: dict) -> str:
     for a in report.get("auto_reference_violations", []):
         for f in a["findings"]:
             lines.append(f"  VIOLATION {a['cell']}: [{f['pass_name']}:{f['code']}] {f['detail']}")
+    for cell in report.get("telemetry_violations", []):
+        for v in cell["violations"]:
+            lines.append(f"  VIOLATION {cell['cell']}: {v}")
     for k, v in report.get("transaction_violations", {}).items():
         lines.append(f"  VIOLATION transactions/{k}: max {v['max']} > bound {v['bound']}")
     lines.append("OK" if report["ok"] else "FAILED")

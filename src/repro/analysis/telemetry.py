@@ -1,0 +1,131 @@
+"""Pass 6 — telemetry neutrality (DESIGN.md §15).
+
+The flight-recorder contract is that observability is FREE: flipping
+``telemetry=True`` on a consumer must not add a single kernel launch, and
+must leave the computation of the estimates (and hence the ancestor
+stream feeding them) untouched.  This pass re-derives both halves of that
+claim from jaxprs instead of trusting the docstrings:
+
+  * **launch parity** — ``run_filter`` is traced telemetry-off and
+    telemetry-on for every (family, backend[, plane_dtype]) cell; the
+    ``pallas_call`` census of the two traces must be EQUAL (not merely
+    within budget — equal);
+  * **estimate-stream parity** — the telemetry-on trace is dead-code
+    eliminated down to just its estimates output.  What survives must be
+    the SAME program as the telemetry-off trace (compared on the printed
+    jaxpr, which is deterministic for structurally identical programs).
+    This is the strong form of "the record is built from values the scan
+    already computes": anything telemetry-only (the survivor sort, the
+    StepStats stacking) must vanish under DCE, and nothing the estimates
+    depend on may have moved.
+
+The conditional-SIR ``run_filter`` is the probe because it exercises the
+fused ``Resampler.step`` — the one entry whose stats vector feeds both
+the resample decision (load-bearing, must survive DCE) and the telemetry
+record (free, must not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.interpreters.partial_eval import dce_jaxpr
+
+from repro.analysis import walker
+from repro.core.spec import BACKENDS, list_resamplers, spec_for_backend
+
+#: Probe geometry — small enough to trace the whole matrix in seconds,
+#: kernel-legal on every backend (N is one VMEM tile pair).
+NEUTRALITY_N = 2048
+NEUTRALITY_STEPS = 3
+NEUTRALITY_NUM_ITERS = 16
+NEUTRALITY_MAX_ITERS = 64
+
+
+def _probe_filter(name: str, backend: str, plane_dtype: str):
+    from repro.pf.filter import ParticleFilter
+    from repro.pf.models import ungm
+
+    spec = spec_for_backend(
+        name, backend, num_iters=NEUTRALITY_NUM_ITERS,
+        max_iters=NEUTRALITY_MAX_ITERS, plane_dtype=plane_dtype,
+    )
+    return ParticleFilter(
+        model=ungm(), num_particles=NEUTRALITY_N, resampler=spec,
+        ess_threshold=0.5,
+    )
+
+
+def _traces(pf):
+    """(off trace, on trace, used-output mask for the on trace's estimates)."""
+    from repro.pf.filter import run_filter
+
+    key = jax.random.PRNGKey(0)
+    obs = jnp.zeros((NEUTRALITY_STEPS,), jnp.float32)
+    off = jax.make_jaxpr(lambda k, z: run_filter(k, pf, z))(key, obs)
+    on, on_shape = jax.make_jaxpr(
+        lambda k, z: run_filter(k, pf, z, telemetry=True), return_shape=True
+    )(key, obs)
+    n_est = len(jax.tree_util.tree_leaves(on_shape[0]))
+    n_all = len(jax.tree_util.tree_leaves(on_shape))
+    used = [True] * n_est + [False] * (n_all - n_est)
+    return off, on, used
+
+
+def _estimates_fingerprint(closed, used) -> str:
+    """Pretty-printed jaxpr of ``closed`` DCE'd to ``used`` outputs —
+    deterministic for structurally identical programs."""
+    pruned, _ = dce_jaxpr(closed.jaxpr, used)
+    return str(pruned)
+
+
+def compare_traces(cell: str, off, on, used) -> dict:
+    """Grade an (off, on) trace pair for neutrality.  ``used`` marks which
+    flat outputs of the on trace are the estimates (everything the off
+    trace also returns); the rest is the telemetry record."""
+    launches_off = walker.count_pallas_calls(off)
+    launches_on = walker.count_pallas_calls(on)
+    fp_off = _estimates_fingerprint(off, [True] * len(off.jaxpr.outvars))
+    fp_on = _estimates_fingerprint(on, used)
+    violations = []
+    if launches_on != launches_off:
+        violations.append(
+            f"telemetry=True changed the pallas_call census: "
+            f"{launches_off} launches off vs {launches_on} on (the record "
+            "must be composed from values the scan already computes, "
+            "DESIGN.md §15)"
+        )
+    if fp_on != fp_off:
+        violations.append(
+            "telemetry=True perturbed the estimates program: the DCE "
+            "projection of the telemetry-on trace onto its estimates "
+            "output differs from the telemetry-off trace (the ancestor/"
+            "estimate stream must be byte-identical, DESIGN.md §15)"
+        )
+    return {
+        "cell": cell,
+        "ok": not violations,
+        "launches_off": launches_off,
+        "launches_on": launches_on,
+        "estimates_jaxpr_match": fp_on == fp_off,
+        "violations": violations,
+    }
+
+
+def audit_telemetry_cell(name: str, backend: str,
+                         plane_dtype: str = "float32") -> dict:
+    """Audit one (family, backend, plane_dtype) cell for neutrality."""
+    suffix = "" if plane_dtype == "float32" else f"@{plane_dtype}"
+    cell = f"{name}/{backend}/run_filter{suffix}"
+    pf = _probe_filter(name, backend, plane_dtype)
+    off, on, used = _traces(pf)
+    return compare_traces(cell, off, on, used)
+
+
+def audit_telemetry(families=None, backends=None,
+                    plane_dtypes=("float32",)):
+    """Audit neutrality across the registry matrix; yields cell dicts."""
+    for dtype in plane_dtypes:
+        for name in families if families is not None else list_resamplers():
+            for backend in backends if backends is not None else BACKENDS:
+                yield audit_telemetry_cell(name, backend, plane_dtype=dtype)

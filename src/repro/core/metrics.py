@@ -84,6 +84,39 @@ def log_mean_weight(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     return (jnp.squeeze(m, axis=axis) + jnp.log(s1)) - jnp.log(jnp.float32(n))
 
 
+def max_normalised_weight(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Largest normalised weight ``max(w) / Σw`` — the degeneracy diagnostic
+    complementing ESS (a population collapsing onto one particle drives this
+    toward 1.0 while ESS drives toward 1/N).
+
+    Shares the shift-by-max decomposition of ``effective_sample_size`` term
+    for term; the fused step kernels (``kernels/common.step_stats``) compute
+    the same ``max(w) / max(Σw, floor)`` over the same flat [N] reduction, so
+    the on-chip value is bit-identical to this host value (DESIGN.md §15).
+    """
+    w = normalise_log_weights(log_w, axis=axis)
+    s1 = jnp.sum(w, axis=axis)
+    return jnp.max(w, axis=axis) / jnp.maximum(s1, _tiny_floor(s1.dtype))
+
+
+def unique_ancestor_count(ancestors: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Survivor count: the number of DISTINCT ancestors in an int32 ancestor
+    vector (Murray–Lee–Jacob's unique-particle degeneracy diagnostic).
+
+    Sort-and-count-breaks — deliberately no ``bincount``/scatter: integer
+    sort is bit-exact on every backend AND keeps the §13 census pass clean
+    (a scatter indexed by a kernel's ancestor output would grade as the HBM
+    round-trip the fused path forbids).  Identity ancestors count N, a fully
+    collapsed population counts 1.  Works on ``[N]`` and batched ``[..., N]``
+    vectors alike; returns int32."""
+    s = jnp.sort(ancestors, axis=axis)
+    first = jnp.ones(s.shape[:-1] + (1,), jnp.int32)
+    breaks = (
+        jnp.moveaxis(s, axis, -1)[..., 1:] != jnp.moveaxis(s, axis, -1)[..., :-1]
+    ).astype(jnp.int32)
+    return jnp.sum(jnp.concatenate([first, breaks], axis=-1), axis=-1)
+
+
 def offspring_counts(ancestors: jnp.ndarray, n: int) -> jnp.ndarray:
     """o[i] = #{j : ancestors[j] == i}."""
     return jnp.bincount(ancestors, length=n)

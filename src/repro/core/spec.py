@@ -55,8 +55,12 @@ from repro.core.iterations import select_iterations
 from repro.core.metrics import (
     effective_sample_size,
     log_mean_weight,
+    max_normalised_weight,
     normalise_log_weights,
+    unique_ancestor_count,
 )
+from repro.obs.stats import stats_from_vector
+from repro.obs.trace import dispatch_span
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.resamplers.megopolis import DEFAULT_SEGMENT, megopolis, megopolis_batch
 from repro.core.resamplers.metropolis import (
@@ -167,15 +171,19 @@ class Resampler:
 
     ``step`` is the fused SMC step (DESIGN.md §12): normalise log-weights,
     compute ESS, take the resample-or-not branch, and copy state, returning
-    ``(particles', ancestors, ess_norm, log_evidence_incr)``.  The resample
-    branch (``ess_norm < ess_threshold``, strict) is bit-identical to
-    ``apply(key, normalise_log_weights(log_w), particles)``; the no-op
-    branch returns the particles bit-identical with identity ancestors and
-    ``incr = 0``.  Randomness is consumed unconditionally in BOTH branches
-    (where-select, not cond), so key chains advance identically whether or
-    not a resample fires.  On the pallas backends the whole step is ONE
-    kernel launch; on reference/xla it IS the normalise → ESS → branch →
-    ``apply`` composition (the bit-identical oracle).
+    ``(particles', ancestors, stats)`` with ``stats`` a ``StepStats``
+    record (ess_norm, log_evidence_incr, resampled, max_weight, survivors
+    — DESIGN.md §15).  The resample branch (``ess_norm < ess_threshold``,
+    strict) is bit-identical to ``apply(key, normalise_log_weights(log_w),
+    particles)``; the no-op branch returns the particles bit-identical with
+    identity ancestors and ``incr = 0``.  Randomness is consumed
+    unconditionally in BOTH branches (where-select, not cond), so key
+    chains advance identically whether or not a resample fires.  On the
+    pallas backends the whole step is ONE kernel launch with the first four
+    stats fields reduced in-kernel; on reference/xla it IS the normalise →
+    ESS → branch → ``apply`` composition (the bit-identical oracle).
+    ``survivors`` (the distinct-ancestor count) is composed from the
+    returned ancestors on every backend.
     """
 
     def __init__(
@@ -246,7 +254,13 @@ class Resampler:
                 ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
                 p_out = jnp.where(do, p_res, particles)
                 incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
-                return p_out, ancestors, ess_n, incr
+                stats4 = jnp.stack([
+                    ess_n,
+                    incr,
+                    jnp.where(do, jnp.float32(1.0), jnp.float32(0.0)),
+                    max_normalised_weight(log_w),
+                ])
+                return p_out, ancestors, stats4
 
         if step_rows is None:
             step_fn = step
@@ -269,20 +283,31 @@ class Resampler:
         ``r_f32(key, r_bf16.quantise(w))`` ancestor-for-ancestor."""
         return quantise_plane(x, self.plane_dtype)
 
+    def _span(self, entry: str):
+        """The dispatch trace span (DESIGN.md §15):
+        ``family/backend/entry/plane_dtype``.  Identity unless tracing is
+        enabled, so the structural jaxpr gates never see it."""
+        return dispatch_span(
+            self.name, getattr(self.spec, "backend", "reference"), entry,
+            self.plane_dtype,
+        )
+
     def __call__(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 1:
             raise ValueError(
                 f"{self.name}: expected weights[N]; got shape {weights.shape} "
                 "(use .batch for weights[B, N])"
             )
-        return self._single(key, self.quantise(weights))
+        with self._span("single"):
+            return self._single(key, self.quantise(weights))
 
     def batch(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 2:
             raise ValueError(
                 f"{self.name}.batch: expected weights[B, N]; got shape {weights.shape}"
             )
-        return self._batch(key, self.quantise(weights))
+        with self._span("batch"):
+            return self._batch(key, self.quantise(weights))
 
     def batch_rows(self, keys: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         """vmap the single-population call over explicit per-row keys.
@@ -295,7 +320,8 @@ class Resampler:
             raise ValueError(
                 f"{self.name}.batch_rows: expected weights[B, N]; got shape {weights.shape}"
             )
-        return jax.vmap(self._single)(keys, self.quantise(weights))
+        with self._span("batch_rows"):
+            return jax.vmap(self._single)(keys, self.quantise(weights))
 
     def _check_state(self, weights, particles, who: str, lead: int = 1):
         if particles.ndim < lead or particles.shape[:lead] != weights.shape[:lead]:
@@ -315,7 +341,8 @@ class Resampler:
                 "(use .apply_batch for weights[B, N])"
             )
         self._check_state(weights, particles, "apply")
-        return self._apply(key, self.quantise(weights), self.quantise(particles))
+        with self._span("apply"):
+            return self._apply(key, self.quantise(weights), self.quantise(particles))
 
     def apply_batch(self, key: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
         """Bank form of ``apply`` under the §4 split-key contract."""
@@ -325,9 +352,10 @@ class Resampler:
                 f"{weights.shape}"
             )
         self._check_state(weights, particles, "apply_batch", lead=2)
-        return self._apply_batch(
-            key, self.quantise(weights), self.quantise(particles)
-        )
+        with self._span("apply_batch"):
+            return self._apply_batch(
+                key, self.quantise(weights), self.quantise(particles)
+            )
 
     def apply_rows(self, keys: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
         """``apply`` over explicit per-row keys (the filter-bank path): row
@@ -349,9 +377,10 @@ class Resampler:
                 f"{keys.shape[0]} keys for weights[{weights.shape[0]}, ...]"
             )
         self._check_state(weights, particles, "apply_rows", lead=2)
-        return self._apply_rows(
-            keys, self.quantise(weights), self.quantise(particles)
-        )
+        with self._span("apply_rows"):
+            return self._apply_rows(
+                keys, self.quantise(weights), self.quantise(particles)
+            )
 
     def step(
         self,
@@ -361,22 +390,30 @@ class Resampler:
         ess_threshold,
     ):
         """Fused SMC step over one population (DESIGN.md §12): returns
-        ``(particles', ancestors, ess_norm, log_evidence_incr)``.  Resamples
-        iff ``ess_norm < ess_threshold`` (strict: a threshold of 0 never
-        fires, a population exactly at threshold does not fire); the
-        resample branch is bit-identical to ``self.apply(key,
-        normalise_log_weights(log_weights), particles)``, the no-op branch
-        returns ``particles`` unchanged with identity ancestors and
-        ``incr = 0``.  The key is consumed either way."""
+        ``(particles', ancestors, stats)`` with ``stats`` a ``StepStats``
+        record (DESIGN.md §15).  Resamples iff ``ess_norm < ess_threshold``
+        (strict: a threshold of 0 never fires, a population exactly at
+        threshold does not fire); the resample branch is bit-identical to
+        ``self.apply(key, normalise_log_weights(log_weights), particles)``,
+        the no-op branch returns ``particles`` unchanged with identity
+        ancestors and ``incr = 0``.  The key is consumed either way.  The
+        stats vector comes straight out of the (single) kernel launch on
+        the pallas backends; ``survivors`` is composed here from the
+        returned ancestors — consumers that drop the record compile the
+        exact pre-telemetry program (analyzer pass 6)."""
         if log_weights.ndim != 1:
             raise ValueError(
                 f"{self.name}.step: expected log_weights[N]; got shape "
                 f"{log_weights.shape} (use .step_rows for log_weights[B, N])"
             )
         self._check_state(log_weights, particles, "step")
-        return self._step(
-            key, self.quantise(log_weights), self.quantise(particles), ess_threshold
-        )
+        with self._span("step"):
+            p_out, ancestors, stats4 = self._step(
+                key, self.quantise(log_weights), self.quantise(particles),
+                ess_threshold,
+            )
+            stats = stats_from_vector(stats4, unique_ancestor_count(ancestors))
+        return p_out, ancestors, stats
 
     def step_rows(
         self,
@@ -387,7 +424,8 @@ class Resampler:
     ):
         """``step`` over explicit per-row keys (the filter-bank path): row
         ``b`` is bit-identical to ``self.step(keys[b], log_weights[b],
-        particles[b], ess_threshold)`` — each row takes its OWN branch.  On
+        particles[b], ess_threshold)`` — each row takes its OWN branch and
+        the returned ``StepStats`` record is batched ``[B]`` per field.  On
         kernel backends with a leading-batch-grid step kernel (Megopolis,
         Metropolis, rejection) this is ONE launch."""
         if log_weights.ndim != 2:
@@ -401,9 +439,13 @@ class Resampler:
                 f"{keys.shape[0]} keys for log_weights[{log_weights.shape[0]}, ...]"
             )
         self._check_state(log_weights, particles, "step_rows", lead=2)
-        return self._step_rows(
-            keys, self.quantise(log_weights), self.quantise(particles), ess_threshold
-        )
+        with self._span("step_rows"):
+            p_out, ancestors, stats4 = self._step_rows(
+                keys, self.quantise(log_weights), self.quantise(particles),
+                ess_threshold,
+            )
+            stats = stats_from_vector(stats4, unique_ancestor_count(ancestors))
+        return p_out, ancestors, stats
 
     def __repr__(self):
         return f"Resampler({self.spec!r})"
@@ -501,7 +543,7 @@ def _per_row_auto_step(spec, step_single):
                 "num_iters to use step_rows inside jit."
             )
         outs = [step_single(keys[b], log_w[b], p[b], thr) for b in range(log_w.shape[0])]
-        return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+        return tuple(jnp.stack([o[i] for o in outs]) for i in range(3))
 
     return fn
 

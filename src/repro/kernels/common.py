@@ -279,15 +279,16 @@ def gather_state(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray:
 
 def step_stats(lw_flat: jnp.ndarray, n_total: int):
     """Fused-step prelude statistics from a resident flat log-weight vector:
-    ``(m, ess_norm, log_evidence_incr)``.
+    ``(m, ess_norm, log_evidence_incr, max_weight)``.
 
     Mirrors ``repro.core.metrics`` term for term — guarded shift-by-max
     (``normalise_log_weights``), ``(Σw)²/max(Σw², 1e-30)`` over the SAME
-    flat [N] reduction shape (``effective_sample_size``), and the
-    ``m + log(Σw) - log(N)`` decomposition (``log_mean_weight``).  Kernel
-    bodies MUST reshape their (rows, 128) log-weight block to flat [N]
-    before calling: a 2-D reduction changes the f32 summation tree and
-    breaks bit-parity with the host helpers.
+    flat [N] reduction shape (``effective_sample_size``), the
+    ``m + log(Σw) - log(N)`` decomposition (``log_mean_weight``), and
+    ``max(w)/max(Σw, 1e-30)`` (``max_normalised_weight``).  Kernel bodies
+    MUST reshape their (rows, 128) log-weight block to flat [N] before
+    calling: a 2-D reduction changes the f32 summation tree and breaks
+    bit-parity with the host helpers.
     """
     m = jnp.max(lw_flat)
     m = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
@@ -297,7 +298,8 @@ def step_stats(lw_flat: jnp.ndarray, n_total: int):
     ess = jnp.square(s1) / jnp.maximum(s2, 1e-30)
     ess_norm = ess / jnp.float32(n_total)
     incr = (m + jnp.log(s1)) - jnp.log(jnp.float32(n_total))
-    return m, ess_norm, incr
+    maxw = jnp.max(w) / jnp.maximum(s1, 1e-30)
+    return m, ess_norm, incr, maxw
 
 
 def step_select(do, k_new: jnp.ndarray, t) -> jnp.ndarray:
@@ -320,10 +322,11 @@ def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who:
                   plane_dtype="float32"):
     """Bank scaffolding for every family's fused STEP launch — the step
     analogue of ``run_fused_bank``: residency check, per-row plane pack,
-    ``launch(lw3, planes4d) -> (k3, out4d, stats2)`` with ``stats2`` =
-    f32[B, 2] rows of (ess_norm, log_evidence_incr), per-row unpack.
-    Returns ``(particles'[B, N, ...], ancestors int32[B, N],
-    ess_norm f32[B], incr f32[B])``."""
+    ``launch(lw3, planes4d) -> (k3, out4d, stats4)`` with ``stats4`` =
+    f32[B, 4] rows of (ess_norm, log_evidence_incr, resampled, max_weight)
+    — the in-kernel StepStats vector of DESIGN.md §15 — then per-row
+    unpack.  Returns ``(particles'[B, N, ...], ancestors int32[B, N],
+    stats f32[B, 4])``."""
     import jax
 
     bsz, n = log_weights.shape
@@ -338,7 +341,7 @@ def run_step_bank(launch, log_weights: jnp.ndarray, particles: jnp.ndarray, who:
     out_rows = jax.vmap(lambda o: unpack_state_planes(o, state_shape))(
         out.astype(particles.dtype)
     )
-    return out_rows, k3.reshape(bsz, n), stats[:, 0], stats[:, 1]
+    return out_rows, k3.reshape(bsz, n), stats
 
 
 def check_tile_aligned(n: int, who: str):

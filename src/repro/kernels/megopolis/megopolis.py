@@ -167,13 +167,15 @@ def _kernel_step(offsets_ref, seed_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(
+        m, ess_norm, incr, maxw = step_stats(
             lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[0] = ess_norm
         stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+        stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[3] = maxw
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
@@ -211,13 +213,15 @@ def _kernel_step_rows(offsets_ref, seeds_ref, thr_ref, lw_own_ref, lw_cmp_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(
+        m, ess_norm, incr, maxw = step_stats(
             lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[s, 0] = ess_norm
         stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
+        stats_ref[s, 2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[s, 3] = maxw
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
@@ -454,8 +458,9 @@ def megopolis_pallas_step(
     f32[R, 128] UNNORMALISED log-weights (streamed per tile AND kept
     whole-array resident for the on-chip reduction — the step form
     inherits the whole-weights VMEM cap); ``thr``: f32[1] ESS/N trigger.
-    Returns ``(ancestors int32[R, 128], state [d_pad, R, 128],
-    stats f32[2] = (ess_norm, log_evidence_incr))``."""
+    Returns ``(ancestors int32[R, 128], state [d_pad, R, 128], stats f32[4]
+    = (ess_norm, log_evidence_incr, resampled, max_weight) — the in-kernel
+    StepStats vector of DESIGN.md §15)``."""
     rows, lanes = log_weights2d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes.shape[0]
@@ -491,7 +496,7 @@ def megopolis_pallas_step(
         out_shape=[
             jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
         ],
         interpret=interpret,
     )(offsets, seed, thr, log_weights2d, log_weights2d, log_weights2d, planes)
@@ -511,7 +516,7 @@ def megopolis_pallas_step_rows(
     """Fused SMC-step bank launch: row s is bit-identical to
     ``megopolis_pallas_step(log_weights3d[s], planes4d[s], offsets2d[s],
     seeds[s:s+1], thr, ...)`` — each row takes its OWN resample decision.
-    Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128], f32[Bz, 2])``."""
+    Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128], f32[Bz, 4])``."""
     bsz, rows, lanes = log_weights3d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes4d.shape[1]
@@ -553,7 +558,7 @@ def megopolis_pallas_step_rows(
         out_shape=[
             jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
-            jax.ShapeDtypeStruct((bsz, 2), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 4), jnp.float32),
         ],
         interpret=interpret,
     )(offsets2d, seeds, thr, log_weights3d, log_weights3d, log_weights3d, planes4d)

@@ -221,7 +221,8 @@ def megopolis_tpu_step(
     UNNORMALISED; RNG/offset derivation is identical to
     ``megopolis_tpu_apply`` so the resample branch is bit-identical to
     ``apply(key, normalise_log_weights(log_weights), particles)``.
-    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    Returns ``(particles', ancestors, stats f32[4])`` with ``stats`` =
+    (ess_norm, log_evidence_incr, resampled, max_weight) — DESIGN.md §15."""
     n = log_weights.shape[0]
     if n % TILE != 0:
         raise ValueError(
@@ -245,8 +246,7 @@ def megopolis_tpu_step(
         lw2, planes, offsets, seed, thr, num_iters=num_iters, interpret=interpret
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats
 
 
 def megopolis_tpu_step_rows(
@@ -263,7 +263,7 @@ def megopolis_tpu_step_rows(
     bit-identical to ``megopolis_tpu_step(keys[b], ...)`` — each row takes
     its own on-chip resample decision in ONE leading-batch-grid launch.
     Returns ``(particles'[B, N, ...], ancestors int32[B, N],
-    ess_norm f32[B], log_evidence_incr f32[B])``."""
+    stats f32[B, 4])``."""
     if log_weights.ndim != 2:
         raise ValueError(
             f"megopolis_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"

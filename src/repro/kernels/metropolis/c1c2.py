@@ -163,7 +163,7 @@ def _make_kernel_step(p_at):
 
         @pl.when((t == 0) & (b == 0))
         def _prelude():
-            m, ess_norm, incr = step_stats(
+            m, ess_norm, incr, maxw = step_stats(
                 lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
@@ -171,6 +171,8 @@ def _make_kernel_step(p_at):
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
             stats_ref[0] = ess_norm
             stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+            stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+            stats_ref[3] = maxw
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
@@ -232,7 +234,7 @@ def _c1c2_step_call(kernel, log_weights2d, planes, partitions, seed, thr, *,
         out_shape=[
             jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
         ],
         interpret=interpret,
     )(partitions, seed, thr, log_weights2d, log_weights2d, log_weights2d, planes)
@@ -251,7 +253,7 @@ def metropolis_c1_pallas_step(
 ):
     """Fused C1 SMC step: normalise → ESS → conditional Alg. 3 resample →
     state copy, ONE launch.  Returns ``(int32[R, 128], [d_pad, R, 128],
-    f32[2] = (ess_norm, incr))``."""
+    f32[4] = (ess_norm, incr, resampled, max_weight))``."""
     return _c1c2_step_call(
         _make_kernel_step(lambda p, t, b: p[t]),
         log_weights2d, planes, partitions, seed, thr,
@@ -273,7 +275,7 @@ def metropolis_c2_pallas_step(
     interpret: bool = True,
 ):
     """Fused C2 SMC step: as C1 but with a fresh partition per (t, b)
-    (Alg. 4).  Returns ``(int32[R, 128], [d_pad, R, 128], f32[2])``."""
+    (Alg. 4).  Returns ``(int32[R, 128], [d_pad, R, 128], f32[4])``."""
     return _c1c2_step_call(
         _make_kernel_step(lambda p, t, b: p[t * num_iters + b]),
         log_weights2d, planes, partitions, seed, thr,

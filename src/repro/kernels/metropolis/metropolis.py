@@ -133,13 +133,15 @@ def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(
+        m, ess_norm, incr, maxw = step_stats(
             lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[0] = ess_norm
         stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+        stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[3] = maxw
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
@@ -174,13 +176,15 @@ def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr = step_stats(
+        m, ess_norm, incr, maxw = step_stats(
             lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[s, 0] = ess_norm
         stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
+        stats_ref[s, 2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[s, 3] = maxw
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
@@ -376,7 +380,8 @@ def metropolis_pallas_step(
     resample → state copy, ONE launch.  ``log_weights2d``: f32[R, 128]
     UNNORMALISED (already whole-array resident here — the strawman's
     residency is exactly what the step prelude needs anyway).  Returns
-    ``(int32[R, 128], [d_pad, R, 128], f32[2] = (ess_norm, incr))``."""
+    ``(int32[R, 128], [d_pad, R, 128], f32[4] = (ess_norm, incr,
+    resampled, max_weight))``."""
     rows, lanes = log_weights2d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes.shape[0]
@@ -407,7 +412,7 @@ def metropolis_pallas_step(
         out_shape=[
             jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
         ],
         interpret=interpret,
     )(seed, thr, log_weights2d, log_weights2d, planes)
@@ -426,7 +431,7 @@ def metropolis_pallas_step_rows(
     """Fused SMC-step bank launch: row s is bit-identical to
     ``metropolis_pallas_step(log_weights3d[s], planes4d[s], seeds[s:s+1],
     thr, ...)``.  Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128],
-    f32[Bz, 2])``."""
+    f32[Bz, 4])``."""
     bsz, rows, lanes = log_weights3d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes4d.shape[1]
@@ -461,7 +466,7 @@ def metropolis_pallas_step_rows(
         out_shape=[
             jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
-            jax.ShapeDtypeStruct((bsz, 2), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 4), jnp.float32),
         ],
         interpret=interpret,
     )(seeds, thr, log_weights3d, log_weights3d, planes4d)

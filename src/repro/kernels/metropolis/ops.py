@@ -194,7 +194,8 @@ def metropolis_tpu_step(
     """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional Alg. 2
     resample → state copy in ONE launch; the resample branch is
     bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
-    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    Returns ``(particles', ancestors, stats f32[4])`` with ``stats`` =
+    (ess_norm, log_evidence_incr, resampled, max_weight) — DESIGN.md §15."""
     n, lw2, planes, state_shape = _pack_single(
         log_weights, particles, "metropolis_tpu_step", plane_dtype=plane_dtype
     )
@@ -204,8 +205,7 @@ def metropolis_tpu_step(
         lw2, planes, seed, thr, num_iters=num_iters, interpret=interpret
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats
 
 
 def metropolis_tpu_step_rows(
@@ -220,7 +220,7 @@ def metropolis_tpu_step_rows(
 ):
     """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
     ``metropolis_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
-    Returns ``(particles'[B, N, ...], ancestors, ess_norm[B], incr[B])``."""
+    Returns ``(particles'[B, N, ...], ancestors, stats f32[B, 4])``."""
     if log_weights.ndim != 2:
         raise ValueError(
             f"metropolis_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"
@@ -353,7 +353,7 @@ def metropolis_c1_tpu_step(
     """Fused C1 SMC step; same key split as ``metropolis_c1_tpu``.  Unlike
     the C1 apply form, the step prelude needs the WHOLE log-weight array
     resident (the ESS reduction), so the VMEM particle cap applies here.
-    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    Returns ``(particles', ancestors, stats f32[4])``."""
     n, lw2, planes, state_shape = _pack_single(
         log_weights, particles, "metropolis_c1_tpu_step", plane_dtype=plane_dtype
     )
@@ -366,8 +366,7 @@ def metropolis_c1_tpu_step(
         lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats
 
 
 def metropolis_c2_tpu_step(
@@ -382,7 +381,7 @@ def metropolis_c2_tpu_step(
 ):
     """Fused C2 SMC step; same key split as ``metropolis_c2_tpu``; the
     whole-log-weight residency cap applies as for the C1 step.
-    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    Returns ``(particles', ancestors, stats f32[4])``."""
     n, lw2, planes, state_shape = _pack_single(
         log_weights, particles, "metropolis_c2_tpu_step", plane_dtype=plane_dtype
     )
@@ -397,5 +396,4 @@ def metropolis_c2_tpu_step(
         lw2, planes, partitions, seed, thr, num_iters=num_iters, interpret=interpret
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats

@@ -193,7 +193,8 @@ def prefix_resample_tpu_step(
     normalise_log_weights(log_weights), particles, kind)``: the key-only
     draw bases below replicate ``kind_draws``'s key usage exactly, and the
     CDF-dependent scale is applied in-kernel over a bit-identical in-kernel
-    scan.  Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    scan.  Returns ``(particles', ancestors, stats f32[4])`` with ``stats``
+    = (ess_norm, log_evidence_incr, resampled, max_weight) — DESIGN.md §15."""
     if kind not in PREFIX_KINDS:
         raise ValueError(f"kind must be one of {PREFIX_KINDS}; got {kind!r}")
     n = log_weights.shape[0]
@@ -229,8 +230,7 @@ def prefix_resample_tpu_step(
         kind=kind, interpret=interpret,
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats
 
 
 def _residual_tpu_fused(key: jax.Array, weights: jnp.ndarray, planes, *,

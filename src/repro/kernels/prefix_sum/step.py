@@ -50,10 +50,12 @@ def _make_kernel_step(n_total: int, rows: int, kind: str):
     def _kernel(u0_ref, thr_ref, lw_ref, ubase_ref, planes_ref,
                 k_ref, out_ref, stats_ref):
         lw_flat = lw_ref[...].astype(jnp.float32).reshape(n_total)
-        m, ess_norm, incr = step_stats(lw_flat, n_total)
+        m, ess_norm, incr, maxw = step_stats(lw_flat, n_total)
         do = ess_norm < thr_ref[0]
         stats_ref[0] = ess_norm
         stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+        stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        stats_ref[3] = maxw
 
         # Normalised weights re-land on the plane-dtype grid (the composed
         # path quantises at the public ``apply`` boundary); a no-op at f32.
@@ -108,7 +110,8 @@ def prefix_pallas_step(
     """Fused SMC-step pallas_call for one prefix-sum kind.  ``ubase2d``:
     the key-only uniform base draws reshaped (R, 128) (zeros for the
     systematic pair); ``u0``: f32[1] scalar base (zeros unless systematic).
-    Returns ``(int32[R, 128], [d_pad, R, 128], f32[2] = (ess_norm, incr))``."""
+    Returns ``(int32[R, 128], [d_pad, R, 128], f32[4] = (ess_norm, incr,
+    resampled, max_weight))``."""
     rows, lanes = log_weights2d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes.shape[0]
@@ -136,7 +139,7 @@ def prefix_pallas_step(
         out_shape=[
             jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
         ],
         interpret=interpret,
     )(u0, thr, log_weights2d, ubase2d, planes)

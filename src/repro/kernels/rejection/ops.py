@@ -147,7 +147,8 @@ def rejection_tpu_step(
     """Fused SMC step (DESIGN.md §12): normalise → ESS → conditional
     rejection chain → state copy in ONE launch; the resample branch is
     bit-identical to ``apply(key, normalise_log_weights(log_weights), ...)``.
-    Returns ``(particles', ancestors, ess_norm, log_evidence_incr)``."""
+    Returns ``(particles', ancestors, stats f32[4])`` with ``stats`` =
+    (ess_norm, log_evidence_incr, resampled, max_weight) — DESIGN.md §15."""
     n = log_weights.shape[0]
     _check(n, "rejection_tpu_step", plane_dtype)
     check_state_resident(
@@ -163,8 +164,7 @@ def rejection_tpu_step(
         lw2, planes, seed, thr, max_iters=max_iters, interpret=interpret
     )
     out = out.astype(particles.dtype)
-    return (unpack_state_planes(out, state_shape), k2.reshape(n),
-            stats[0], stats[1])
+    return unpack_state_planes(out, state_shape), k2.reshape(n), stats
 
 
 def rejection_tpu_step_rows(
@@ -179,7 +179,7 @@ def rejection_tpu_step_rows(
 ):
     """Fused SMC-step bank over EXPLICIT per-row keys; row b ==
     ``rejection_tpu_step(keys[b], ...)`` bit-exactly, ONE launch.
-    Returns ``(particles'[B, N, ...], ancestors, ess_norm[B], incr[B])``."""
+    Returns ``(particles'[B, N, ...], ancestors, stats f32[B, 4])``."""
     if log_weights.ndim != 2:
         raise ValueError(
             f"rejection_tpu_step_rows expects log_weights[B, N]; got {log_weights.shape}"

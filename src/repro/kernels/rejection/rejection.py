@@ -141,7 +141,7 @@ def _make_kernel_step(max_iters: int):
 
         @pl.when(t == 0)
         def _prelude():
-            m, ess_norm, incr = step_stats(
+            m, ess_norm, incr, maxw = step_stats(
                 lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
@@ -152,6 +152,8 @@ def _make_kernel_step(max_iters: int):
                 w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
             stats_ref[0] = ess_norm
             stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
+            stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+            stats_ref[3] = maxw
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
@@ -181,7 +183,7 @@ def _make_kernel_step_rows(max_iters: int):
 
         @pl.when(t == 0)
         def _prelude():
-            m, ess_norm, incr = step_stats(
+            m, ess_norm, incr, maxw = step_stats(
                 lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
@@ -192,6 +194,8 @@ def _make_kernel_step_rows(max_iters: int):
                 w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
             stats_ref[s, 0] = ess_norm
             stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
+            stats_ref[s, 2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+            stats_ref[s, 3] = maxw
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
@@ -221,7 +225,8 @@ def rejection_pallas_step(
     chain → state copy, ONE launch.  ``log_weights2d``: f32[R, 128]
     UNNORMALISED; ``sup w`` is reduced IN-kernel from the resident array
     (order-free max — bit-identical to the composed wrapper's reduction).
-    Returns ``(int32[R, 128], [d_pad, R, 128], f32[2] = (ess_norm, incr))``."""
+    Returns ``(int32[R, 128], [d_pad, R, 128], f32[4] = (ess_norm, incr,
+    resampled, max_weight))``."""
     rows, lanes = log_weights2d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes.shape[0]
@@ -249,7 +254,7 @@ def rejection_pallas_step(
         out_shape=[
             jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((d_pad, rows, lanes), planes.dtype),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
         ],
         interpret=interpret,
     )(seed, thr, log_weights2d, log_weights2d, planes)
@@ -268,7 +273,7 @@ def rejection_pallas_step_rows(
     """Fused SMC-step bank launch; row s is bit-identical to
     ``rejection_pallas_step(log_weights3d[s], planes4d[s], seeds[s:s+1],
     thr, ...)``.  Returns ``(int32[Bz, R, 128], [Bz, d_pad, R, 128],
-    f32[Bz, 2])``."""
+    f32[Bz, 4])``."""
     bsz, rows, lanes = log_weights3d.shape
     assert lanes == LANES and rows % SUBLANES == 0
     d_pad = planes4d.shape[1]
@@ -300,7 +305,7 @@ def rejection_pallas_step_rows(
         out_shape=[
             jax.ShapeDtypeStruct((bsz, rows, lanes), jnp.int32),
             jax.ShapeDtypeStruct((bsz, d_pad, rows, lanes), planes4d.dtype),
-            jax.ShapeDtypeStruct((bsz, 2), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 4), jnp.float32),
         ],
         interpret=interpret,
     )(seeds, thr, log_weights3d, log_weights3d, planes4d)

@@ -1,0 +1,38 @@
+"""JSONL event sink for the benchmark harness (DESIGN.md §15).
+
+One event per line — ``{"event": <name>, "ts": <unix seconds>, ...fields}``
+— appended so concurrent suites interleave without clobbering each other.
+``benchmarks/run.py`` emits ``suite_start``/``suite_end``/``run_end`` events
+here and CI uploads the file as the observability artifact; anything that
+reads it gets an ordered, replayable record of what a bench run actually
+did (the "flight recorder" half of the subsystem name).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+class JsonlSink:
+    """Append-only JSONL event writer.  Values must be JSON-serialisable;
+    non-serialisable values are stringified rather than dropped, so an odd
+    numpy scalar can never kill a bench run."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+
+    def emit(self, event: str, **fields) -> None:
+        record = {"event": event, "ts": round(time.time(), 3)}
+        for k, v in fields.items():
+            try:
+                json.dumps(v)
+            except (TypeError, ValueError):
+                v = str(v)
+            record[k] = v
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")

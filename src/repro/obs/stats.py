@@ -1,0 +1,51 @@
+"""``StepStats`` — the fixed per-step SMC diagnostic record (DESIGN.md §15).
+
+One record per fused-step decision, with identical semantics on every
+backend:
+
+- ``ess_norm``           f32, ESS/N of the UNNORMALISED input log-weights —
+  the resample trigger (``ess_norm < threshold``).
+- ``log_evidence_incr``  f32, ``log(mean(exp(log_w)))`` when the step
+  resampled, else 0.0 (the evidence ledger only advances on resamples).
+- ``resampled``          f32, 1.0 when the trigger fired else 0.0 — float
+  so the record stays a single homogeneous stats vector in kernel SMEM and
+  stacks cleanly under ``lax.scan``.
+- ``max_weight``         f32, largest normalised weight ``max(w)/Σw`` — the
+  weight-degeneracy diagnostic complementing ESS.
+- ``survivors``          int32, number of DISTINCT ancestors (identity
+  ancestors ⇒ N; full collapse ⇒ 1) — the Murray–Lee–Jacob unique-particle
+  count, composed from the ancestor vector by the public wrapper (sort-based,
+  never a scatter: see ``core.metrics.unique_ancestor_count``).
+
+The first four fields are the kernel SMEM stats vector (f32[4], in that
+order); ``survivors`` is appended host-side from the ancestors the same
+launch returned.  ``NamedTuple`` ⇒ automatically a pytree: records scan,
+vmap and stack like any array bundle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class StepStats(NamedTuple):
+    ess_norm: jnp.ndarray
+    log_evidence_incr: jnp.ndarray
+    resampled: jnp.ndarray
+    max_weight: jnp.ndarray
+    survivors: jnp.ndarray
+
+
+def stats_from_vector(stats4: jnp.ndarray, survivors: jnp.ndarray) -> StepStats:
+    """Unpack a kernel stats vector ``f32[..., 4]`` (row layout above) plus a
+    host-composed survivor count into a ``StepStats`` record.  Batched inputs
+    (``[B, 4]`` + ``[B]``) yield a batched record."""
+    return StepStats(
+        ess_norm=stats4[..., 0],
+        log_evidence_incr=stats4[..., 1],
+        resampled=stats4[..., 2],
+        max_weight=stats4[..., 3],
+        survivors=survivors,
+    )

@@ -1,0 +1,34 @@
+"""``Telemetry`` — the scan-carried trajectory record (DESIGN.md §15).
+
+Consumers accept ``telemetry: bool = False`` and, when asked, return a
+``Telemetry`` alongside their usual outputs:
+
+- ``run_filter`` / ``run_filter_bank``   → ``steps`` holds one ``StepStats``
+  per observation (``[T]`` per field; banks ``[S, T]``, matching the
+  estimate layout).
+- ``run_smc_sampler`` / ``_bank``        → ``steps`` per temperature, plus
+  ``accept`` (RWM/MALA acceptance rate per temperature) and ``betas`` (the
+  adaptive β ladder actually visited).
+- ``smc_decode``                         → ``steps`` per generated token.
+
+The record is built from values the scans ALREADY compute — enabling it
+adds zero kernel launches and must not perturb the ancestor-stream jaxpr
+(analyzer pass 6 audits exactly this).  When off, consumers return their
+historical shapes and the record is structurally absent from the trace:
+the flag is Python-static, so disabled telemetry is not an empty pytree
+in the jaxpr — it is nothing at all.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.obs.stats import StepStats
+
+
+class Telemetry(NamedTuple):
+    steps: StepStats
+    accept: Optional[jnp.ndarray] = None
+    betas: Optional[jnp.ndarray] = None

@@ -29,11 +29,16 @@ import jax.numpy as jnp
 
 from repro.core.metrics import (
     effective_sample_size,
+    log_mean_weight,
     log_weights_from_linear,
+    max_normalised_weight,
     normalise_log_weights,
+    unique_ancestor_count,
 )
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import ResamplerSpec, coerce_spec
+from repro.obs.stats import StepStats
+from repro.obs.telemetry import Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,25 +111,30 @@ class ParticleFilter:
         return self._built.spec
 
     def step(self, key, particles, z, t, theta=None):
-        """One SIR step (Alg. 6): returns (particles', estimate, weights).
+        """One SIR step (Alg. 6): returns
+        ``(particles', estimate, weights, ancestors)``.
 
         Stage 2 runs the FUSED resample+gather path (``Resampler.apply``,
         DESIGN.md §11): on kernel backends the ancestor indices never
         round-trip through HBM — the kernel selects the ancestor and copies
         its state in VMEM; on reference/xla the same call is the classic
-        index-then-gather composition, bit-identically."""
+        index-then-gather composition, bit-identically.  The ancestors are
+        the launch's own int32 output (telemetry composes survivor counts
+        from them, DESIGN.md §15); callers that drop them compile the
+        pre-telemetry program unchanged."""
         k_pred, k_res = jax.random.split(key)
         # Stage 1: predict + update
         x = _call(self.model.transition, k_pred, particles, t, theta=theta)
         w = _call(self.model.likelihood, z, x, t, theta=theta)
         # Stage 2: fused resample + ancestor gather
-        x_bar, _ = self._built.apply(k_res, w, x)
+        x_bar, ancestors = self._built.apply(k_res, w, x)
         # Stage 3: estimate (uniform post-resampling weights)
-        return x_bar, jnp.mean(x_bar), w
+        return x_bar, jnp.mean(x_bar), w, ancestors
 
     def step_conditional(self, key, particles, log_w, z, t, theta=None):
         """One conditional-SIR step (classic ESS-triggered SIR, DESIGN.md
-        §12): returns ``(particles', log_w', estimate, ess_norm)``.
+        §12): returns ``(particles', log_w', estimate, stats)`` with
+        ``stats`` the step's ``StepStats`` record (DESIGN.md §15).
 
         Log-weights accumulate across steps; stage 2 is the FUSED
         ``Resampler.step`` — normalise, ESS, the resample-or-not branch and
@@ -141,13 +151,13 @@ class ParticleFilter:
         wn = normalise_log_weights(log_w)
         est = jnp.sum(wn * x) / jnp.sum(wn)
         # Stage 2: fused normalise → ESS → conditional resample → gather
-        x_bar, _, ess_norm, _ = self._built.step(
+        x_bar, _, stats = self._built.step(
             k_res, log_w, x, self.ess_threshold
         )
         log_w = jnp.where(
-            ess_norm < self.ess_threshold, jnp.zeros_like(log_w), log_w
+            stats.ess_norm < self.ess_threshold, jnp.zeros_like(log_w), log_w
         )
-        return x_bar, log_w, est, ess_norm
+        return x_bar, log_w, est, stats
 
 
 def _call(fn, *args, theta=None):
@@ -172,56 +182,109 @@ def simulate(key, model: StateSpaceModel, num_steps: int, theta=None):
     return xs, zs
 
 
+def _alg6_step_stats(w: jnp.ndarray, ancestors: jnp.ndarray,
+                     axis: int = -1) -> StepStats:
+    """Compose the ``StepStats`` record of an UNCONDITIONAL (Alg. 6) step
+    from the values the step already produced: the resample always fires
+    (``resampled ≡ 1``), so the evidence increment is unconditionally
+    ``log_mean_weight``.  Uses the same ``core.metrics`` helpers the fused
+    step kernels mirror, so the record means the same thing in both filter
+    modes.  Batched inputs (``[S, N]`` weights + ``[S, N]`` ancestors)
+    yield batched ``[S]`` records."""
+    lw = log_weights_from_linear(w)
+    n = w.shape[axis]
+    return StepStats(
+        ess_norm=effective_sample_size(lw, axis=axis) / jnp.float32(n),
+        log_evidence_incr=log_mean_weight(lw, axis=axis),
+        resampled=jnp.ones(w.shape[:-1], jnp.float32),
+        max_weight=max_normalised_weight(lw, axis=axis),
+        survivors=unique_ancestor_count(ancestors, axis=axis),
+    )
+
+
 def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
-               with_ess: bool = False):
+               telemetry: bool = False, with_ess: bool = False):
     """Jitted scan over time; returns estimates f32[T].
 
-    ``with_ess=True`` additionally returns the normalised pre-resampling ESS
-    per step (f32[T] in [0, 1]) — the standard degeneracy diagnostic,
-    computed with the shared ``repro.core.metrics`` helpers.  With the
-    default ``pf.ess_threshold=None`` (Alg. 6, unconditional resample) ESS
-    is a health signal, not a trigger; with a threshold set the filter runs
-    classic conditional SIR (``step_conditional``) and the SAME ess_norm is
-    both the trigger and the diagnostic — one fused ``Resampler.step``
-    launch per time step on kernel backends (DESIGN.md §12).
+    ``telemetry=True`` additionally returns a ``Telemetry`` record whose
+    ``steps`` field holds one ``StepStats`` per time step (every field
+    f32/int32[T] — DESIGN.md §15): the resample trigger diagnostics
+    (ess_norm, max_weight), the evidence ledger (log_evidence_incr), and
+    the degeneracy counters (resampled, survivors).  With the default
+    ``pf.ess_threshold=None`` (Alg. 6, unconditional resample) the stats
+    are composed from the values the step already computes; with a
+    threshold set the filter runs classic conditional SIR
+    (``step_conditional``) and the record IS the fused step's own output —
+    still one ``Resampler.step`` launch per time step on kernel backends
+    (DESIGN.md §12).  Telemetry never changes the computation: same launch
+    counts, bit-identical estimates (analyzer pass 6); disabled, it is
+    structurally absent from the jaxpr.
+
+    ``with_ess=True`` is the DEPRECATED pre-telemetry diagnostic: it still
+    returns the old ``(estimates, ess_norm[T])`` pair (bit-identical to
+    ``Telemetry.steps.ess_norm``) with a ``DeprecationWarning``.
 
     Peak-memory note (DESIGN.md §11): the resample stage is the fused
     ``Resampler.apply`` (or ``Resampler.step``), so the scan body's live
     set at the resample boundary is the in/out particle buffers only — no
-    int32 ancestor vector, and (unless ``with_ess`` asks for it) no weight
+    int32 ancestor vector, and (unless telemetry asks for it) no weight
     buffer escapes the step into the scan's stacked outputs.  The
     accounting lives in ``launch/memmodel.py::resample_step_bytes``.
     """
+    if with_ess:
+        if telemetry:
+            raise ValueError(
+                "run_filter: pass telemetry=True OR the deprecated "
+                "with_ess=True, not both"
+            )
+        warnings.warn(
+            "run_filter(with_ess=True) is deprecated; use telemetry=True and "
+            "read Telemetry.steps.ess_norm (DESIGN.md §15)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     conditional = pf.ess_threshold is not None
+    record = telemetry or with_ess
 
     def body(carry, inp):
         particles, log_w, k = carry
         t, z = inp
         k, ks = jax.random.split(k)
         if conditional:
-            particles, log_w, est, ess_norm = pf.step_conditional(
+            particles, log_w, est, stats = pf.step_conditional(
                 ks, particles, log_w, z, t, theta=theta
             )
-            out = (est, ess_norm) if with_ess else est
+            out = (est, stats) if record else est
             return (particles, log_w, k), out
-        particles, est, w = pf.step(ks, particles, z, t, theta=theta)
-        if not with_ess:
+        particles, est, w, ancestors = pf.step(ks, particles, z, t, theta=theta)
+        if not record:
             # Don't thread the pre-resample weight buffer into the scan
             # outputs when nobody consumes it — the diagnostic is opt-in.
             return (particles, log_w, k), est
-        ess_norm = effective_sample_size(log_weights_from_linear(w)) / w.shape[0]
-        return (particles, log_w, k), (est, ess_norm)
+        return (particles, log_w, k), (est, _alg6_step_stats(w, ancestors))
 
     k0, key = jax.random.split(key)
     particles = pf.model.init(k0, pf.num_particles)
     log_w0 = jnp.zeros((pf.num_particles,), jnp.float32)
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
     _, out = jax.lax.scan(body, (particles, log_w0, key), (ts, observations))
-    return out
+    if not record:
+        return out
+    ests, steps = out
+    if with_ess:
+        return ests, steps.ess_norm
+    return ests, Telemetry(steps=steps)
 
 
-def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=None):
+def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=None,
+                    telemetry: bool = False):
     """Run S independent filters in ONE jitted scan; returns estimates f32[S, T].
+
+    ``telemetry=True`` additionally returns a ``Telemetry`` record with one
+    ``StepStats`` per scenario per step (every field ``[S, T]``, matching
+    the estimate layout); row ``s`` is bit-identical to the single filter's
+    record.  Off (the default), the record is structurally absent from the
+    jaxpr (DESIGN.md §15).
 
     The scenario axis (DESIGN.md §4): ``observations`` is ``[S, T]`` — one
     observation stream per scenario; ``thetas`` (optional) is a pytree whose
@@ -275,24 +338,32 @@ def run_filter_bank(key, pf: ParticleFilter, observations: jnp.ndarray, thetas=N
             log_w = log_w + log_weights_from_linear(w)
             wn = normalise_log_weights(log_w, axis=-1)
             est = jnp.sum(wn * x, axis=1) / jnp.sum(wn, axis=1)
-            x_bar, _, ess_norm, _ = resampler.step_rows(
+            x_bar, _, stats = resampler.step_rows(
                 k_res, log_w, x, pf.ess_threshold
             )
             log_w = jnp.where(
-                (ess_norm < pf.ess_threshold)[:, None], 0.0, log_w
+                (stats.ess_norm < pf.ess_threshold)[:, None], 0.0, log_w
             )
-            return (x_bar, log_w, ks_next), est
+            out = (est, stats) if telemetry else est
+            return (x_bar, log_w, ks_next), out
         # Stage 2: ONE batched FUSED resample+gather launch for the whole
         # bank (Resampler.apply_rows, DESIGN.md §11) — on the batch-grid
         # kernel families this is a single fused launch per step
-        x_bar, _ = resampler.apply_rows(k_res, w, x)
+        x_bar, ancestors = resampler.apply_rows(k_res, w, x)
         # Stage 3 (batched): estimate
-        return (x_bar, log_w, ks_next), jnp.mean(x_bar, axis=1)
+        est = jnp.mean(x_bar, axis=1)
+        out = (est, _alg6_step_stats(w, ancestors)) if telemetry else est
+        return (x_bar, log_w, ks_next), out
 
     log_w0 = jnp.zeros((num_s, pf.num_particles), jnp.float32)
     ts = jnp.arange(1, observations.shape[1] + 1, dtype=jnp.float32)
-    _, ests = jax.lax.scan(body, (particles, log_w0, carry_keys), (ts, observations.T))
-    return ests.T
+    _, out = jax.lax.scan(body, (particles, log_w0, carry_keys), (ts, observations.T))
+    if not telemetry:
+        return out.T
+    ests, steps = out
+    # Scan stacks time first ([T, S] per field); transpose to the [S, T]
+    # estimate layout so row s is the single filter's trajectory.
+    return ests.T, Telemetry(steps=jax.tree.map(jnp.transpose, steps))
 
 
 def run_filter_timed(key, pf: ParticleFilter, observations, warmup: int = 2):

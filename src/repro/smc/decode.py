@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.core.metrics import effective_sample_size
 from repro.core.spec import ResamplerSpec, coerce_spec
 from repro.models import ModelConfig, decode_step
+from repro.obs.telemetry import Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,11 +84,18 @@ def smc_decode(
     start_pos,  # scalar int32 — position of first_tokens
     key,
     twist: Optional[Callable] = None,
+    telemetry: bool = False,
 ):
     """Returns (tokens (N, T), log_weights (N,), stats dict).
 
     ``caches`` must be prefilled for ``start_pos`` (see models.prefill);
     particle i's hypothesis extends ``first_tokens[i]``.
+
+    ``telemetry=True`` (DESIGN.md §15) returns
+    ``(tokens, log_weights, stats, Telemetry)`` with ``Telemetry.steps``
+    carrying one ``StepStats`` per generated token (fields ``[T]``) — all
+    values the decode scan already computes, so the flag adds zero
+    launches and leaves the first three outputs bit-identical.
     """
     n = smc_cfg.num_particles
     twist_fn = twist or partial(_default_twist, cfg=smc_cfg)
@@ -103,13 +111,13 @@ def smc_decode(
         # gather is a no-op copy and every output is bit-identical to the
         # untriggered path.  (Trigger is ess/N < threshold — same fraction
         # as the old ess < threshold*N form, now computed on-chip.)
-        new_tokens, ancestors, ess_norm, _ = resampler.step(
+        new_tokens, ancestors, step_stats = resampler.step(
             k, log_w, tokens_so_far, smc_cfg.ess_threshold
         )
-        trigger = ess_norm < smc_cfg.ess_threshold
+        trigger = step_stats.ess_norm < smc_cfg.ess_threshold
         new_caches = jax.tree.map(lambda c: jnp.take(c, ancestors, axis=0), caches)
         log_w = jnp.where(trigger, jnp.zeros_like(log_w), log_w)
-        return log_w, new_caches, new_tokens, trigger.astype(jnp.int32)
+        return log_w, new_caches, new_tokens, trigger.astype(jnp.int32), step_stats
 
     def step(carry, step_key):
         tokens_prev, pos, log_w, caches, out_buf, n_resamples, t = carry
@@ -121,15 +129,22 @@ def smc_decode(
         ).astype(jnp.int32)
         log_w = log_w + twist_fn(logits, next_tok)
         out_buf = out_buf.at[:, t].set(next_tok)
-        log_w, caches, out_buf, did = maybe_resample(k_res, log_w, caches, out_buf)
-        return (next_tok, pos + 1, log_w, caches, out_buf, n_resamples + did, t + 1), ess(log_w)
+        log_w, caches, out_buf, did, step_stats = maybe_resample(
+            k_res, log_w, caches, out_buf
+        )
+        ys = (ess(log_w),)
+        if telemetry:  # Python-static: absent from the trace when off
+            ys = ys + (step_stats,)
+        return (next_tok, pos + 1, log_w, caches, out_buf, n_resamples + did, t + 1), ys
 
     out_buf = jnp.zeros((n, smc_cfg.max_new_tokens), jnp.int32)
     log_w0 = jnp.zeros((n,), jnp.float32)
     keys = jax.random.split(key, smc_cfg.max_new_tokens)
     carry0 = (first_tokens, jnp.asarray(start_pos, jnp.int32), log_w0, caches,
               out_buf, jnp.int32(0), jnp.int32(0))
-    carry, ess_hist = jax.lax.scan(step, carry0, keys)
+    carry, ys = jax.lax.scan(step, carry0, keys)
     _, _, log_w, caches, out_buf, n_resamples, _ = carry
-    stats = {"ess_history": ess_hist, "num_resamples": n_resamples}
+    stats = {"ess_history": ys[0], "num_resamples": n_resamples}
+    if telemetry:
+        return out_buf, log_w, stats, Telemetry(steps=ys[1])
     return out_buf, log_w, stats

@@ -311,7 +311,7 @@ def test_filter_step_is_fused_and_matches_reference(base_key):
     )
     particles = pf.model.init(jax.random.PRNGKey(30), TILE)
     z = jnp.float32(0.3)
-    x_bar, est, w = pf.step(base_key, particles, z, jnp.float32(1.0))
+    x_bar, est, w, _ = pf.step(base_key, particles, z, jnp.float32(1.0))
     # replay the step manually through the index path
     k_pred, k_res = jax.random.split(base_key)
     x = pf.model.transition(k_pred, particles, jnp.float32(1.0))

@@ -108,10 +108,10 @@ def test_step_noop_branch_passes_quantised_state(name, base_key):
                         plane_dtype="bfloat16").build()
     lw = jax.random.normal(jax.random.PRNGKey(3), (N,)) * 2.0
     p = jax.random.normal(jax.random.PRNGKey(4), (N, 4))
-    p_out, anc, _, incr = r.step(base_key, lw, p, 0.0)
+    p_out, anc, stats = r.step(base_key, lw, p, 0.0)
     np.testing.assert_array_equal(np.asarray(anc), np.arange(N))
     np.testing.assert_array_equal(np.asarray(p_out), np.asarray(r.quantise(p)))
-    assert float(incr) == 0.0
+    assert float(stats.log_evidence_incr) == 0.0
 
 
 def test_apply_int_state_keeps_dtype_at_bf16(base_key):

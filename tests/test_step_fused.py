@@ -34,8 +34,11 @@ from repro.core.metrics import (
     effective_sample_size,
     log_mean_weight,
     log_weights_from_linear,
+    max_normalised_weight,
     normalise_log_weights,
+    unique_ancestor_count,
 )
+from repro.obs.stats import stats_from_vector
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.spec import spec_for_backend
 from repro.kernels.common import MAX_VMEM_STATE, STATE_PLANE_TILE, TILE
@@ -98,12 +101,20 @@ def _assert_equal(a, b):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def _assert_tree_equal(got, exp):
+    """Bit-exact over every leaf (particles, ancestors, StepStats)."""
+    for g, e in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(exp)):
+        _assert_equal(g, e)
+
+
 def _composed_step(r, key, log_w, particles, thr):
     """The oracle: normalise → ESS → branch → apply, from shared metrics
     helpers and the SAME backend's fused apply — what ``step`` must equal
-    bit for bit.  Inputs land on the plane-dtype grid first (DESIGN.md
-    §14, identity at f32); ``r.apply`` re-lands the normalised weights on
-    the same grid, matching the fused step's in-kernel requantise."""
+    bit for bit, including the §15 ``StepStats`` record.  Inputs land on
+    the plane-dtype grid first (DESIGN.md §14, identity at f32);
+    ``r.apply`` re-lands the normalised weights on the same grid,
+    matching the fused step's in-kernel requantise."""
     log_w = r.quantise(log_w)
     particles = r.quantise(particles)
     n = log_w.shape[-1]
@@ -114,7 +125,15 @@ def _composed_step(r, key, log_w, particles, thr):
     ancestors = jnp.where(do, a_res, jnp.arange(n, dtype=jnp.int32))
     p_out = jnp.where(do, p_res, particles)
     incr = jnp.where(do, log_mean_weight(log_w), jnp.float32(0.0))
-    return p_out, ancestors, ess_n, incr
+    stats4 = jnp.stack([
+        ess_n,
+        incr,
+        jnp.where(do, jnp.float32(1.0), jnp.float32(0.0)),
+        max_normalised_weight(log_w),
+    ])
+    return p_out, ancestors, stats_from_vector(
+        stats4, unique_ancestor_count(ancestors)
+    )
 
 
 # ------------------------------------------------- 1. composition parity
@@ -127,8 +146,7 @@ def test_step_single_matches_composition(name, backend, thr, plane_dtype,
     r = _build(name, backend, plane_dtype=plane_dtype)
     exp = _composed_step(r, base_key, lw_spread, p_single, thr)
     got = r.step(base_key, lw_spread, p_single, thr)
-    for g, e in zip(got, exp):
-        _assert_equal(g, e)
+    _assert_tree_equal(got, exp)
 
 
 @pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
@@ -143,7 +161,8 @@ def test_step_rows_matches_single(name, backend, plane_dtype, lw_bank, p_bank,
     got = r.step_rows(keys, lw_bank, p_bank, 0.7)
     for b in range(BATCH):
         exp = r.step(keys[b], lw_bank[b], p_bank[b], 0.7)
-        for g, e in zip(got, exp):
+        for g, e in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(exp)):
             _assert_equal(g[b], e)
 
 
@@ -158,13 +177,16 @@ def test_step_rows_mixed_branches(name, p_bank, base_key):
     ])
     r = _build(name, "pallas_interpret")
     keys = split_batch_keys(base_key, BATCH)
-    p_out, anc, ess_n, incr = r.step_rows(keys, lw, p_bank, 0.7)
-    fired = np.asarray(ess_n) < 0.7
+    p_out, anc, stats = r.step_rows(keys, lw, p_bank, 0.7)
+    fired = np.asarray(stats.ess_norm) < 0.7
     assert list(fired) == [True, False, True]
+    assert list(np.asarray(stats.resampled)) == [1.0, 0.0, 1.0]
     _assert_equal(anc[1], jnp.arange(N, dtype=jnp.int32))
     _assert_equal(p_out[1], p_bank[1])
-    assert float(incr[1]) == 0.0
+    assert float(stats.log_evidence_incr[1]) == 0.0
+    assert int(stats.survivors[1]) == N  # identity ancestors: all survive
     assert not np.array_equal(np.asarray(anc[0]), np.arange(N))
+    assert int(stats.survivors[0]) < N  # a real resample drops particles
 
 
 # ------------------------------------------------------- 2. no-op branch
@@ -175,14 +197,15 @@ def test_step_noop_branch(name, backend, lw_flat, p_single, base_key):
     incr == 0, and the result is key-independent (the key is consumed but
     the untaken branch's draws are discarded)."""
     r = _build(name, backend)
-    p_out, anc, ess_n, incr = r.step(base_key, lw_flat, p_single, 0.5)
-    assert float(ess_n) >= 0.5
+    p_out, anc, stats = r.step(base_key, lw_flat, p_single, 0.5)
+    assert float(stats.ess_norm) >= 0.5
     _assert_equal(p_out, p_single)
     _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
-    assert float(incr) == 0.0
+    assert float(stats.log_evidence_incr) == 0.0
+    assert float(stats.resampled) == 0.0
+    assert int(stats.survivors) == N
     other = r.step(jax.random.PRNGKey(999), lw_flat, p_single, 0.5)
-    for g, e in zip(other, (p_out, anc, ess_n, incr)):
-        _assert_equal(g, e)
+    _assert_tree_equal(other, (p_out, anc, stats))
 
 
 # ---------------------------------------------------- 3. threshold edges
@@ -191,26 +214,27 @@ def test_step_noop_branch(name, backend, lw_flat, p_single, base_key):
 def test_step_threshold_edges(name, backend, lw_spread, p_single, base_key):
     r = _build(name, backend)
     # thr = 0.0 never fires: ess_norm > 0 and the trigger is strict <
-    p_out, anc, _, incr = r.step(base_key, lw_spread, p_single, 0.0)
+    p_out, anc, stats = r.step(base_key, lw_spread, p_single, 0.0)
     _assert_equal(p_out, p_single)
     _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
-    assert float(incr) == 0.0
+    assert float(stats.log_evidence_incr) == 0.0
     # thr = 1.0 on exactly-uniform weights: ess_norm == 1.0 exactly (f32
     # integer sums are exact at this N), strict < does not fire
     lw_uniform = jnp.zeros((N,), jnp.float32)
-    p_out, anc, ess_n, _ = r.step(base_key, lw_uniform, p_single, 1.0)
-    assert float(ess_n) == 1.0
+    p_out, anc, stats = r.step(base_key, lw_uniform, p_single, 1.0)
+    assert float(stats.ess_norm) == 1.0
     _assert_equal(p_out, p_single)
     _assert_equal(anc, jnp.arange(N, dtype=jnp.int32))
     # exactly AT threshold: strict < does not fire
     ess_thr = effective_sample_size(lw_spread) / jnp.float32(N)
-    p_out, anc, _, _ = r.step(base_key, lw_spread, p_single, ess_thr)
+    p_out, anc, _ = r.step(base_key, lw_spread, p_single, ess_thr)
     _assert_equal(p_out, p_single)
     # nudge one ulp above: fires
     above = jnp.nextafter(ess_thr, jnp.float32(2.0))
-    _, anc_fire, _, incr_fire = r.step(base_key, lw_spread, p_single, above)
+    _, anc_fire, stats_fire = r.step(base_key, lw_spread, p_single, above)
     assert not np.array_equal(np.asarray(anc_fire), np.arange(N))
-    assert float(incr_fire) != 0.0
+    assert float(stats_fire.log_evidence_incr) != 0.0
+    assert float(stats_fire.resampled) == 1.0
 
 
 # ------------------------------------------------- 'auto' num_iters rows
@@ -223,7 +247,8 @@ def test_step_auto_iters_rows(name, lw_bank, p_bank, base_key):
     got = r.step_rows(keys, lw_bank, p_bank, 0.7)
     for b in range(BATCH):
         exp = r.step(keys[b], lw_bank[b], p_bank[b], 0.7)
-        for g, e in zip(got, exp):
+        for g, e in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(exp)):
             _assert_equal(g[b], e)
 
 
@@ -268,13 +293,13 @@ def _check_degenerate_step(name, backend, case, thr):
     p = jax.random.normal(jax.random.PRNGKey(41), (N, 2))
     r = _build(name, backend)
     key = jax.random.PRNGKey(42)
-    p_out, anc, ess_n, incr = r.step(key, lw, p, thr)
-    assert bool(jnp.isfinite(ess_n))
-    assert bool(jnp.isfinite(incr))
+    p_out, anc, stats = r.step(key, lw, p, thr)
+    assert bool(jnp.isfinite(stats.ess_norm))
+    assert bool(jnp.isfinite(stats.log_evidence_incr))
+    assert bool(jnp.isfinite(stats.max_weight))
     assert bool(jnp.all(jnp.isfinite(p_out)))
     exp = _composed_step(r, key, lw, p, thr)
-    for g, e in zip((p_out, anc, ess_n, incr), exp):
-        _assert_equal(g, e)
+    _assert_tree_equal((p_out, anc, stats), exp)
 
 
 _DEGEN_FAMILIES = ("megopolis", "metropolis", "rejection", "systematic", "residual")
@@ -411,15 +436,15 @@ def test_conditional_filter_step_matches_manual_replay(base_key):
     particles = pf.model.init(jax.random.PRNGKey(51), TILE)
     log_w0 = jnp.zeros((TILE,), jnp.float32)
     z, t = jnp.float32(0.3), jnp.float32(1.0)
-    x_bar, log_w1, est, ess_n = pf.step_conditional(base_key, particles, log_w0, z, t)
+    x_bar, log_w1, est, stats = pf.step_conditional(base_key, particles, log_w0, z, t)
     # manual replay
     k_pred, k_res = jax.random.split(base_key)
     x = pf.model.transition(k_pred, particles, t)
     lw = log_w0 + log_weights_from_linear(pf.model.likelihood(z, x, t))
     exp = _composed_step(pf._built, k_res, lw, x, 0.5)
     _assert_equal(x_bar, exp[0])
-    _assert_equal(ess_n, exp[2])
+    _assert_tree_equal(stats, exp[2])
     wn = normalise_log_weights(lw)
     _assert_equal(est, jnp.sum(wn * x) / jnp.sum(wn))
-    fired = bool(ess_n < 0.5)
+    fired = bool(stats.ess_norm < 0.5)
     _assert_equal(log_w1, jnp.zeros_like(lw) if fired else lw)
