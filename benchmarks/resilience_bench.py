@@ -1,0 +1,137 @@
+"""Resilience suite — guard overhead + chaos matrix as bench artifacts
+(DESIGN.md §16).
+
+Two tables into ``BENCH_resilience.json``:
+
+* **guard overhead** — wall time of the fused step per guard policy on a
+  clean bank (family × policy).  The §16 claim is that ``'flag'`` is the
+  identical program and ``'recover'`` adds only a pre-dispatch
+  ``jnp.where``, so the ratios should sit at ~1; the numbers land in the
+  trajectory JSON so a regression is visible as data, not just as a
+  failed analyzer pass.
+* **chaos matrix** — every ``FAULT_CLASSES`` signature through every
+  family's recovered step: finite outputs, in-range ancestors, the
+  degenerate flag where the taxonomy demands it.  Exit code is the gate:
+  non-zero if any cell emitted garbage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ensure_out, print_table
+
+N = 4096
+REPS = 5
+FAMILIES = ("megopolis", "metropolis", "rejection", "systematic", "residual")
+BACKEND = "pallas_interpret"
+
+
+def _build(name, guard, backend=BACKEND):
+    from repro.core.spec import spec_for_backend
+
+    return spec_for_backend(name, backend, num_iters=16, max_iters=64,
+                            guard=guard).build()
+
+
+def _time_step(r, key, lw, p, thr):
+    jax.block_until_ready(r.step(key, lw, p, thr))  # warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        jax.block_until_ready(r.step(key, lw, p, thr))
+    return (time.perf_counter() - t0) / REPS
+
+
+def guard_overhead_rows(quick: bool):
+    from repro.resilience import GUARD_POLICIES
+
+    key = jax.random.PRNGKey(0)
+    lw = jax.random.normal(jax.random.PRNGKey(1), (N,)) * 2.0
+    p = jax.random.normal(jax.random.PRNGKey(2), (N, 2))
+    rows = []
+    for name in FAMILIES[:2] if quick else FAMILIES:
+        times = {
+            g: _time_step(_build(name, g), key, lw, p, 0.5)
+            for g in GUARD_POLICIES
+        }
+        rows.append({
+            "family": name,
+            **{f"{g}_ms": round(times[g] * 1e3, 3) for g in GUARD_POLICIES},
+            "flag_ratio": round(times["flag"] / times["off"], 3),
+            "recover_ratio": round(times["recover"] / times["off"], 3),
+        })
+    return rows
+
+
+def chaos_rows(quick: bool):
+    from repro.resilience import FAULT_CLASSES, validate_ancestors
+    from repro.resilience.errors import ResilienceError
+
+    collapsed = ("all_nan", "all_neg_inf")
+    key = jax.random.PRNGKey(3)
+    p = jax.random.normal(jax.random.PRNGKey(4), (N, 2))
+    rows = []
+    for name in FAMILIES[:2] if quick else FAMILIES:
+        r = _build(name, "recover")
+        for fault, gen in sorted(FAULT_CLASSES.items()):
+            status, detail = "recovered", ""
+            try:
+                p_out, anc, stats = r.step(key, gen(N), p, 2.0)
+                validate_ancestors(np.asarray(anc), N)
+                finite = bool(np.isfinite(np.asarray(p_out)).all())
+                flagged = bool(np.asarray(stats.degenerate))
+                ok = finite and flagged == (fault in collapsed)
+                if not ok:
+                    status = "garbage"
+                    detail = f"finite={finite} degenerate={flagged}"
+            except ResilienceError as err:
+                status, detail = "typed_error", type(err).__name__
+            except Exception as err:  # noqa: BLE001 — the failure IS the data
+                status, detail = "untyped_error", f"{type(err).__name__}: {err}"
+            rows.append({
+                "family": name,
+                "fault": fault,
+                "status": status,
+                "ok": status in ("recovered", "typed_error"),
+                "detail": detail,
+            })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two families instead of five")
+    args = ap.parse_args(argv)
+
+    overhead = guard_overhead_rows(args.quick)
+    print_table(overhead)
+    chaos = chaos_rows(args.quick)
+    print_table(chaos, cols=["family", "fault", "status", "ok", "detail"])
+
+    ok = all(c["ok"] for c in chaos)
+    payload = {
+        "ok": ok,
+        "backend": BACKEND,
+        "n": N,
+        "guard_overhead": overhead,
+        "chaos": chaos,
+    }
+    path = os.path.join(ensure_out(), "BENCH_resilience.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,10 +42,11 @@ SUITES = [
     ("fused_gather", "benchmarks.fused_gather_bench", ["--quick"]),
     ("step", "benchmarks.step_bench", ["--quick"]),
     ("analysis", "benchmarks.analysis_bench", []),
+    ("resilience", "benchmarks.resilience_bench", ["--quick"]),
 ]
 # Suites whose CLI has no --full flag (or whose scale is pinned above).
 _NO_FULL = ("transactions", "kernel", "smc", "filter_bank", "ais",
-            "fused_gather", "step", "analysis")
+            "fused_gather", "step", "analysis", "resilience")
 
 
 def _check_suite_names(names, flag: str):

@@ -38,6 +38,7 @@ import numpy as np
 
 from benchmarks.common import OUT_DIR, ensure_out, print_table, write_csv
 from repro.core.metrics import (
+    degenerate_log_weights,
     effective_sample_size,
     log_mean_weight,
     max_normalised_weight,
@@ -95,7 +96,8 @@ def _composed(r, key, log_w, particles, thr):
         max_normalised_weight(log_w),
     ])
     return p_out, ancestors, stats_from_vector(
-        stats4, unique_ancestor_count(ancestors)
+        stats4, unique_ancestor_count(ancestors),
+        degenerate_log_weights(log_w)
     )
 
 

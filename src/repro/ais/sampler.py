@@ -130,7 +130,8 @@ def _logz_increment(log_w: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def run_smc_sampler(
-    key, target: Target, cfg: SMCSamplerConfig, theta=None, telemetry=False
+    key, target: Target, cfg: SMCSamplerConfig, theta=None, telemetry=False,
+    checkpoint=None,
 ):
     """Anneal π0 → γ; returns a dict pytree:
 
@@ -151,6 +152,12 @@ def run_smc_sampler(
     Fully jittable (wrap in ``jax.jit``; the config and target are closed
     over as static).  ``theta`` selects a scenario of a theta-family
     target and is what ``run_smc_sampler_bank`` maps over.
+
+    ``checkpoint`` (a ``repro.resilience.CheckpointPolicy``) chunks the
+    temperature scan at the snapshot period with durable carry snapshots
+    between chunks — kill-and-resume returns the bit-identical result
+    (DESIGN.md §16; host-loop chunking, so pair it with eager use, not an
+    outer ``jax.jit``).
     """
     n = cfg.num_particles
     resampler = cfg.resampler_spec().build()
@@ -215,7 +222,12 @@ def run_smc_sampler(
         key,
         jnp.int32(0),
     )
-    carry, ys = jax.lax.scan(body, carry0, betas_in)
+    if checkpoint is None:
+        carry, ys = jax.lax.scan(body, carry0, betas_in)
+    else:
+        from repro.resilience.checkpointing import checkpointed_scan
+
+        carry, ys = checkpointed_scan(body, carry0, betas_in, checkpoint)
     betas, ess_hist, accepts = ys[:3]
     x, log_w, log_z, _, _, _, n_res = carry
     result = {

@@ -16,6 +16,11 @@ from repro.analysis.contracts import (
     audit_matrix,
     trace_cell,
 )
+from repro.analysis.guards import (
+    audit_guard_cell,
+    audit_guards,
+    compare_guard_traces,
+)
 from repro.analysis.report import build_report, summarise, transaction_report
 from repro.analysis.rng import rng_findings
 from repro.analysis.vmem import kernel_footprints, vmem_findings
@@ -35,9 +40,12 @@ __all__ = [
     "Waiver",
     "ancestor_roundtrips",
     "audit_consumers",
+    "audit_guard_cell",
+    "audit_guards",
     "audit_jaxpr",
     "audit_matrix",
     "auto_reference_rng",
+    "compare_guard_traces",
     "build_report",
     "count_pallas_calls",
     "count_primitive",

@@ -4,7 +4,7 @@
                              [--families megopolis,...]
                              [--backends pallas_interpret,...]
                              [--no-consumers] [--no-transactions]
-                             [--no-telemetry]
+                             [--no-telemetry] [--no-resilience]
     python -m repro.analysis --selftest
 
 ``--check`` exits non-zero on any unwaived violation; ``--selftest``
@@ -50,6 +50,8 @@ def main(argv=None) -> int:
                     help="skip the §2.4 transaction pricing")
     ap.add_argument("--no-telemetry", action="store_true",
                     help="skip the §15 telemetry-neutrality pass")
+    ap.add_argument("--no-resilience", action="store_true",
+                    help="skip the §16 guard-neutrality pass")
     args = ap.parse_args(argv)
 
     if not (args.check or args.selftest):
@@ -80,6 +82,7 @@ def main(argv=None) -> int:
             large_n=not args.no_large_n,
             transactions=not args.no_transactions,
             telemetry=not args.no_telemetry,
+            resilience=not args.no_resilience,
             **kw,
         )
         if args.json:

@@ -177,6 +177,74 @@ def telemetry_selftest() -> list[str]:
     return problems
 
 
+def leaky_guard():
+    """The pass-7 anti-fixture: a 'resampler' whose guard axis is NOT
+    neutral — ``'flag'`` adds equations to the step program, and
+    ``'recover'`` stages the state through an extra launch AND emits NaN
+    state on a degenerate bank, so all three §16 checks (flag-jaxpr
+    identity, recover launch parity, degenerate recovery) must fire."""
+    from types import SimpleNamespace
+
+    from repro.obs.stats import StepStats
+
+    def make(mode):
+        def step(key, lw, p, thr):
+            n = lw.shape[0]
+            deg = ~jnp.isfinite(jnp.max(lw))
+            ancestors = jnp.arange(n, dtype=jnp.int32)
+            p_out = p
+            if mode == "flag_leak":
+                p_out = p + 0.0 * jnp.float32(1.0)  # a visible extra op
+            if mode == "recover_leak":
+                p_out = _copy_launch(p)  # an extra launch just to recover
+                p_out = jnp.where(deg, jnp.float32(jnp.nan), p_out)  # garbage
+            stats = StepStats(
+                ess_norm=jnp.float32(1.0),
+                log_evidence_incr=jnp.float32(0.0),
+                resampled=jnp.float32(1.0),
+                max_weight=jnp.float32(1.0 / n),
+                survivors=jnp.int32(n),
+                degenerate=deg,
+            )
+            return p_out, ancestors, stats
+
+        return SimpleNamespace(step=step)
+
+    return make("off"), make("flag_leak"), make("recover_leak")
+
+
+def guard_selftest() -> list[str]:
+    """Pass 7 must flag the leaky fixture (all three violations) and pass
+    a real cell; returns problems, empty when healthy."""
+    from repro.analysis.guards import audit_guard_cell, compare_guard_traces
+
+    problems = []
+    rep = compare_guard_traces(
+        "fixture:leaky_guard", *leaky_guard(), concrete=True
+    )
+    if rep["ok"]:
+        problems.append("leaky_guard: expected §16 violations, got none")
+    else:
+        if rep["flag_jaxpr_match"]:
+            problems.append(
+                "leaky_guard: expected the flag-jaxpr-identity check to fire"
+            )
+        if rep["launches_recover"] == rep["launches_off"]:
+            problems.append(
+                "leaky_guard: expected the recover launch-parity check to fire"
+            )
+        if rep["degenerate_recovered"]:
+            problems.append(
+                "leaky_guard: expected the degenerate-recovery check to fire"
+            )
+    good = audit_guard_cell("megopolis", "pallas_interpret")
+    if not good["ok"]:
+        problems.append(
+            f"guard pass flags a healthy cell: {good['violations']}"
+        )
+    return problems
+
+
 def audit_fixtures():
     """Audit every fixture; yields ``(name, expected_pass, CellReport)``."""
     for name, (tracer, contract, expected) in FIXTURES.items():
@@ -205,4 +273,5 @@ def selftest() -> list[str]:
         if others:
             problems.append(f"{name}: unexpected extra findings from {others}")
     problems.extend(telemetry_selftest())
+    problems.extend(guard_selftest())
     return problems

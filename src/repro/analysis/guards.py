@@ -1,0 +1,167 @@
+"""Pass 7 — guard neutrality (DESIGN.md §16).
+
+The §16 resilience contract is that degeneracy guards are FREE until the
+moment they fire:
+
+  * ``guard='flag'`` must be the IDENTICAL program to ``guard='off'`` —
+    not merely launch-equal: the degenerate flag is composed into
+    ``StepStats`` under every policy, and the event recorder is
+    trace-time static, so the two traces must print the same jaxpr.
+  * ``guard='recover'`` may add the host-side ``jnp.where`` substitution
+    but must keep the ``pallas_call`` census EQUAL to ``'off'`` (the
+    recovery is pre-dispatch, never a second launch), return
+    bit-identical outputs on CLEAN inputs (``jnp.where(False, ...)`` is
+    an exact passthrough), and return FINITE, in-range outputs on a
+    fully collapsed bank — recovered, not garbage.
+
+Structural checks run on every backend (tracing needs no device);
+concrete value checks run wherever the cell can execute — every backend
+except compiled ``pallas`` on a host without the accelerator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import walker
+from repro.core.spec import BACKENDS, list_resamplers, spec_for_backend
+
+#: Probe geometry — mirrors pass 6: kernel-legal on every backend.
+GUARD_N = 2048
+GUARD_NUM_ITERS = 16
+GUARD_MAX_ITERS = 64
+#: ess_norm of the recovered uniform bank is exactly 1.0, so this
+#: threshold forces the resample branch — the recovery must RESAMPLE.
+GUARD_THRESHOLD = 2.0
+
+#: Backends whose cells can execute on a plain CPU host (compiled
+#: ``pallas`` traces fine but needs the accelerator to run).
+CONCRETE_BACKENDS = ("reference", "xla", "pallas_interpret")
+
+
+def _build(name: str, backend: str, guard: str, plane_dtype: str):
+    return spec_for_backend(
+        name, backend, num_iters=GUARD_NUM_ITERS, max_iters=GUARD_MAX_ITERS,
+        plane_dtype=plane_dtype, guard=guard,
+    ).build()
+
+
+def _probe_inputs():
+    key = jax.random.PRNGKey(7)
+    kw, kp = jax.random.split(key)
+    lw = jax.random.normal(kw, (GUARD_N,), jnp.float32)
+    particles = jax.random.normal(kp, (GUARD_N,), jnp.float32)
+    return key, lw, particles
+
+
+def _step_jaxpr(r, lw, particles):
+    key, _, _ = _probe_inputs()
+    return jax.make_jaxpr(
+        lambda k, w, p: r.step(k, w, p, GUARD_THRESHOLD)
+    )(key, lw, particles)
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def compare_guard_traces(cell: str, r_off, r_flag, r_recover,
+                         concrete: bool) -> dict:
+    """Grade one (family, backend[, plane_dtype]) cell for §16 guard
+    neutrality; ``concrete`` additionally executes the clean/degenerate
+    probes (host-runnable backends only)."""
+    key, lw, particles = _probe_inputs()
+    violations = []
+
+    jaxpr_off = str(_step_jaxpr(r_off, lw, particles))
+    jaxpr_flag = str(_step_jaxpr(r_flag, lw, particles))
+    flag_match = jaxpr_flag == jaxpr_off
+    if not flag_match:
+        violations.append(
+            "guard='flag' changed the step program: the degenerate flag is "
+            "composed for every policy and the recorder is trace-time "
+            "static, so flag-vs-off must print the identical jaxpr "
+            "(DESIGN.md §16)"
+        )
+
+    closed_off = _step_jaxpr(r_off, lw, particles)
+    closed_rec = _step_jaxpr(r_recover, lw, particles)
+    launches_off = walker.count_pallas_calls(closed_off)
+    launches_rec = walker.count_pallas_calls(closed_rec)
+    if launches_rec != launches_off:
+        violations.append(
+            f"guard='recover' changed the pallas_call census: "
+            f"{launches_off} launches off vs {launches_rec} recover (the "
+            "uniform-bank substitution is pre-dispatch, never a second "
+            "launch, DESIGN.md §16)"
+        )
+
+    clean_ok = degenerate_ok = None
+    if concrete:
+        out_off = r_off.step(key, lw, particles, GUARD_THRESHOLD)
+        out_rec = r_recover.step(key, lw, particles, GUARD_THRESHOLD)
+        clean_ok = all(
+            np.array_equal(a, b, equal_nan=True)
+            for a, b in zip(_leaves(out_off), _leaves(out_rec))
+        )
+        if not clean_ok:
+            violations.append(
+                "guard='recover' perturbed a CLEAN step: outputs must be "
+                "bit-identical to guard='off' when no bank is degenerate "
+                "(jnp.where(False, ...) is an exact passthrough, "
+                "DESIGN.md §16)"
+            )
+        bad = jnp.full((GUARD_N,), jnp.nan, jnp.float32)
+        p_out, ancestors, stats = r_recover.step(
+            key, bad, particles, GUARD_THRESHOLD
+        )
+        anc = np.asarray(ancestors)
+        degenerate_ok = (
+            bool(np.isfinite(np.asarray(p_out)).all())
+            and bool((anc >= 0).all() and (anc < GUARD_N).all())
+            and bool(np.asarray(stats.degenerate))
+            and bool(np.isfinite(np.asarray(stats.log_evidence_incr)))
+            and float(np.asarray(stats.resampled)) == 1.0
+        )
+        if not degenerate_ok:
+            violations.append(
+                "guard='recover' failed to recover an all-NaN bank: the "
+                "step must resample from the uniform fallback with finite "
+                "outputs, in-range ancestors and degenerate=True "
+                "(DESIGN.md §16)"
+            )
+
+    return {
+        "cell": cell,
+        "ok": not violations,
+        "flag_jaxpr_match": flag_match,
+        "launches_off": launches_off,
+        "launches_recover": launches_rec,
+        "clean_bit_identical": clean_ok,
+        "degenerate_recovered": degenerate_ok,
+        "violations": violations,
+    }
+
+
+def audit_guard_cell(name: str, backend: str,
+                     plane_dtype: str = "float32") -> dict:
+    """Audit one (family, backend, plane_dtype) cell for guard neutrality."""
+    suffix = "" if plane_dtype == "float32" else f"@{plane_dtype}"
+    cell = f"{name}/{backend}/step{suffix}"
+    r_off = _build(name, backend, "off", plane_dtype)
+    r_flag = _build(name, backend, "flag", plane_dtype)
+    r_rec = _build(name, backend, "recover", plane_dtype)
+    return compare_guard_traces(
+        cell, r_off, r_flag, r_rec, concrete=backend in CONCRETE_BACKENDS
+    )
+
+
+def audit_guards(families=None, backends=None, plane_dtypes=("float32",)):
+    """Audit guard neutrality across the registry matrix; yields cell
+    dicts (pass-6 shape: ``cell``/``ok``/``violations`` + evidence)."""
+    for dtype in plane_dtypes:
+        for name in families if families is not None else list_resamplers():
+            for backend in backends if backends is not None else BACKENDS:
+                yield audit_guard_cell(name, backend, plane_dtype=dtype)

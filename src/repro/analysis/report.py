@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from repro.analysis import consumers as consumers_mod
 from repro.analysis import contracts as contracts_mod
+from repro.analysis import guards as guards_mod
 from repro.analysis import telemetry as telemetry_mod
 from repro.core.transactions import (
     MEGOPOLIS_EXACT,
@@ -52,6 +53,7 @@ def build_report(
     large_n: bool = True,
     transactions: bool = True,
     telemetry: bool = True,
+    resilience: bool = True,
     plane_dtypes=("float32", "bfloat16"),
 ) -> dict:
     """Run every audit and return one JSON-serialisable report.
@@ -61,6 +63,9 @@ def build_report(
     transaction count within its declared §2.4 bound, and telemetry free
     (pass 6, DESIGN.md §15: flipping ``telemetry=True`` adds zero launches
     and leaves the DCE'd estimates program identical on every cell).
+    Pass 7 (``resilience``, DESIGN.md §16) audits the guard axis the same
+    way: ``guard='flag'`` identical-jaxpr to ``'off'``, ``'recover'``
+    launch-parity + clean-input bit-identity + degenerate-input recovery.
     ``plane_dtypes`` spans the DESIGN.md §14 compression axis: compressed
     cells are audited against the SAME launch budgets, and the transaction
     table is re-priced per word size (``transactions@bfloat16`` at
@@ -108,6 +113,15 @@ def build_report(
         report["telemetry"] = tel
         report["telemetry_violations"] = [c for c in tel if not c["ok"]]
 
+    if resilience:
+        res = list(
+            guards_mod.audit_guards(
+                families, backends, plane_dtypes=plane_dtypes
+            )
+        )
+        report["resilience"] = res
+        report["resilience_violations"] = [c for c in res if not c["ok"]]
+
     if transactions:
         tx = transaction_report()
         report["transactions"] = tx
@@ -129,6 +143,7 @@ def build_report(
         or report.get("consumer_violations")
         or report.get("auto_reference_violations")
         or report.get("telemetry_violations")
+        or report.get("resilience_violations")
         or report.get("transaction_violations")
     )
     return report
@@ -162,6 +177,11 @@ def summarise(report: dict) -> str:
             f"telemetry neutrality: {len(report['telemetry'])} cells, "
             f"{len(report['telemetry_violations'])} violation(s)"
         )
+    if "resilience" in report:
+        lines.append(
+            f"guard neutrality: {len(report['resilience'])} cells, "
+            f"{len(report['resilience_violations'])} violation(s)"
+        )
     if "transactions" in report:
         tx = report["transactions"]
         parts = ", ".join(
@@ -179,9 +199,10 @@ def summarise(report: dict) -> str:
     for a in report.get("auto_reference_violations", []):
         for f in a["findings"]:
             lines.append(f"  VIOLATION {a['cell']}: [{f['pass_name']}:{f['code']}] {f['detail']}")
-    for cell in report.get("telemetry_violations", []):
-        for v in cell["violations"]:
-            lines.append(f"  VIOLATION {cell['cell']}: {v}")
+    for section in ("telemetry_violations", "resilience_violations"):
+        for cell in report.get(section, []):
+            for v in cell["violations"]:
+                lines.append(f"  VIOLATION {cell['cell']}: {v}")
     for k, v in report.get("transaction_violations", {}).items():
         lines.append(f"  VIOLATION transactions/{k}: max {v['max']} > bound {v['bound']}")
     lines.append("OK" if report["ok"] else "FAILED")

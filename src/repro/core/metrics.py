@@ -19,15 +19,49 @@ def _guarded_shift(log_w: jnp.ndarray, axis: int) -> jnp.ndarray:
     return jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
 
 
+def degenerate_log_weights(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """The degenerate-bank flag (DESIGN.md §16): True where a row of
+    log-weights carries NO usable information — all ``-inf`` (max is
+    ``-inf``), any ``nan`` (propagates through ``max``), or any ``+inf``
+    (infinite relative weight poisons every ratio).  One cheap reduction,
+    shared by ``normalise_log_weights`` and the fused step kernels
+    (``kernels/common.step_stats``) so host and kernel agree bit-for-bit
+    on which banks are degenerate.  One-hot rows (``-inf`` everywhere but
+    one finite entry) are NOT degenerate — they still rank particles."""
+    return ~jnp.isfinite(jnp.max(log_w, axis=axis))
+
+
 def normalise_log_weights(log_w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     """Shift-by-max linear weights ``exp(log_w - max(log_w))`` — THE
     normalisation every log-weight consumer shares (filter, AIS sampler,
     SMC decoding, and the fused ``Resampler.step`` composition), so the
     fused kernels and the host path can never disagree on the weights a
     resampler sees.  The result is in [0, 1] with at least one exact 1.0
-    for finite inputs; degenerate rows (all ``-inf``) come back all-zero
-    rather than nan."""
-    return jnp.exp(log_w - _guarded_shift(log_w, axis))
+    for finite inputs.
+
+    Degenerate rows (``degenerate_log_weights``: all ``-inf``, any
+    ``nan``/``+inf``) come back UNIFORM ``1/N`` instead of the all-zero /
+    nan planes the pre-§16 code produced: no ratio survives a degenerate
+    bank, so uniform is the only defensible answer, and it keeps ESS and
+    every downstream division finite on all backends bit-identically.
+    For non-degenerate rows the fallback is a bitwise no-op (``where``
+    returns the untouched value)."""
+    n = log_w.shape[axis]
+    deg = degenerate_log_weights(log_w, axis=axis)
+    deg = jnp.expand_dims(deg, axis)
+    w = jnp.exp(log_w - _guarded_shift(log_w, axis))
+    return jnp.where(deg, jnp.full_like(w, 1.0 / n), w)
+
+
+def degenerate_weights(w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Linear-weight twin of ``degenerate_log_weights`` for the
+    weights-typed entries (``__call__``/``apply``): a bank is degenerate
+    when its total mass is not a positive finite number — all-zero rows
+    (sum 0), any ``nan`` (sum nan), any ``±inf``.  True means no ratio
+    ``w_i / Σw`` is defined and the §16 recover policy substitutes the
+    uniform bank."""
+    s = jnp.sum(w, axis=axis)
+    return ~(jnp.isfinite(s) & (s > 0))
 
 
 def _tiny_floor(dtype) -> float:

@@ -53,6 +53,8 @@ import jax.numpy as jnp
 
 from repro.core.iterations import select_iterations
 from repro.core.metrics import (
+    degenerate_log_weights,
+    degenerate_weights,
     effective_sample_size,
     log_mean_weight,
     max_normalised_weight,
@@ -61,6 +63,7 @@ from repro.core.metrics import (
 )
 from repro.obs.stats import stats_from_vector
 from repro.obs.trace import dispatch_span
+from repro.resilience.guards import check_guard_policy, maybe_emit_guard_event
 from repro.core.resamplers.batched import split_batch_keys
 from repro.core.resamplers.megopolis import DEFAULT_SEGMENT, megopolis, megopolis_batch
 from repro.core.resamplers.metropolis import (
@@ -204,6 +207,8 @@ class Resampler:
         # HERE — once, at the public entry — for EVERY backend, so the
         # reference lane is the bit-exact oracle of the compressed kernels.
         self.plane_dtype = getattr(spec, "plane_dtype", "float32")
+        # The §16 degeneracy-guard axis: 'off' | 'flag' | 'recover'.
+        self.guard = getattr(spec, "guard", "off")
         self._single = single
         self._batch = batch
 
@@ -292,6 +297,48 @@ class Resampler:
             self.plane_dtype,
         )
 
+    def _guard_weights(self, w: jnp.ndarray, entry: str) -> jnp.ndarray:
+        """§16 guard for the linear-weight entries: at ``guard='recover'``,
+        degenerate rows (``metrics.degenerate_weights``: zero/nan/±inf
+        mass) are substituted with the uniform bank before dispatch — an
+        exact bitwise passthrough on clean rows; at ``'flag'`` the weights
+        run untouched and a ``ResilienceEvent`` is staged (only while a
+        recorder is active at trace time).  ``'off'`` returns ``w``
+        unchanged with zero extra equations."""
+        if self.guard == "off":
+            return w
+        deg = degenerate_weights(w, axis=-1)
+        if self.guard == "recover":
+            n = w.shape[-1]
+            w = jnp.where(
+                jnp.expand_dims(deg, -1), jnp.full_like(w, 1.0 / n), w
+            )
+        maybe_emit_guard_event(
+            self.name, getattr(self.spec, "backend", "reference"), entry,
+            self.guard, deg,
+        )
+        return w
+
+    def _guard_log_weights(self, lw: jnp.ndarray, entry: str):
+        """§16 guard for the fused step: returns ``(lw_run, degenerate)``.
+
+        ``degenerate`` (``metrics.degenerate_log_weights``) is composed
+        into ``StepStats`` under EVERY policy — the flag itself is free
+        telemetry, so 'off' and 'flag' trace to the identical jaxpr.  At
+        ``'recover'`` degenerate rows are replaced by the all-zeros
+        log-weight bank (uniform weights) before dispatch, so the kernel
+        runs a clean-input program with the same key: RNG is consumed
+        branch-independently and every output is finite."""
+        deg = degenerate_log_weights(lw, axis=-1)
+        if self.guard == "recover":
+            lw = jnp.where(jnp.expand_dims(deg, -1), jnp.zeros_like(lw), lw)
+        if self.guard != "off":
+            maybe_emit_guard_event(
+                self.name, getattr(self.spec, "backend", "reference"), entry,
+                self.guard, deg,
+            )
+        return lw, deg
+
     def __call__(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 1:
             raise ValueError(
@@ -299,7 +346,9 @@ class Resampler:
                 "(use .batch for weights[B, N])"
             )
         with self._span("single"):
-            return self._single(key, self.quantise(weights))
+            return self._single(
+                key, self._guard_weights(self.quantise(weights), "single")
+            )
 
     def batch(self, key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         if weights.ndim != 2:
@@ -307,7 +356,9 @@ class Resampler:
                 f"{self.name}.batch: expected weights[B, N]; got shape {weights.shape}"
             )
         with self._span("batch"):
-            return self._batch(key, self.quantise(weights))
+            return self._batch(
+                key, self._guard_weights(self.quantise(weights), "batch")
+            )
 
     def batch_rows(self, keys: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
         """vmap the single-population call over explicit per-row keys.
@@ -321,7 +372,9 @@ class Resampler:
                 f"{self.name}.batch_rows: expected weights[B, N]; got shape {weights.shape}"
             )
         with self._span("batch_rows"):
-            return jax.vmap(self._single)(keys, self.quantise(weights))
+            return jax.vmap(self._single)(
+                keys, self._guard_weights(self.quantise(weights), "batch_rows")
+            )
 
     def _check_state(self, weights, particles, who: str, lead: int = 1):
         if particles.ndim < lead or particles.shape[:lead] != weights.shape[:lead]:
@@ -342,7 +395,10 @@ class Resampler:
             )
         self._check_state(weights, particles, "apply")
         with self._span("apply"):
-            return self._apply(key, self.quantise(weights), self.quantise(particles))
+            return self._apply(
+                key, self._guard_weights(self.quantise(weights), "apply"),
+                self.quantise(particles),
+            )
 
     def apply_batch(self, key: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
         """Bank form of ``apply`` under the §4 split-key contract."""
@@ -354,7 +410,8 @@ class Resampler:
         self._check_state(weights, particles, "apply_batch", lead=2)
         with self._span("apply_batch"):
             return self._apply_batch(
-                key, self.quantise(weights), self.quantise(particles)
+                key, self._guard_weights(self.quantise(weights), "apply_batch"),
+                self.quantise(particles),
             )
 
     def apply_rows(self, keys: jax.Array, weights: jnp.ndarray, particles: jnp.ndarray):
@@ -379,7 +436,8 @@ class Resampler:
         self._check_state(weights, particles, "apply_rows", lead=2)
         with self._span("apply_rows"):
             return self._apply_rows(
-                keys, self.quantise(weights), self.quantise(particles)
+                keys, self._guard_weights(self.quantise(weights), "apply_rows"),
+                self.quantise(particles),
             )
 
     def step(
@@ -408,11 +466,15 @@ class Resampler:
             )
         self._check_state(log_weights, particles, "step")
         with self._span("step"):
-            p_out, ancestors, stats4 = self._step(
-                key, self.quantise(log_weights), self.quantise(particles),
-                ess_threshold,
+            lw_run, deg = self._guard_log_weights(
+                self.quantise(log_weights), "step"
             )
-            stats = stats_from_vector(stats4, unique_ancestor_count(ancestors))
+            p_out, ancestors, stats4 = self._step(
+                key, lw_run, self.quantise(particles), ess_threshold,
+            )
+            stats = stats_from_vector(
+                stats4, unique_ancestor_count(ancestors), deg
+            )
         return p_out, ancestors, stats
 
     def step_rows(
@@ -440,11 +502,15 @@ class Resampler:
             )
         self._check_state(log_weights, particles, "step_rows", lead=2)
         with self._span("step_rows"):
-            p_out, ancestors, stats4 = self._step_rows(
-                keys, self.quantise(log_weights), self.quantise(particles),
-                ess_threshold,
+            lw_run, deg = self._guard_log_weights(
+                self.quantise(log_weights), "step_rows"
             )
-            stats = stats_from_vector(stats4, unique_ancestor_count(ancestors))
+            p_out, ancestors, stats4 = self._step_rows(
+                keys, lw_run, self.quantise(particles), ess_threshold,
+            )
+            stats = stats_from_vector(
+                stats4, unique_ancestor_count(ancestors), deg
+            )
         return p_out, ancestors, stats
 
     def __repr__(self):
@@ -467,6 +533,19 @@ class ResamplerSpec:
 
     def build(self) -> Resampler:
         raise NotImplementedError
+
+    def build_resilient(self, *, ladder=None, recorder=None, probe=True) -> Resampler:
+        """Build with the §16 backend fallback ladder: try this spec's
+        backend, demoting rung by rung (default pallas → pallas_interpret →
+        xla → reference) on typed build/probe failures, emitting one
+        ``backend_demotion`` ``ResilienceEvent`` per rung into ``recorder``.
+        Raises ``BackendUnavailable`` (with per-rung causes) only when every
+        rung fails."""
+        from repro.resilience.fallback import build_with_fallback
+
+        return build_with_fallback(
+            self, ladder=ladder, recorder=recorder, probe=probe
+        )
 
 
 def _resolve_iters_dynamic(num_iters, weights):
@@ -579,6 +658,7 @@ class MegopolisSpec(ResamplerSpec):
     segment: int = DEFAULT_SEGMENT
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     _NAME: ClassVar[str] = "megopolis"
 
@@ -587,6 +667,7 @@ class MegopolisSpec(ResamplerSpec):
         _check_positive_int(self.segment, "segment", "MegopolisSpec")
         _check_backend(self.backend, "MegopolisSpec")
         _check_plane_dtype(self.plane_dtype, "MegopolisSpec")
+        check_guard_policy(self.guard, "MegopolisSpec")
         if self.backend in ("pallas", "pallas_interpret") and self.segment != KERNEL_SEGMENT:
             raise ValueError(
                 f"MegopolisSpec: the pallas kernel coalesces at segment="
@@ -707,6 +788,7 @@ class MetropolisSpec(ResamplerSpec):
     num_iters: Union[int, str] = AUTO
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     _NAME: ClassVar[str] = "metropolis"
 
@@ -714,6 +796,7 @@ class MetropolisSpec(ResamplerSpec):
         _check_num_iters(self.num_iters, "MetropolisSpec")
         _check_backend(self.backend, "MetropolisSpec")
         _check_plane_dtype(self.plane_dtype, "MetropolisSpec")
+        check_guard_policy(self.guard, "MetropolisSpec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -865,6 +948,7 @@ class MetropolisC1Spec(ResamplerSpec):
     warp: int = WARP
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     _NAME: ClassVar[str] = "metropolis_c1"
 
@@ -875,6 +959,7 @@ class MetropolisC1Spec(ResamplerSpec):
         _check_backend(self.backend, "MetropolisC1Spec")
         _check_kernel_partition(self, "MetropolisC1Spec")
         _check_plane_dtype(self.plane_dtype, "MetropolisC1Spec")
+        check_guard_policy(self.guard, "MetropolisC1Spec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -908,6 +993,7 @@ class MetropolisC2Spec(ResamplerSpec):
     warp: int = WARP
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     _NAME: ClassVar[str] = "metropolis_c2"
 
@@ -918,6 +1004,7 @@ class MetropolisC2Spec(ResamplerSpec):
         _check_backend(self.backend, "MetropolisC2Spec")
         _check_kernel_partition(self, "MetropolisC2Spec")
         _check_plane_dtype(self.plane_dtype, "MetropolisC2Spec")
+        check_guard_policy(self.guard, "MetropolisC2Spec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -945,6 +1032,7 @@ class RejectionSpec(ResamplerSpec):
     max_iters: int = 1024
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     _NAME: ClassVar[str] = "rejection"
 
@@ -952,6 +1040,7 @@ class RejectionSpec(ResamplerSpec):
         _check_positive_int(self.max_iters, "max_iters", "RejectionSpec")
         _check_backend(self.backend, "RejectionSpec")
         _check_plane_dtype(self.plane_dtype, "RejectionSpec")
+        check_guard_policy(self.guard, "RejectionSpec")
 
     def build(self) -> Resampler:
         if self.backend in PALLAS_BACKENDS:
@@ -1038,6 +1127,7 @@ class PrefixSumSpec(ResamplerSpec):
     kind: str = "systematic"
     backend: str = "reference"
     plane_dtype: str = "float32"
+    guard: str = "off"
 
     def __post_init__(self):
         if self.kind not in _PREFIX_SUM_KINDS:
@@ -1049,6 +1139,7 @@ class PrefixSumSpec(ResamplerSpec):
             )
         _check_backend(self.backend, "PrefixSumSpec")
         _check_plane_dtype(self.plane_dtype, "PrefixSumSpec")
+        check_guard_policy(self.guard, "PrefixSumSpec")
 
     @property
     def name(self) -> str:
@@ -1199,7 +1290,7 @@ def spec_from_name(name: str, **kwargs) -> ResamplerSpec:
 
 def spec_for_backend(
     name: str, backend: str, *, num_iters: Union[int, str] = 16,
-    max_iters: int = 64, plane_dtype: str = "float32",
+    max_iters: int = 64, plane_dtype: str = "float32", guard: str = "off",
 ) -> ResamplerSpec:
     """A kernel-legal spec for any (family, backend) cell of the matrix.
 
@@ -1216,20 +1307,22 @@ def spec_for_backend(
     if fam.spec_cls is MegopolisSpec:
         return MegopolisSpec(num_iters=num_iters,
                              segment=KERNEL_SEGMENT if pallas else DEFAULT_SEGMENT,
-                             backend=backend, plane_dtype=plane_dtype)
+                             backend=backend, plane_dtype=plane_dtype,
+                             guard=guard)
     if fam.spec_cls in (MetropolisC1Spec, MetropolisC2Spec):
         return fam.spec_cls(
             num_iters=num_iters,
             partition_size_bytes=KERNEL_PARTITION_BYTES if pallas else 128,
-            backend=backend, plane_dtype=plane_dtype,
+            backend=backend, plane_dtype=plane_dtype, guard=guard,
         )
     if fam.spec_cls is RejectionSpec:
         return RejectionSpec(max_iters=max_iters, backend=backend,
-                             plane_dtype=plane_dtype)
+                             plane_dtype=plane_dtype, guard=guard)
     if fam.spec_cls is MetropolisSpec:
         return MetropolisSpec(num_iters=num_iters, backend=backend,
-                              plane_dtype=plane_dtype)
-    return PrefixSumSpec(kind=name, backend=backend, plane_dtype=plane_dtype)
+                              plane_dtype=plane_dtype, guard=guard)
+    return PrefixSumSpec(kind=name, backend=backend, plane_dtype=plane_dtype,
+                         guard=guard)
 
 
 def coerce_spec(resampler: Union[str, ResamplerSpec], /, **defaults) -> ResamplerSpec:

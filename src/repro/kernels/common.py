@@ -15,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.resilience.errors import VmemBudgetExceeded
+
 # NOTE: all scalar constants below are *numpy* scalars so they inline as
 # jaxpr literals — Pallas kernel bodies may not close over device constants.
 _GOLDEN = np.uint32(0x9E3779B9)
@@ -172,7 +174,7 @@ def check_state_resident(n: int, state_dim: int, who: str, itemsize: int = 4):
     (``itemsize == 2``) double the residency edge (DESIGN.md §14)."""
     d_pad = pad_state_dim(state_dim)
     if n * d_pad * itemsize > MAX_VMEM_STATE_BYTES:
-        raise ValueError(
+        raise VmemBudgetExceeded(
             f"{who} keeps the whole particle state VMEM-resident and caps "
             f"N * pad_state_dim(state_dim) * itemsize at {MAX_VMEM_STATE_BYTES} "
             f"bytes (got N={n}, state_dim={state_dim}, itemsize={itemsize} -> "
@@ -279,7 +281,7 @@ def gather_state(planes: jnp.ndarray, k_global: jnp.ndarray) -> jnp.ndarray:
 
 def step_stats(lw_flat: jnp.ndarray, n_total: int):
     """Fused-step prelude statistics from a resident flat log-weight vector:
-    ``(m, ess_norm, log_evidence_incr, max_weight)``.
+    ``(m, ess_norm, log_evidence_incr, max_weight, degenerate)``.
 
     Mirrors ``repro.core.metrics`` term for term — guarded shift-by-max
     (``normalise_log_weights``), ``(Σw)²/max(Σw², 1e-30)`` over the SAME
@@ -289,17 +291,28 @@ def step_stats(lw_flat: jnp.ndarray, n_total: int):
     MUST reshape their (rows, 128) log-weight block to flat [N] before
     calling: a 2-D reduction changes the f32 summation tree and breaks
     bit-parity with the host helpers.
+
+    ``degenerate`` is the §16 collapsed-bank flag (``~isfinite(max)``:
+    all-``-inf``, any nan/+inf — ``metrics.degenerate_log_weights``).  Where
+    it is set, ESS and max-weight are computed from the SAME uniform-``1/N``
+    fallback bank ``normalise_log_weights`` substitutes on the host, so the
+    on-chip trigger stays bit-identical to the composed oracle; ``incr``
+    keeps the raw ``log_mean_weight`` decomposition (``-inf``/nan there is
+    the truthful evidence of a dead bank, and the step's where-select zeroes
+    it on the untriggered branch exactly as the host does).
     """
-    m = jnp.max(lw_flat)
-    m = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
-    w = jnp.exp(lw_flat - m)
+    m_raw = jnp.max(lw_flat)
+    deg = ~jnp.isfinite(m_raw)
+    m = jnp.where(deg, jnp.zeros_like(m_raw), m_raw)
+    w_raw = jnp.exp(lw_flat - m)
+    incr = (m + jnp.log(jnp.sum(w_raw))) - jnp.log(jnp.float32(n_total))
+    w = jnp.where(deg, jnp.full_like(w_raw, 1.0 / n_total), w_raw)
     s1 = jnp.sum(w)
     s2 = jnp.sum(w * w)
     ess = jnp.square(s1) / jnp.maximum(s2, 1e-30)
     ess_norm = ess / jnp.float32(n_total)
-    incr = (m + jnp.log(s1)) - jnp.log(jnp.float32(n_total))
     maxw = jnp.max(w) / jnp.maximum(s1, 1e-30)
-    return m, ess_norm, incr, maxw
+    return m, ess_norm, incr, maxw, deg
 
 
 def step_select(do, k_new: jnp.ndarray, t) -> jnp.ndarray:
@@ -361,7 +374,7 @@ def check_vmem_resident(
     (``n * itemsize`` bytes against ``MAX_VMEM_PARTICLE_BYTES``; the f32
     default reproduces the historical ``n <= MAX_VMEM_PARTICLES`` cap)."""
     if n * itemsize > MAX_VMEM_PARTICLE_BYTES:
-        raise ValueError(
+        raise VmemBudgetExceeded(
             f"{who} keeps the whole {what} VMEM-resident and caps N * itemsize "
             f"at {MAX_VMEM_PARTICLE_BYTES} bytes — the scaling wall the "
             f"paper's coalescing removes. {remedy}"

@@ -163,12 +163,13 @@ def _make_kernel_step(p_at):
 
         @pl.when((t == 0) & (b == 0))
         def _prelude():
-            m, ess_norm, incr, maxw = step_stats(
+            m, ess_norm, incr, maxw, deg = step_stats(
                 lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+            st_ref[2] = jnp.where(deg, jnp.float32(1.0), jnp.float32(0.0))
             stats_ref[0] = ess_norm
             stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
             stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -176,10 +177,14 @@ def _make_kernel_step(p_at):
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
+        deg = st_ref[2] > 0.5
         # Normalised weights re-land on the plane-dtype grid (the composed
         # path quantises at the public ``apply`` boundary); a no-op at f32.
+        # The §16 degenerate latch substitutes the uniform bank first.
         w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
         w_part = jnp.exp(lw_part_ref[...].astype(jnp.float32) - m)
+        w_own = jnp.where(deg, jnp.float32(1.0 / n_total), w_own)
+        w_part = jnp.where(deg, jnp.float32(1.0 / n_total), w_part)
         w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
         w_part = w_part.astype(lw_part_ref.dtype).astype(jnp.float32)
         k_new, wk_new = _sweep_partition(
@@ -225,7 +230,7 @@ def _c1c2_step_call(kernel, log_weights2d, planes, partitions, seed, thr, *,
         ],
         scratch_shapes=[
             pltpu.VMEM((SUBLANES, LANES), jnp.float32),
-            pltpu.SMEM((2,), jnp.float32),
+            pltpu.SMEM((3,), jnp.float32),
         ],
     )
     return pl.pallas_call(

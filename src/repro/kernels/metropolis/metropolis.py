@@ -133,11 +133,12 @@ def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr, maxw = step_stats(
+        m, ess_norm, incr, maxw, deg = step_stats(
             lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        st_ref[2] = jnp.where(deg, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[0] = ess_norm
         stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
         stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -145,10 +146,14 @@ def _kernel_step(seed_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
+    deg = st_ref[2] > 0.5
     # Normalised weights re-land on the plane-dtype grid (the composed path
-    # quantises at the public ``apply`` boundary); a no-op at f32.
+    # quantises at the public ``apply`` boundary); a no-op at f32.  The §16
+    # degenerate latch substitutes the uniform bank BEFORE the requantise.
     w_full = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
     w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+    w_full = jnp.where(deg, jnp.float32(1.0 / n_total), w_full)
+    w_own = jnp.where(deg, jnp.float32(1.0 / n_total), w_own)
     w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
     w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
@@ -176,11 +181,12 @@ def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     @pl.when((t == 0) & (b == 0))
     def _prelude():
-        m, ess_norm, incr, maxw = step_stats(
+        m, ess_norm, incr, maxw, deg = step_stats(
             lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total)
         do = ess_norm < thr_ref[0]
         st_ref[0] = m
         st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
+        st_ref[2] = jnp.where(deg, jnp.float32(1.0), jnp.float32(0.0))
         stats_ref[s, 0] = ess_norm
         stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
         stats_ref[s, 2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -188,8 +194,11 @@ def _kernel_step_rows(seeds_ref, thr_ref, lw_full_ref, lw_own_ref, planes_ref,
 
     m = st_ref[0]
     do = st_ref[1] > 0.5
+    deg = st_ref[2] > 0.5
     w_full = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
     w_own = jnp.exp(lw_own_ref[0].astype(jnp.float32) - m)
+    w_full = jnp.where(deg, jnp.float32(1.0 / n_total), w_full)
+    w_own = jnp.where(deg, jnp.float32(1.0 / n_total), w_own)
     w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
     w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
     k_new, wk_new = _sweep(
@@ -403,7 +412,7 @@ def metropolis_pallas_step(
         ],
         scratch_shapes=[
             pltpu.VMEM((SUBLANES, LANES), jnp.float32),
-            pltpu.SMEM((2,), jnp.float32),
+            pltpu.SMEM((3,), jnp.float32),
         ],
     )
     return pl.pallas_call(
@@ -457,7 +466,7 @@ def metropolis_pallas_step_rows(
         ],
         scratch_shapes=[
             pltpu.VMEM((SUBLANES, LANES), jnp.float32),
-            pltpu.SMEM((2,), jnp.float32),
+            pltpu.SMEM((3,), jnp.float32),
         ],
     )
     return pl.pallas_call(

@@ -50,7 +50,7 @@ def _make_kernel_step(n_total: int, rows: int, kind: str):
     def _kernel(u0_ref, thr_ref, lw_ref, ubase_ref, planes_ref,
                 k_ref, out_ref, stats_ref):
         lw_flat = lw_ref[...].astype(jnp.float32).reshape(n_total)
-        m, ess_norm, incr, maxw = step_stats(lw_flat, n_total)
+        m, ess_norm, incr, maxw, deg = step_stats(lw_flat, n_total)
         do = ess_norm < thr_ref[0]
         stats_ref[0] = ess_norm
         stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
@@ -59,7 +59,10 @@ def _make_kernel_step(n_total: int, rows: int, kind: str):
 
         # Normalised weights re-land on the plane-dtype grid (the composed
         # path quantises at the public ``apply`` boundary); a no-op at f32.
+        # The §16 degenerate substitution precedes the requantise, exactly
+        # as ``normalise_log_weights`` orders it on the host.
         w2d = jnp.exp(lw_ref[...].astype(jnp.float32) - m)
+        w2d = jnp.where(deg, jnp.float32(1.0 / n_total), w2d)
         w2d = w2d.astype(lw_ref.dtype).astype(jnp.float32)
         slots = _full_lane_ids(rows)
 

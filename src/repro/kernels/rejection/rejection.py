@@ -141,15 +141,17 @@ def _make_kernel_step(max_iters: int):
 
         @pl.when(t == 0)
         def _prelude():
-            m, ess_norm, incr, maxw = step_stats(
+            m, ess_norm, incr, maxw, deg = step_stats(
                 lw_full_ref[...].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
             w_all = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
+            w_all = jnp.where(deg, jnp.float32(1.0 / n_total), w_all)
             st_ref[2] = jnp.max(
                 w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
+            st_ref[3] = jnp.where(deg, jnp.float32(1.0), jnp.float32(0.0))
             stats_ref[0] = ess_norm
             stats_ref[1] = jnp.where(do, incr, jnp.float32(0.0))
             stats_ref[2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -157,10 +159,14 @@ def _make_kernel_step(max_iters: int):
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
+        deg = st_ref[3] > 0.5
         # Normalised weights re-land on the plane-dtype grid (the composed
         # path quantises at the public ``apply`` boundary); a no-op at f32.
+        # The §16 degenerate latch substitutes the uniform bank first.
         w_full = jnp.exp(lw_full_ref[...].astype(jnp.float32) - m)
         w_own = jnp.exp(lw_own_ref[...].astype(jnp.float32) - m)
+        w_full = jnp.where(deg, jnp.float32(1.0 / n_total), w_full)
+        w_own = jnp.where(deg, jnp.float32(1.0 / n_total), w_own)
         w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
         w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
         k = _rejection_loop(t, seed_ref[0], st_ref[2], w_full, w_own, max_iters)
@@ -183,15 +189,17 @@ def _make_kernel_step_rows(max_iters: int):
 
         @pl.when(t == 0)
         def _prelude():
-            m, ess_norm, incr, maxw = step_stats(
+            m, ess_norm, incr, maxw, deg = step_stats(
                 lw_full_ref[0].astype(jnp.float32).reshape(n_total), n_total
             )
             do = ess_norm < thr_ref[0]
             st_ref[0] = m
             st_ref[1] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
             w_all = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
+            w_all = jnp.where(deg, jnp.float32(1.0 / n_total), w_all)
             st_ref[2] = jnp.max(
                 w_all.astype(lw_full_ref.dtype).astype(jnp.float32))
+            st_ref[3] = jnp.where(deg, jnp.float32(1.0), jnp.float32(0.0))
             stats_ref[s, 0] = ess_norm
             stats_ref[s, 1] = jnp.where(do, incr, jnp.float32(0.0))
             stats_ref[s, 2] = jnp.where(do, jnp.float32(1.0), jnp.float32(0.0))
@@ -199,8 +207,11 @@ def _make_kernel_step_rows(max_iters: int):
 
         m = st_ref[0]
         do = st_ref[1] > 0.5
+        deg = st_ref[3] > 0.5
         w_full = jnp.exp(lw_full_ref[0].astype(jnp.float32) - m)
         w_own = jnp.exp(lw_own_ref[0].astype(jnp.float32) - m)
+        w_full = jnp.where(deg, jnp.float32(1.0 / n_total), w_full)
+        w_own = jnp.where(deg, jnp.float32(1.0 / n_total), w_own)
         w_full = w_full.astype(lw_full_ref.dtype).astype(jnp.float32)
         w_own = w_own.astype(lw_own_ref.dtype).astype(jnp.float32)
         k = _rejection_loop(t, seeds_ref[s], st_ref[2], w_full, w_own, max_iters)
@@ -246,7 +257,7 @@ def rejection_pallas_step(
             pl.BlockSpec((d_pad, SUBLANES, LANES), lambda t, seed, thr: (0, t, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],  # (m, do, sup w)
+        scratch_shapes=[pltpu.SMEM((4,), jnp.float32)],  # (m, do, sup w, deg)
     )
     return pl.pallas_call(
         _make_kernel_step(max_iters),
@@ -297,7 +308,7 @@ def rejection_pallas_step_rows(
             ),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((4,), jnp.float32)],
     )
     return pl.pallas_call(
         _make_kernel_step_rows(max_iters),

@@ -16,11 +16,16 @@ backend:
   ancestors ⇒ N; full collapse ⇒ 1) — the Murray–Lee–Jacob unique-particle
   count, composed from the ancestor vector by the public wrapper (sort-based,
   never a scatter: see ``core.metrics.unique_ancestor_count``).
+- ``degenerate``         bool, the §16 collapsed-bank flag — True when the
+  input log-weight bank carried no usable information (all ``-inf``, any
+  nan/±inf: ``core.metrics.degenerate_log_weights``) and the normalisation
+  substituted the uniform fallback bank.  Composed host-side from the raw
+  log-weights by the public wrapper, identically on every backend.
 
 The first four fields are the kernel SMEM stats vector (f32[4], in that
-order); ``survivors`` is appended host-side from the ancestors the same
-launch returned.  ``NamedTuple`` ⇒ automatically a pytree: records scan,
-vmap and stack like any array bundle.
+order); ``survivors`` and ``degenerate`` are appended host-side from the
+values the same launch consumed/returned.  ``NamedTuple`` ⇒ automatically a
+pytree: records scan, vmap and stack like any array bundle.
 """
 
 from __future__ import annotations
@@ -36,16 +41,24 @@ class StepStats(NamedTuple):
     resampled: jnp.ndarray
     max_weight: jnp.ndarray
     survivors: jnp.ndarray
+    degenerate: jnp.ndarray
 
 
-def stats_from_vector(stats4: jnp.ndarray, survivors: jnp.ndarray) -> StepStats:
+def stats_from_vector(
+    stats4: jnp.ndarray, survivors: jnp.ndarray, degenerate: jnp.ndarray = None
+) -> StepStats:
     """Unpack a kernel stats vector ``f32[..., 4]`` (row layout above) plus a
-    host-composed survivor count into a ``StepStats`` record.  Batched inputs
-    (``[B, 4]`` + ``[B]``) yield a batched record."""
+    host-composed survivor count (and degenerate flag) into a ``StepStats``
+    record.  Batched inputs (``[B, 4]`` + ``[B]``) yield a batched record.
+    ``degenerate`` defaults to all-False in the shape of ``survivors`` for
+    callers that pre-date the §16 guard layer."""
+    if degenerate is None:
+        degenerate = jnp.zeros(jnp.shape(survivors), jnp.bool_)
     return StepStats(
         ess_norm=stats4[..., 0],
         log_evidence_incr=stats4[..., 1],
         resampled=stats4[..., 2],
         max_weight=stats4[..., 3],
         survivors=survivors,
+        degenerate=degenerate,
     )

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.metrics import (
+    degenerate_weights,
     effective_sample_size,
     log_mean_weight,
     log_weights_from_linear,
@@ -199,12 +200,20 @@ def _alg6_step_stats(w: jnp.ndarray, ancestors: jnp.ndarray,
         resampled=jnp.ones(w.shape[:-1], jnp.float32),
         max_weight=max_normalised_weight(lw, axis=axis),
         survivors=unique_ancestor_count(ancestors, axis=axis),
+        degenerate=degenerate_weights(w, axis=axis),
     )
 
 
 def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
-               telemetry: bool = False, with_ess: bool = False):
+               telemetry: bool = False, with_ess: bool = False,
+               checkpoint=None):
     """Jitted scan over time; returns estimates f32[T].
+
+    ``checkpoint`` (a ``repro.resilience.CheckpointPolicy``) makes the run
+    crash-consistent: the time scan executes in snapshot-period chunks of
+    the SAME jitted body, durably persisting the scan carry + outputs after
+    each chunk and resuming from the latest snapshot — estimates and
+    telemetry stay bit-identical to the monolithic scan (DESIGN.md §16).
 
     ``telemetry=True`` additionally returns a ``Telemetry`` record whose
     ``steps`` field holds one ``StepStats`` per time step (every field
@@ -267,7 +276,14 @@ def run_filter(key, pf: ParticleFilter, observations: jnp.ndarray, theta=None,
     particles = pf.model.init(k0, pf.num_particles)
     log_w0 = jnp.zeros((pf.num_particles,), jnp.float32)
     ts = jnp.arange(1, observations.shape[0] + 1, dtype=jnp.float32)
-    _, out = jax.lax.scan(body, (particles, log_w0, key), (ts, observations))
+    if checkpoint is None:
+        _, out = jax.lax.scan(body, (particles, log_w0, key), (ts, observations))
+    else:
+        from repro.resilience.checkpointing import checkpointed_scan
+
+        _, out = checkpointed_scan(
+            body, (particles, log_w0, key), (ts, observations), checkpoint
+        )
     if not record:
         return out
     ests, steps = out

@@ -1,0 +1,71 @@
+"""Resilience layer (DESIGN.md §16): degeneracy guards, backend fallback
+chains, deterministic fault injection, and crash-consistent long runs.
+
+Import discipline: ``kernels/common`` imports the error taxonomy from this
+package, and ``core/spec`` imports the guard-event recorder — so only the
+import-light leaves (``errors``, ``guards``) load eagerly here.  The heavy
+modules (``fallback`` builds specs, ``faults``/``checkpointing`` pull in
+consumers) resolve lazily through PEP 562 ``__getattr__`` to keep the
+kernels → resilience → spec → kernels cycle broken.
+"""
+
+from __future__ import annotations
+
+from repro.resilience.errors import (
+    BackendUnavailable,
+    CorruptAncestorsError,
+    InjectedCrash,
+    KernelLoweringError,
+    ResilienceError,
+    VmemBudgetExceeded,
+)
+from repro.resilience.guards import (
+    GUARD_POLICIES,
+    ResilienceEvent,
+    guard_events_enabled,
+    maybe_emit_guard_event,
+    record_resilience_events,
+)
+
+_LAZY = {
+    "DEFAULT_LADDER": "repro.resilience.fallback",
+    "build_with_fallback": "repro.resilience.fallback",
+    "classify_backend_error": "repro.resilience.fallback",
+    "CheckpointPolicy": "repro.resilience.checkpointing",
+    "checkpointed_scan": "repro.resilience.checkpointing",
+    "FAULT_CLASSES": "repro.resilience.faults",
+    "all_nan_bank": "repro.resilience.faults",
+    "all_neg_inf_bank": "repro.resilience.faults",
+    "bitflip_states": "repro.resilience.faults",
+    "inject_inf_weights": "repro.resilience.faults",
+    "inject_nan_weights": "repro.resilience.faults",
+    "near_collapse_bank": "repro.resilience.faults",
+    "one_hot_bank": "repro.resilience.faults",
+    "poison_ancestors": "repro.resilience.faults",
+    "validate_ancestors": "repro.resilience.faults",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)
+
+
+__all__ = [
+    "BackendUnavailable",
+    "CorruptAncestorsError",
+    "GUARD_POLICIES",
+    "InjectedCrash",
+    "KernelLoweringError",
+    "ResilienceError",
+    "ResilienceEvent",
+    "VmemBudgetExceeded",
+    "guard_events_enabled",
+    "maybe_emit_guard_event",
+    "record_resilience_events",
+    *sorted(_LAZY),
+]

@@ -1,0 +1,128 @@
+"""Crash-consistent long runs — checkpointed ``lax.scan`` (DESIGN.md §16).
+
+A monolithic ``lax.scan`` applies its body sequentially, so a host loop
+of scans over contiguous chunks of ``xs`` — threading the carry through
+— produces bit-identical ``(carry, ys)``.  ``checkpointed_scan``
+exploits exactly that: it chunks the scan at the ``CheckpointPolicy``
+snapshot period, and after each chunk atomically persists
+``{carry, ys-so-far}`` through ``repro.checkpoint`` (tmp-dir + fsync +
+rename: a crash mid-save never corrupts the previous snapshot).
+
+Resume is a pure prefix-skip: restore the last durable ``carry`` +
+``ys`` prefix and continue the same host loop from that chunk — the
+continuation is bit-identical to the uninterrupted run because each
+chunk's inputs (carry bytes, xs rows, jitted scan body) are identical.
+
+``fail_after`` is the kill-switch for the §16 kill-and-resume test: the
+run raises the typed ``InjectedCrash`` in the chunk that CROSSES that
+step boundary, strictly AFTER the snapshot is durably on disk — so a
+resumed run never re-crashes and always completes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.resilience.errors import InjectedCrash
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Where/how often a long scan snapshots its carry.
+
+    ``directory``   snapshot root (``repro.checkpoint`` layout inside).
+    ``every``       snapshot period, in scan steps (= the chunk length).
+    ``keep``        retained snapshots (older ones GC'd after a newer
+                    save completes — always one restorable on disk).
+    ``resume``      pick up from the latest durable snapshot when one
+                    exists (else start clean).
+    ``fail_after``  chaos hook: raise ``InjectedCrash`` once the run
+                    crosses this step boundary, AFTER that snapshot is
+                    durable.  ``None`` disables.
+    """
+
+    directory: str
+    every: int = 1
+    keep: int = 3
+    resume: bool = True
+    fail_after: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.directory:
+            raise ValueError("CheckpointPolicy.directory must be non-empty")
+        if isinstance(self.every, bool) or not isinstance(self.every, int) \
+                or self.every < 1:
+            raise ValueError(
+                f"CheckpointPolicy.every must be a positive int; got {self.every!r}"
+            )
+
+
+def _concat_parts(parts):
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.concatenate([jnp.asarray(l) for l in ls], axis=0), *parts
+    )
+
+
+def checkpointed_scan(body, init, xs, policy: Optional[CheckpointPolicy]):
+    """``lax.scan(body, init, xs)`` with periodic durable snapshots.
+
+    ``policy=None`` IS the monolithic scan (no behavioural fork to
+    maintain).  Otherwise the scan runs in ``policy.every``-step chunks;
+    the returned ``(carry, ys)`` is bit-identical to the monolithic call
+    whether or not the run resumed from a snapshot.
+    """
+    if policy is None:
+        return lax.scan(body, init, xs)
+
+    leaves = jax.tree_util.tree_leaves(xs)
+    if not leaves:
+        raise ValueError("checkpointed_scan: xs must carry at least one leaf")
+    length = leaves[0].shape[0]
+    scan_fn = jax.jit(lambda c, x: lax.scan(body, c, x))
+
+    start, carry, ys_parts = 0, init, []
+    if policy.resume:
+        step = latest_step(policy.directory)
+        if step is not None:
+            t_done = min(int(step), length)
+            xs_head = jax.tree_util.tree_map(lambda a: a[:t_done], xs)
+            _, ys_shape = jax.eval_shape(scan_fn, init, xs_head)
+            template = {"carry": init, "ys": ys_shape}
+            snap, _ = restore_checkpoint(policy.directory, step,
+                                         template=template)
+            carry = jax.tree_util.tree_map(jnp.asarray, snap["carry"])
+            if t_done:
+                ys_parts.append(
+                    jax.tree_util.tree_map(jnp.asarray, snap["ys"])
+                )
+            start = t_done
+
+    mgr = CheckpointManager(policy.directory, keep=policy.keep)
+    for t0 in range(start, length, policy.every):
+        t1 = min(t0 + policy.every, length)
+        xs_chunk = jax.tree_util.tree_map(lambda a: a[t0:t1], xs)
+        carry, ys = scan_fn(carry, xs_chunk)
+        jax.block_until_ready(carry)
+        ys_parts.append(ys)
+        snapshot = {"carry": carry, "ys": _concat_parts(ys_parts)}
+        mgr.save(t1, snapshot, extra={"t_done": int(t1), "length": int(length)})
+        if policy.fail_after is not None and t0 < policy.fail_after <= t1:
+            raise InjectedCrash(
+                f"injected crash after durable snapshot at step {t1} "
+                f"(fail_after={policy.fail_after})"
+            )
+
+    if not ys_parts:  # length == 0
+        _, ys_shape = jax.eval_shape(scan_fn, init, xs)
+        return carry, jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), ys_shape
+        )
+    return carry, _concat_parts(ys_parts)

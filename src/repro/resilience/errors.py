@@ -1,0 +1,50 @@
+"""Typed error taxonomy for the resilience layer (DESIGN.md §16).
+
+Every failure mode the fallback ladder can demote on — and every fault
+the chaos suite injects — maps onto exactly one of these classes, so
+consumers can catch *categories* ("any lowering problem") instead of
+string-matching backend internals.  The classes multiply-inherit the
+builtin the pre-taxonomy code raised (``ValueError`` for the residency
+checks), so every existing ``except ValueError`` / ``pytest.raises``
+site keeps working.
+"""
+
+from __future__ import annotations
+
+
+class ResilienceError(Exception):
+    """Base class of the §16 taxonomy: anything the resilience layer can
+    classify, demote on, or deliberately inject."""
+
+
+class KernelLoweringError(ResilienceError, RuntimeError):
+    """A pallas kernel failed to lower/compile for the requested backend —
+    the "won't run on this device" class the fallback ladder demotes on."""
+
+
+class VmemBudgetExceeded(ResilienceError, ValueError):
+    """A resident plane outgrew the §2 VMEM budget.  Subclasses
+    ``ValueError`` because the residency checks always raised that; the
+    taxonomy adds the category without breaking existing handlers."""
+
+
+class BackendUnavailable(ResilienceError, RuntimeError):
+    """No rung of the fallback ladder could build + probe a working
+    resampler.  Carries the per-rung failures for the post-mortem."""
+
+    def __init__(self, message: str, failures=()):
+        super().__init__(message)
+        #: ``[(backend, exception), ...]`` — one entry per failed rung.
+        self.failures = tuple(failures)
+
+
+class CorruptAncestorsError(ResilienceError, ValueError):
+    """An ancestor vector failed validation (out-of-range / wrong dtype) —
+    the poisoned-ancestor fault class, caught at the consumer boundary
+    instead of silently mis-gathering state."""
+
+
+class InjectedCrash(ResilienceError, RuntimeError):
+    """The deterministic kill the crash-consistency tests schedule: raised
+    by ``CheckpointPolicy(fail_after=k)`` immediately AFTER snapshot ``k``
+    is durably on disk, so resume always sees a consistent checkpoint."""

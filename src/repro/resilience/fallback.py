@@ -1,0 +1,135 @@
+"""Backend fallback chains — the §16 demotion ladder.
+
+``build_with_fallback(spec)`` tries the spec's own backend first, then
+demotes rung by rung down the ladder (default ``pallas →
+pallas_interpret → xla → reference``), emitting one structured
+``backend_demotion`` ``ResilienceEvent`` per failed rung, and raises
+``BackendUnavailable`` — carrying every per-rung cause — only when the
+whole ladder is exhausted.  Demotion is strictly downward: a spec built
+for ``xla`` never silently promotes to a kernel backend.
+
+Failures are classified into the typed taxonomy before they travel:
+VMEM-budget rejections become ``VmemBudgetExceeded``, Mosaic/pallas
+lowering and trace failures become ``KernelLoweringError``; anything
+else is wrapped as-is in the exhaustion error.  The optional concrete
+PROBE (a tiny uniform-bank resample) catches backends that construct
+fine but die at first launch — the common shape of "pallas on a host
+without a TPU".
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.resilience.errors import (
+    BackendUnavailable,
+    KernelLoweringError,
+    ResilienceError,
+    VmemBudgetExceeded,
+)
+from repro.resilience.guards import demotion_event, emit_event
+
+#: The demotion order — fastest surface first, pure-jnp reference last.
+DEFAULT_LADDER = ("pallas", "pallas_interpret", "xla", "reference")
+
+#: Probe geometry: one kernel segment's worth of lanes, so every family's
+#: tile-fixed pallas kernel accepts the bank (KERNEL_SEGMENT = 1024).
+_PROBE_N = 2048
+
+_LOWERING_MARKERS = (
+    "mosaic", "pallas", "lowering", "unimplemented", "not implemented",
+    "unsupported", "tpu",
+)
+_VMEM_MARKERS = ("vmem", "scratch", "budget")
+
+
+def classify_backend_error(error: BaseException) -> ResilienceError:
+    """Map a raw build/probe failure onto the §16 typed taxonomy.
+
+    Already-typed errors pass through; VMEM-budget messages become
+    ``VmemBudgetExceeded``; lowering/trace-surface failures become
+    ``KernelLoweringError``; anything else is wrapped as
+    ``KernelLoweringError`` too — from the ladder's point of view every
+    non-resource failure is "this rung cannot lower/run here".
+    """
+    if isinstance(error, ResilienceError):
+        return error
+    msg = str(error)
+    low = msg.lower()
+    if any(m in low for m in _VMEM_MARKERS):
+        wrapped = VmemBudgetExceeded(msg)
+    elif any(m in low for m in _LOWERING_MARKERS):
+        wrapped = KernelLoweringError(msg)
+    else:
+        wrapped = KernelLoweringError(f"{type(error).__name__}: {msg}")
+    wrapped.__cause__ = error
+    return wrapped
+
+
+def _ladder_for(backend: str, ladder: Optional[Sequence[str]]) -> Tuple[str, ...]:
+    """The rungs to try: the spec's backend, then every DEFAULT_LADDER rung
+    strictly below it (or the caller's explicit ladder, verbatim)."""
+    if ladder is not None:
+        rungs = tuple(ladder)
+        if not rungs:
+            raise ValueError("build_with_fallback: ladder must be non-empty")
+        return rungs
+    if backend not in DEFAULT_LADDER:
+        return (backend,)
+    return DEFAULT_LADDER[DEFAULT_LADDER.index(backend):]
+
+
+def _probe(resampler) -> None:
+    """One tiny concrete resample — forces compilation/launch on the rung.
+
+    Uniform weights over ``_PROBE_N`` lanes with a fixed key: clean input
+    (never trips the degeneracy guard), deterministic, and block-until-
+    ready so launch-time failures surface here rather than at first use.
+    """
+    key = jax.random.PRNGKey(0)
+    w = jnp.full((_PROBE_N,), 1.0 / _PROBE_N, jnp.float32)
+    jax.block_until_ready(resampler(key, w))
+
+
+def build_with_fallback(spec, *, ladder=None, recorder=None, probe: bool = True):
+    """Build ``spec`` with backend demotion (DESIGN.md §16).
+
+    Returns the first rung's ``Resampler`` that builds (and, with
+    ``probe=True``, survives a concrete launch).  Every failed rung emits
+    a ``backend_demotion`` event to ``recorder`` (``.emit``/``.append``
+    duck-typed, like the guard recorder) AND to any active
+    ``record_resilience_events`` context.  Exhaustion raises
+    ``BackendUnavailable`` whose ``.failures`` holds each
+    ``(backend, typed_error)`` pair in demotion order.
+    """
+    rungs = _ladder_for(getattr(spec, "backend", "reference"), ladder)
+    failures = []
+    for i, rung in enumerate(rungs):
+        nxt = rungs[i + 1] if i + 1 < len(rungs) else None
+        try:
+            candidate = spec if getattr(spec, "backend", None) == rung \
+                else spec.replace(backend=rung)
+            resampler = candidate.build()
+            if probe:
+                _probe(resampler)
+            return resampler
+        except Exception as err:  # noqa: BLE001 — classified + re-raised typed
+            typed = classify_backend_error(err)
+            failures.append((rung, typed))
+            event = demotion_event(spec.name, rung, nxt, typed)
+            if recorder is not None:
+                emit_fn = getattr(recorder, "emit", None)
+                if emit_fn is not None:
+                    fields = event.as_dict()
+                    emit_fn(fields.pop("kind"), **fields)
+                else:
+                    recorder.append(event.as_dict())
+            emit_event(event)
+    lines = "; ".join(f"{b}: {type(e).__name__}: {e}" for b, e in failures)
+    raise BackendUnavailable(
+        f"{spec.name}: every backend rung failed ({lines})",
+        failures=tuple(failures),
+    )

@@ -1,0 +1,132 @@
+"""Deterministic fault injection — the §16 chaos harness's ammunition.
+
+Every injector is PRNG-keyed and pure: the same key produces the same
+fault plane on every backend and every run, so a chaos cell that fails
+replays bit-for-bit.  Two kinds of primitive live here:
+
+* **Injectors** take a clean array and a key and corrupt it —
+  ``inject_nan_weights`` / ``inject_inf_weights`` (weight planes),
+  ``bitflip_states`` (raw mantissa/exponent bit-flips in f32 state
+  planes), ``poison_ancestors`` (out-of-range ancestor indices).
+* **Generators** build whole adversarial log-weight banks from scratch —
+  all-NaN, all-``-inf``, one-hot, near-collapse — the §12/§16 degenerate
+  signatures, enumerated in ``FAULT_CLASSES`` so the chaos suite and the
+  CI lane sweep the same vocabulary.
+
+``validate_ancestors`` is the consumer-side tripwire: a host-side range
+check that raises the typed ``CorruptAncestorsError`` instead of letting
+a poisoned gather scatter garbage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.resilience.errors import CorruptAncestorsError
+
+# ----------------------------------------------------------------- injectors
+
+
+def inject_nan_weights(key, w: jnp.ndarray, rate: float = 0.1) -> jnp.ndarray:
+    """Seed NaNs into a weight/log-weight plane at ``rate`` (Bernoulli per
+    element, keyed)."""
+    mask = jax.random.bernoulli(key, rate, jnp.shape(w))
+    return jnp.where(mask, jnp.float32(jnp.nan), w)
+
+
+def inject_inf_weights(key, w: jnp.ndarray, rate: float = 0.1,
+                       sign: int = 1) -> jnp.ndarray:
+    """Seed ±inf into a weight/log-weight plane at ``rate`` (keyed)."""
+    mask = jax.random.bernoulli(key, rate, jnp.shape(w))
+    return jnp.where(mask, jnp.float32(sign) * jnp.float32(jnp.inf), w)
+
+
+def bitflip_states(key, planes: jnp.ndarray, rate: float = 0.01) -> jnp.ndarray:
+    """Flip one uniformly-chosen bit in each selected f32 element.
+
+    The radiation-storm model: elements are selected Bernoulli(``rate``),
+    each selected element gets exactly one of its 32 bits inverted —
+    mantissa flips perturb values, exponent/sign flips can mint NaN/inf,
+    so downstream guards must cope with BOTH.  Pure bitcast arithmetic;
+    no host round-trip.
+    """
+    planes = jnp.asarray(planes, jnp.float32)
+    k_sel, k_bit = jax.random.split(key)
+    sel = jax.random.bernoulli(k_sel, rate, planes.shape)
+    bit = jax.random.randint(k_bit, planes.shape, 0, 32, dtype=jnp.int32)
+    bits = lax.bitcast_convert_type(planes, jnp.uint32)
+    flipped = bits ^ (jnp.uint32(1) << bit.astype(jnp.uint32))
+    out = lax.bitcast_convert_type(jnp.where(sel, flipped, bits), jnp.float32)
+    return out
+
+
+def poison_ancestors(key, ancestors: jnp.ndarray, n: int,
+                     rate: float = 0.05) -> jnp.ndarray:
+    """Replace a keyed Bernoulli subset of ancestor indices with
+    out-of-range values (negative or ``>= n``) — the corrupted-index
+    plane ``validate_ancestors`` must catch."""
+    k_sel, k_val = jax.random.split(key)
+    sel = jax.random.bernoulli(k_sel, rate, jnp.shape(ancestors))
+    bad = jax.random.randint(k_val, jnp.shape(ancestors), n, 2 * n + 1,
+                             dtype=jnp.int32)
+    sign = jnp.where(jax.random.bernoulli(k_val, 0.5, jnp.shape(ancestors)),
+                     jnp.int32(1), jnp.int32(-1))
+    return jnp.where(sel, sign * bad, ancestors)
+
+
+def validate_ancestors(ancestors, n: int) -> jnp.ndarray:
+    """Host-side range tripwire: every index must lie in ``[0, n)``.
+
+    Returns the (concrete) ancestors unchanged when clean; raises the
+    typed ``CorruptAncestorsError`` — never silent garbage — when any
+    index is out of range.  Concrete-only by design: the chaos harness
+    checks evidence host-side, the hot path never pays for it.
+    """
+    a = np.asarray(ancestors)
+    bad = (a < 0) | (a >= n)
+    if bool(bad.any()):
+        count = int(bad.sum())
+        worst = a[bad].ravel()
+        raise CorruptAncestorsError(
+            f"ancestor vector holds {count} out-of-range indices "
+            f"(n={n}; e.g. {worst[:4].tolist()})"
+        )
+    return ancestors
+
+
+# ---------------------------------------------------------------- generators
+
+
+def all_nan_bank(n: int) -> jnp.ndarray:
+    """f32[n] log-weight bank of NaNs — total information loss."""
+    return jnp.full((n,), jnp.nan, jnp.float32)
+
+
+def all_neg_inf_bank(n: int) -> jnp.ndarray:
+    """f32[n] log-weight bank of ``-inf`` — every particle impossible."""
+    return jnp.full((n,), -jnp.inf, jnp.float32)
+
+
+def one_hot_bank(n: int, hot: int = 0) -> jnp.ndarray:
+    """All mass on one particle (``-inf`` everywhere else): NOT degenerate
+    under the §16 predicate — finite max — but ESS sits at its 1/N floor."""
+    return jnp.where(jnp.arange(n) == hot, jnp.float32(0.0),
+                     jnp.float32(-jnp.inf)).astype(jnp.float32)
+
+
+def near_collapse_bank(n: int, scale: float = 80.0) -> jnp.ndarray:
+    """Steep finite geometric decay — numerically near one-hot without any
+    non-finite entry; exercises the exp/shift path at the underflow edge."""
+    return (-jnp.float32(scale) * jnp.arange(n, dtype=jnp.float32))
+
+
+#: name → log-weight-bank generator (f32[n]); the chaos suite's sweep axis.
+FAULT_CLASSES = {
+    "all_nan": all_nan_bank,
+    "all_neg_inf": all_neg_inf_bank,
+    "one_hot": one_hot_bank,
+    "near_collapse": near_collapse_bank,
+}

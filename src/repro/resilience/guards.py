@@ -1,0 +1,171 @@
+"""Degeneracy-guard policy + the structured resilience-event recorder
+(DESIGN.md §16).
+
+``GuardPolicy`` is a spec axis (``ResamplerSpec.guard``), not a runtime
+switch:
+
+  * ``'off'``     — the pre-§16 program, byte for byte.
+  * ``'flag'``    — the SAME computation (identical jaxpr: the degenerate
+                    flag is already composed into ``StepStats`` for every
+                    policy), plus a host-side ``ResilienceEvent`` when a
+                    collapsed bank passes through a guarded entry — and
+                    only while a recorder is active at TRACE time, so the
+                    default program carries zero extra equations.
+  * ``'recover'`` — degenerate banks are substituted with the uniform
+                    bank BEFORE dispatch (``jnp.where`` — an exact bitwise
+                    passthrough on clean inputs), so every backend runs
+                    the same recovered resample with the same key: RNG is
+                    consumed branch-independently and the outputs are
+                    finite whatever was fed in.
+
+The recorder mirrors the §15 telemetry discipline: enabling it is a
+Python-static decision (``record_resilience_events``), so the structural
+jaxpr gates (single-launch, pass 6, pass 7) never see the callback
+unless a test asked for evidence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+#: The spec-axis vocabulary, validated eagerly by every spec __post_init__.
+GUARD_POLICIES = ("off", "flag", "recover")
+
+
+def check_guard_policy(value, who: str) -> None:
+    """Eager spec validation (same UX as the backend/plane-dtype checks)."""
+    if value not in GUARD_POLICIES:
+        hint = difflib.get_close_matches(str(value), GUARD_POLICIES, n=1)
+        did_you_mean = f" — did you mean {hint[0]!r}?" if hint else ""
+        raise ValueError(
+            f"{who}.guard must be one of {list(GUARD_POLICIES)}; "
+            f"got {value!r}{did_you_mean}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceEvent:
+    """One structured resilience occurrence for the JSONL flight recorder.
+
+    ``kind`` is the taxonomy key: ``guard_degenerate`` (a collapsed bank
+    hit a guarded entry), ``backend_demotion`` (the fallback ladder moved
+    down a rung), ``fault_injected`` (the chaos harness seeded a fault).
+    """
+
+    kind: str
+    family: str = ""
+    backend: str = ""
+    entry: str = ""
+    policy: str = ""
+    detail: Tuple[Tuple[str, Any], ...] = ()
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {
+            "kind": self.kind,
+            "family": self.family,
+            "backend": self.backend,
+            "entry": self.entry,
+            "policy": self.policy,
+        }
+        d.update(dict(self.detail))
+        return d
+
+
+# Active recorders, LIFO.  A recorder is anything with ``.emit(event,
+# **fields)`` (the obs JsonlSink) or ``.append(dict)`` (a plain list in
+# tests).  Module-level, not a contextvar: trace-time staticness is the
+# point — the flag is read when the consumer is TRACED, like telemetry=.
+_RECORDERS: list = []
+
+
+@contextmanager
+def record_resilience_events(recorder):
+    """Enable resilience-event emission for the dynamic extent.  Consumers
+    traced inside this context stage a ``jax.debug.callback`` per guarded
+    entry; consumers traced outside it compile the exact unguarded
+    program."""
+    _RECORDERS.append(recorder)
+    try:
+        yield recorder
+    finally:
+        _RECORDERS.remove(recorder)
+
+
+def guard_events_enabled() -> bool:
+    return bool(_RECORDERS)
+
+
+def emit_event(event: ResilienceEvent) -> None:
+    """Deliver one event to every active recorder (host-side)."""
+    payload = event.as_dict()
+    for rec in list(_RECORDERS):
+        emit = getattr(rec, "emit", None)
+        if emit is not None:
+            fields = dict(payload)
+            emit(fields.pop("kind"), **fields)
+        else:
+            rec.append(payload)
+
+
+def maybe_emit_guard_event(
+    family: str, backend: str, entry: str, policy: str, degenerate
+) -> None:
+    """Stage the guard's flight-recorder evidence, trace-time statically.
+
+    No-op (zero jaxpr equations) unless a recorder is active when the
+    guarded entry is traced.  When active, a ``jax.debug.callback``
+    inspects the degenerate flag at run time and emits one
+    ``guard_degenerate`` event per call that actually saw a collapsed
+    bank — clean steps stay silent."""
+    if not _RECORDERS:
+        return
+    import jax
+
+    def _cb(deg):
+        deg = np.asarray(deg)
+        count = int(deg.sum()) if deg.ndim else int(bool(deg))
+        if count:
+            emit_event(ResilienceEvent(
+                kind="guard_degenerate", family=family, backend=backend,
+                entry=entry, policy=policy,
+                detail=(("degenerate_rows", count),
+                        ("bank_rows", int(deg.size))),
+            ))
+
+    jax.debug.callback(_cb, degenerate)
+
+
+def classify_step_stats(stats, n: int) -> Dict[str, bool]:
+    """Host-side degeneracy classification of one concrete ``StepStats``
+    record — the three §16 collapse signatures the guard watches:
+
+      * ``degenerate``   — non-finite bank (all-``-inf``/nan/±inf);
+      * ``ess_floor``    — ESS at its 1/N floor (mass on one particle);
+      * ``single_survivor`` — the ancestor vector kept one lineage.
+    """
+    ess_norm = float(np.asarray(stats.ess_norm))
+    survivors = int(np.asarray(stats.survivors))
+    degenerate = bool(np.asarray(stats.degenerate))
+    return {
+        "degenerate": degenerate,
+        "ess_floor": ess_norm <= (1.0 + 1e-6) / n,
+        "single_survivor": survivors <= 1,
+        "any": degenerate or ess_norm <= (1.0 + 1e-6) / n or survivors <= 1,
+    }
+
+
+def demotion_event(family: str, from_backend: str, to_backend: Optional[str],
+                   error: BaseException) -> ResilienceEvent:
+    """The fallback ladder's per-rung evidence (``backend_demotion``)."""
+    return ResilienceEvent(
+        kind="backend_demotion", family=family, backend=from_backend,
+        entry="build",
+        detail=(("to_backend", to_backend or ""),
+                ("error_type", type(error).__name__),
+                ("error", str(error)[:500])),
+    )

@@ -190,6 +190,31 @@ def test_fixture_selftest_clean():
     assert selftest() == []
 
 
+# ---------------------------------------------------- 2b. pass 7 (§16)
+def test_guard_audit_healthy_cell_is_clean():
+    from repro.analysis.guards import audit_guard_cell
+
+    rep = audit_guard_cell("megopolis", "pallas_interpret")
+    assert rep["ok"], rep["violations"]
+    assert rep["flag_jaxpr_match"]
+    assert rep["launches_off"] == rep["launches_recover"]
+    assert rep["clean_bit_identical"]
+    assert rep["degenerate_recovered"]
+
+
+def test_guard_audit_leaky_fixture_trips_every_check():
+    from repro.analysis.fixtures import leaky_guard
+    from repro.analysis.guards import compare_guard_traces
+
+    rep = compare_guard_traces(
+        "fixture:leaky_guard", *leaky_guard(), concrete=True
+    )
+    assert not rep["ok"]
+    assert not rep["flag_jaxpr_match"]
+    assert rep["launches_recover"] != rep["launches_off"]
+    assert not rep["degenerate_recovered"]
+
+
 # ------------------------------------------------------------ 3. the stack
 def test_contract_table_covers_registry():
     cells = list(contract_cells())

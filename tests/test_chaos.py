@@ -1,0 +1,177 @@
+"""DESIGN.md §16 — the deterministic chaos matrix.
+
+Every cell seeds a PRNG-keyed fault (``repro.resilience.faults``) into a
+guarded entry and proves the §16 contract: the step either RECOVERS
+(finite outputs, in-range ancestors, degenerate evidence) or raises the
+TYPED error — never silent garbage.  Faults are pure functions of their
+key, so a red cell replays bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spec import spec_for_backend
+from repro.kernels.common import TILE
+from repro.resilience import (
+    CorruptAncestorsError,
+    FAULT_CLASSES,
+    all_nan_bank,
+    bitflip_states,
+    inject_inf_weights,
+    inject_nan_weights,
+    poison_ancestors,
+    record_resilience_events,
+    validate_ancestors,
+)
+
+N = 2 * TILE
+BACKENDS = ("reference", "xla", "pallas_interpret")
+#: One iterate-and-compare family, the bounded-loop family, and two
+#: prefix-sum kinds — the §12 kernel-shape spread at chaos-matrix cost.
+FAMILIES = ("megopolis", "rejection", "systematic", "residual")
+#: Collapse signatures (non-finite max): the guard must fire.
+COLLAPSED = ("all_nan", "all_neg_inf")
+#: Concentrated-but-finite signatures: legal posteriors, guard must NOT fire.
+CONCENTRATED = ("one_hot", "near_collapse")
+
+
+def _build(name, backend, guard="recover"):
+    return spec_for_backend(name, backend, num_iters=8, max_iters=24,
+                            guard=guard).build()
+
+
+# ------------------------------------------------ injector determinism
+def test_injectors_are_deterministic():
+    key = jax.random.PRNGKey(123)
+    w = jnp.ones((N,), jnp.float32)
+    for inj in (inject_nan_weights, inject_inf_weights):
+        np.testing.assert_array_equal(
+            np.asarray(inj(key, w)), np.asarray(inj(key, w))
+        )
+    np.testing.assert_array_equal(
+        np.asarray(bitflip_states(key, w)), np.asarray(bitflip_states(key, w))
+    )
+    a = jnp.arange(N, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(poison_ancestors(key, a, N)),
+        np.asarray(poison_ancestors(key, a, N)),
+    )
+
+
+def test_injectors_actually_corrupt():
+    key = jax.random.PRNGKey(7)
+    w = jnp.ones((N,), jnp.float32)
+    assert bool(jnp.any(jnp.isnan(inject_nan_weights(key, w))))
+    assert bool(jnp.any(jnp.isinf(inject_inf_weights(key, w))))
+    flipped = bitflip_states(key, w, rate=0.5)
+    assert int(jnp.sum(flipped != w)) > 0
+    bad = poison_ancestors(key, jnp.arange(N, dtype=jnp.int32), N, rate=0.5)
+    assert bool(jnp.any((bad < 0) | (bad >= N)))
+
+
+def test_validate_ancestors_tripwire():
+    a = jnp.arange(N, dtype=jnp.int32)
+    assert validate_ancestors(a, N) is a
+    bad = poison_ancestors(jax.random.PRNGKey(0), a, N, rate=0.1)
+    with pytest.raises(CorruptAncestorsError, match="out-of-range"):
+        validate_ancestors(bad, N)
+
+
+# --------------------------------------------------- the chaos matrix
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", FAMILIES)
+@pytest.mark.parametrize("fault", sorted(FAULT_CLASSES))
+def test_chaos_matrix_recovers_every_cell(fault, name, backend, base_key):
+    """fault × family × backend: the guarded step never emits garbage."""
+    lw = FAULT_CLASSES[fault](N)
+    p = jax.random.normal(jax.random.PRNGKey(9), (N, 2))
+    r = _build(name, backend)
+    p_out, anc, stats = r.step(base_key, lw, p, 2.0)
+    anc = np.asarray(anc)
+    assert (anc >= 0).all() and (anc < N).all()
+    assert np.isfinite(np.asarray(p_out)).all()
+    assert np.isfinite(np.asarray(stats.ess_norm))
+    assert np.isfinite(np.asarray(stats.max_weight))
+    assert bool(np.asarray(stats.degenerate)) == (fault in COLLAPSED)
+    if fault in COLLAPSED:
+        # recovered = the uniform-bank resample: every stat is exact
+        assert float(np.asarray(stats.ess_norm)) == 1.0
+        assert float(np.asarray(stats.log_evidence_incr)) == 0.0
+    validate_ancestors(anc, N)
+
+
+@pytest.mark.parametrize("fault", sorted(COLLAPSED))
+def test_chaos_recovery_agrees_across_backends(fault, base_key):
+    """Recovery reduces a collapsed bank to the uniform (all-zeros) bank,
+    so it inherits the §12 parity structure: xla is bit-identical to
+    reference, and EVERY backend's recovered step is bit-identical to
+    that same backend's clean uniform-bank step (the pallas kernels have
+    their own RNG layout, so cross-surface equality is per-backend)."""
+    lw = FAULT_CLASSES[fault](N)
+    zeros = jnp.zeros((N,), jnp.float32)
+    p = jax.random.normal(jax.random.PRNGKey(10), (N, 2))
+    outs = {}
+    for b in BACKENDS:
+        r = _build("megopolis", b)
+        outs[b] = r.step(base_key, lw, p, 2.0)
+        clean = r.step(base_key, zeros, p, 2.0)
+        # recovered == same backend's uniform-bank step (degenerate flag
+        # aside, which truthfully differs)
+        for g, e in zip(jax.tree_util.tree_leaves(outs[b])[:-1],
+                        jax.tree_util.tree_leaves(clean)[:-1]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+    for a, b in zip(jax.tree_util.tree_leaves(outs["reference"]),
+                    jax.tree_util.tree_leaves(outs["xla"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ("megopolis", "systematic"))
+def test_chaos_sprinkled_nan_weights(name, base_key):
+    """Partial corruption: a NaN-sprinkled bank is degenerate (any NaN
+    poisons the normaliser) and must recover like a collapsed one."""
+    kf, kw = jax.random.split(jax.random.PRNGKey(11))
+    lw = inject_nan_weights(kf, jax.random.normal(kw, (N,)), rate=0.05)
+    p = jax.random.normal(jax.random.PRNGKey(12), (N,))
+    r = _build(name, "reference")
+    p_out, anc, stats = r.step(base_key, lw, p, 2.0)
+    assert bool(np.asarray(stats.degenerate))
+    assert np.isfinite(np.asarray(p_out)).all()
+    validate_ancestors(np.asarray(anc), N)
+
+
+def test_chaos_bitflipped_states_still_resample(base_key):
+    """Bit-flips in the STATE planes (not the weights): selection is
+    driven by clean weights, so the step must complete with in-range
+    ancestors — corrupted state values pass through by design (state is
+    data, the resampler only routes it)."""
+    lw = jax.random.normal(jax.random.PRNGKey(13), (N,))
+    p = bitflip_states(jax.random.PRNGKey(14),
+                       jax.random.normal(jax.random.PRNGKey(15), (N, 2)),
+                       rate=0.01)
+    r = _build("megopolis", "pallas_interpret")
+    p_out, anc, stats = r.step(base_key, lw, p, 2.0)
+    validate_ancestors(np.asarray(anc), N)
+    assert not bool(np.asarray(stats.degenerate))
+    # routing only: every output row is SOME input row, bit for bit
+    np.testing.assert_array_equal(
+        np.asarray(p_out), np.asarray(p)[np.asarray(anc)]
+    )
+
+
+def test_chaos_emits_fault_evidence(base_key):
+    """A chaos cell run under the recorder leaves structured evidence:
+    the guard_degenerate event carries the family/backend/entry cell."""
+    r = _build("rejection", "reference")
+    p = jax.random.normal(jax.random.PRNGKey(16), (N,))
+    events = []
+    with record_resilience_events(events):
+        r.step(base_key, all_nan_bank(N), p, 2.0)
+    jax.effects_barrier()
+    kinds = [e["kind"] for e in events]
+    assert "guard_degenerate" in kinds
+    ev = events[kinds.index("guard_degenerate")]
+    assert ev["family"] == "rejection"
+    assert ev["backend"] == "reference"
+    assert ev["entry"] == "step"

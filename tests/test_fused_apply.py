@@ -137,6 +137,59 @@ def test_apply_rows_matches_rows(name, backend, plane_dtype, w_bank, p_bank,
         _assert_equal(got_p[b], pb)
 
 
+# ------------------------------------------ 1b. degenerate-weight parity
+# The §12 entry-consistency cells extended to collapsed WEIGHT banks
+# (DESIGN.md §16, satellite S3): under guard='recover', every degenerate
+# signature resamples exactly like the uniform bank, and the fused
+# entries stay mutually consistent (__call__ == apply ancestors,
+# apply_rows row b == apply row b) — family × backend × plane dtype.
+def _degenerate_weight_cases(n):
+    uni = jnp.full((n,), 1.0 / n, jnp.float32)
+    return {
+        "all_nan": jnp.full((n,), jnp.nan, jnp.float32),
+        "all_zero": jnp.zeros((n,), jnp.float32),
+        "pos_inf_entry": uni.at[5].set(jnp.inf),
+        "subnormal": jnp.full((n,), 1e-40, jnp.float32),
+        "one_hot": jnp.zeros((n,), jnp.float32).at[n // 3].set(1.0),
+    }
+
+
+@pytest.mark.parametrize("plane_dtype", PLANE_DTYPES_TESTED)
+@pytest.mark.parametrize("case", sorted(_degenerate_weight_cases(4)))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", ("megopolis", "rejection", "systematic"))
+def test_degenerate_weights_entry_consistency(name, backend, case,
+                                              plane_dtype, p_single, p_bank,
+                                              base_key):
+    w = _degenerate_weight_cases(N)[case]
+    r = spec_for_backend(name, backend, num_iters=ITERS,
+                         max_iters=MAX_ITERS, plane_dtype=plane_dtype,
+                         guard="recover").build()
+    ancestors = r(base_key, w)
+    assert bool(jnp.all((ancestors >= 0) & (ancestors < N)))
+    got_p, got_a = r.apply(base_key, w, p_single)
+    _assert_equal(got_a, ancestors)
+    _assert_equal(got_p, jnp.take(r.quantise(p_single), ancestors, axis=0))
+    keys = split_batch_keys(base_key, BATCH)
+    w_bank = jnp.stack([w] * BATCH)
+    rows_p, rows_a = r.apply_rows(keys, w_bank, p_bank)
+    for b in range(BATCH):
+        pb, ab = r.apply(keys[b], w_bank[b], p_bank[b])
+        _assert_equal(rows_a[b], ab)
+        _assert_equal(rows_p[b], pb)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_degenerate_weights_recover_equals_uniform(backend, base_key):
+    """The recover contract on the weights entries: collapsed banks draw
+    the SAME ancestors as the uniform bank with the same key."""
+    r = spec_for_backend("systematic", backend, guard="recover").build()
+    uni = jnp.full((N,), 1.0 / N, jnp.float32)
+    exp = r(base_key, uni)
+    for case in ("all_nan", "all_zero", "pos_inf_entry"):
+        _assert_equal(r(base_key, _degenerate_weight_cases(N)[case]), exp)
+
+
 # ------------------------------------------------------- 2. state layouts
 @pytest.mark.parametrize("backend", ("reference", "pallas_interpret"))
 @pytest.mark.parametrize("name", ("megopolis", "rejection", "systematic"))

@@ -1,0 +1,409 @@
+"""DESIGN.md §16 — degeneracy guards, fallback chains, crash consistency.
+
+Four sections:
+
+1. guard policy — spec validation, flag/recover semantics on the public
+   entries, event evidence through the trace-time-static recorder;
+2. backend fallback — the demotion ladder on a host without the
+   accelerator, typed error taxonomy, exhaustion;
+3. sink crash consistency — buffered JSONL flush on normal AND abnormal
+   exit (satellite S2);
+4. checkpointed scans — chunk ≡ monolith bit-identity, kill-and-resume
+   through ``run_filter`` / ``run_smc_sampler`` (satellite S4).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    degenerate_log_weights,
+    degenerate_weights,
+    effective_sample_size,
+    normalise_log_weights,
+)
+from repro.core.spec import MegopolisSpec, PrefixSumSpec, spec_for_backend
+from repro.kernels.common import TILE
+from repro.obs.sink import JsonlSink
+from repro.resilience import (
+    BackendUnavailable,
+    CheckpointPolicy,
+    CorruptAncestorsError,
+    GUARD_POLICIES,
+    InjectedCrash,
+    KernelLoweringError,
+    ResilienceError,
+    VmemBudgetExceeded,
+    build_with_fallback,
+    classify_backend_error,
+    checkpointed_scan,
+    record_resilience_events,
+)
+from repro.resilience.fallback import DEFAULT_LADDER, _ladder_for
+
+N = 2 * TILE
+BACKENDS = ("reference", "xla", "pallas_interpret")
+
+
+def _build(name, backend, guard="off", plane_dtype="float32"):
+    return spec_for_backend(name, backend, num_iters=8, max_iters=24,
+                            plane_dtype=plane_dtype, guard=guard).build()
+
+
+# ------------------------------------------------------- 1. guard policy
+def test_guard_policies_vocabulary():
+    assert GUARD_POLICIES == ("off", "flag", "recover")
+    for g in GUARD_POLICIES:
+        assert MegopolisSpec(guard=g).guard == g
+
+
+def test_bad_guard_policy_raises_with_hint():
+    with pytest.raises(ValueError, match="recover"):
+        MegopolisSpec(guard="recovr")
+    with pytest.raises(ValueError, match="guard"):
+        PrefixSumSpec(kind="systematic", guard="on")
+
+
+def test_metrics_degenerate_predicates():
+    n = 8
+    assert bool(degenerate_log_weights(jnp.full((n,), -jnp.inf)))
+    assert bool(degenerate_log_weights(jnp.full((n,), jnp.nan)))
+    assert bool(degenerate_log_weights(jnp.zeros((n,)).at[3].set(jnp.inf)))
+    # one-hot has a finite max: NOT degenerate (mass on one particle is a
+    # legal, if collapsed, posterior).
+    assert not bool(
+        degenerate_log_weights(jnp.full((n,), -jnp.inf).at[2].set(0.0))
+    )
+    assert bool(degenerate_weights(jnp.zeros((n,))))
+    assert bool(degenerate_weights(jnp.ones((n,)).at[0].set(jnp.nan)))
+    assert not bool(degenerate_weights(jnp.ones((n,))))
+
+
+def test_normalise_log_weights_uniform_fallback():
+    """Satellite S1: a fully collapsed bank normalises to the exact uniform
+    bank (ESS = N), identically for every degenerate signature."""
+    for bad in (jnp.full((N,), -jnp.inf), jnp.full((N,), jnp.nan)):
+        w = normalise_log_weights(bad)
+        np.testing.assert_array_equal(
+            np.asarray(w), np.full((N,), 1.0 / N, np.float32)
+        )
+        assert float(effective_sample_size(bad)) == float(N)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", ("megopolis", "rejection", "systematic"))
+def test_recover_weights_entries_equal_uniform(name, backend, base_key):
+    """§16 recover on the weights entries: a degenerate linear-weight bank
+    resamples EXACTLY like the uniform bank — same key, same backend, bit
+    for bit — across ``__call__``/``apply``/``apply_rows``."""
+    r = _build(name, backend, guard="recover")
+    w_uni = jnp.full((N,), 1.0 / N, jnp.float32)
+    p = jax.random.normal(jax.random.PRNGKey(3), (N, 2))
+    for w_bad in (
+        jnp.zeros((N,), jnp.float32),
+        jnp.full((N,), jnp.nan, jnp.float32),
+        w_uni.at[5].set(jnp.inf),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(r(base_key, w_bad)), np.asarray(r(base_key, w_uni))
+        )
+        got = r.apply(base_key, w_bad, p)
+        exp = r.apply(base_key, w_uni, p)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+    # bank form: one poisoned row recovers, clean rows stay untouched
+    keys = jax.random.split(base_key, 2)
+    w_bank = jnp.stack([jnp.full((N,), jnp.nan, jnp.float32), w_uni])
+    p_bank = jax.random.normal(jax.random.PRNGKey(4), (2, N, 2))
+    got = r.apply_rows(keys, w_bank, p_bank)
+    exp = r.apply_rows(keys, jnp.stack([w_uni, w_uni]), p_bank)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recover_step_resamples_collapsed_bank(backend, base_key):
+    """A collapsed log-weight bank under recover: the step substitutes the
+    uniform bank pre-dispatch, so with a forcing threshold it RESAMPLES —
+    finite stats, in-range ancestors, degenerate=True, incr = 0."""
+    r = _build("megopolis", backend, guard="recover")
+    p = jax.random.normal(jax.random.PRNGKey(5), (N, 2))
+    for bad in (jnp.full((N,), jnp.nan), jnp.full((N,), -jnp.inf)):
+        p_out, anc, stats = r.step(base_key, bad, p, 2.0)
+        anc = np.asarray(anc)
+        assert bool(np.asarray(stats.degenerate))
+        assert float(np.asarray(stats.resampled)) == 1.0
+        assert float(np.asarray(stats.ess_norm)) == 1.0
+        assert float(np.asarray(stats.log_evidence_incr)) == 0.0
+        assert (anc >= 0).all() and (anc < N).all()
+        assert np.isfinite(np.asarray(p_out)).all()
+        # the recovered step IS the uniform-bank step, bit for bit
+        exp = r.step(base_key, jnp.zeros((N,)), p, 2.0)
+        for g, e in zip(jax.tree_util.tree_leaves((p_out, anc, stats))[:-1],
+                        jax.tree_util.tree_leaves(exp)[:-1]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def test_flag_policy_composes_degenerate_without_recovery(base_key):
+    """'flag' keeps the unguarded computation (garbage in, garbage out is
+    allowed) but the StepStats degenerate bit still reports the collapse."""
+    r = _build("systematic", "reference", guard="flag")
+    p = jax.random.normal(jax.random.PRNGKey(6), (N,))
+    _, _, stats = r.step(base_key, jnp.full((N,), jnp.nan), p, 2.0)
+    assert bool(np.asarray(stats.degenerate))
+    _, _, stats = r.step(base_key, jnp.zeros((N,)), p, 2.0)
+    assert not bool(np.asarray(stats.degenerate))
+
+
+def test_guard_events_recorded_only_inside_context(base_key):
+    """The recorder is trace-time static: events flow only for programs
+    traced inside ``record_resilience_events``, and only for calls that
+    actually saw a collapsed bank."""
+    r = _build("megopolis", "reference", guard="flag")
+    p = jax.random.normal(jax.random.PRNGKey(7), (N,))
+    bad = jnp.full((N,), jnp.nan)
+
+    events = []
+    with record_resilience_events(events):
+        r.step(base_key, bad, p, 2.0)
+        r.step(base_key, jnp.zeros((N,)), p, 2.0)  # clean: silent
+    jax.effects_barrier()
+    assert [e["kind"] for e in events] == ["guard_degenerate"]
+    assert events[0]["family"] == "megopolis"
+    assert events[0]["entry"] == "step"
+    assert events[0]["policy"] == "flag"
+    assert events[0]["degenerate_rows"] == 1
+
+    # outside the context: structurally silent
+    events2 = []
+    r.step(base_key, bad, p, 2.0)
+    jax.effects_barrier()
+    assert events2 == []
+
+
+def test_guard_events_reach_jsonl_sink(tmp_path, base_key):
+    """End to end: guard evidence lands in the obs JSONL flight recorder."""
+    path = os.path.join(str(tmp_path), "resilience.jsonl")
+    r = _build("megopolis", "reference", guard="recover")
+    p = jax.random.normal(jax.random.PRNGKey(8), (N,))
+    with JsonlSink(path) as sink:
+        with record_resilience_events(sink):
+            r.step(base_key, jnp.full((N,), -jnp.inf), p, 2.0)
+            jax.effects_barrier()
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["event"] for l in lines] == ["guard_degenerate"]
+    assert lines[0]["policy"] == "recover"
+
+
+# --------------------------------------------------- 2. backend fallback
+def test_error_taxonomy():
+    assert issubclass(KernelLoweringError, (ResilienceError, RuntimeError))
+    assert issubclass(VmemBudgetExceeded, (ResilienceError, ValueError))
+    assert issubclass(BackendUnavailable, (ResilienceError, RuntimeError))
+    assert issubclass(CorruptAncestorsError, (ResilienceError, ValueError))
+    assert issubclass(InjectedCrash, (ResilienceError, RuntimeError))
+
+
+def test_classify_backend_error():
+    assert isinstance(
+        classify_backend_error(ValueError("state exceeds the VMEM budget")),
+        VmemBudgetExceeded,
+    )
+    assert isinstance(
+        classify_backend_error(RuntimeError("Mosaic lowering failed")),
+        KernelLoweringError,
+    )
+    wrapped = classify_backend_error(TypeError("something else entirely"))
+    assert isinstance(wrapped, KernelLoweringError)
+    assert isinstance(wrapped.__cause__, TypeError)
+    already = VmemBudgetExceeded("x")
+    assert classify_backend_error(already) is already
+
+
+def test_ladder_for_starts_at_spec_backend():
+    assert _ladder_for("pallas", None) == DEFAULT_LADDER
+    assert _ladder_for("xla", None) == ("xla", "reference")
+    assert _ladder_for("reference", None) == ("reference",)
+    assert _ladder_for("pallas", ("xla",)) == ("xla",)
+
+
+def test_fallback_demotes_pallas_on_cpu_host():
+    """The headline chain: a compiled-pallas spec on a host without the
+    accelerator demotes (with structured evidence) to the first rung that
+    can actually run — pallas_interpret."""
+    events = []
+    spec = spec_for_backend("megopolis", "pallas", num_iters=8)
+    r = build_with_fallback(spec, recorder=events)
+    assert r.spec.backend == "pallas_interpret"
+    assert [e["kind"] for e in events] == ["backend_demotion"]
+    assert events[0]["backend"] == "pallas"
+    assert events[0]["to_backend"] == "pallas_interpret"
+    assert events[0]["error_type"] in (
+        "KernelLoweringError", "VmemBudgetExceeded"
+    )
+    # and the demoted resampler is live
+    anc = r(jax.random.PRNGKey(0), jnp.full((N,), 1.0 / N))
+    assert anc.shape == (N,)
+
+
+def test_fallback_first_rung_healthy_is_silent():
+    events = []
+    spec = spec_for_backend("systematic", "xla")
+    r = build_with_fallback(spec, recorder=events)
+    assert r.spec.backend == "xla"
+    assert events == []
+
+
+def test_fallback_exhaustion_raises_typed_error():
+    spec = spec_for_backend("megopolis", "pallas", num_iters=8)
+    with pytest.raises(BackendUnavailable) as ei:
+        build_with_fallback(spec, ladder=("pallas",))
+    assert len(ei.value.failures) == 1
+    backend, cause = ei.value.failures[0]
+    assert backend == "pallas"
+    assert isinstance(cause, ResilienceError)
+
+
+def test_build_resilient_on_spec():
+    r = spec_for_backend("stratified", "pallas").build_resilient()
+    assert r.spec.backend == "pallas_interpret"
+
+
+# --------------------------------------- 3. sink crash consistency (S2)
+def test_sink_buffered_flush_on_close(tmp_path):
+    path = os.path.join(str(tmp_path), "buffered.jsonl")
+    sink = JsonlSink(path, buffer_size=100)
+    sink.emit("a", x=1)
+    sink.emit("b", x=2)
+    assert not os.path.exists(path)  # still buffered
+    sink.flush()
+    assert [json.loads(l)["event"] for l in open(path)] == ["a", "b"]
+    sink.emit("c")
+    sink.close()
+    assert [json.loads(l)["event"] for l in open(path)] == ["a", "b", "c"]
+    with pytest.raises(ValueError, match="closed"):
+        sink.emit("d")
+
+
+def test_sink_flushes_on_abnormal_exit(tmp_path):
+    """The §16 point: an exception inside the context must not lose the
+    buffered tail."""
+    path = os.path.join(str(tmp_path), "crash.jsonl")
+    with pytest.raises(RuntimeError, match="boom"):
+        with JsonlSink(path, buffer_size=1000) as sink:
+            sink.emit("before_crash", step=1)
+            raise RuntimeError("boom")
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["event"] for l in lines] == ["before_crash"]
+
+
+def test_sink_writethrough_default_unchanged(tmp_path):
+    path = os.path.join(str(tmp_path), "wt.jsonl")
+    sink = JsonlSink(path)
+    sink.emit("now")
+    assert [json.loads(l)["event"] for l in open(path)] == ["now"]
+
+
+def test_sink_rejects_bad_buffer_size(tmp_path):
+    with pytest.raises(ValueError):
+        JsonlSink(os.path.join(str(tmp_path), "x.jsonl"), buffer_size=0)
+
+
+# --------------------------------------------- 4. checkpointed runs (S4)
+def _toy_scan_parts():
+    def body(carry, x):
+        carry = carry * 1.000001 + jnp.sin(x)
+        return carry, jnp.stack([carry, carry * 2.0])
+
+    init = jnp.float32(0.25)
+    xs = jnp.linspace(0.0, 3.0, 11, dtype=jnp.float32)
+    return body, init, xs
+
+
+def test_checkpointed_scan_matches_monolith(tmp_path):
+    body, init, xs = _toy_scan_parts()
+    c0, ys0 = jax.lax.scan(body, init, xs)
+    pol = CheckpointPolicy(directory=str(tmp_path / "ck"), every=4)
+    c1, ys1 = checkpointed_scan(body, init, xs, pol)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(ys0), np.asarray(ys1))
+    assert checkpointed_scan(body, init, xs, None)[1].shape == ys0.shape
+
+
+def test_checkpointed_scan_kill_and_resume(tmp_path):
+    body, init, xs = _toy_scan_parts()
+    c0, ys0 = jax.lax.scan(body, init, xs)
+    d = str(tmp_path / "ck")
+    with pytest.raises(InjectedCrash):
+        checkpointed_scan(
+            body, init, xs, CheckpointPolicy(directory=d, every=3,
+                                             fail_after=6)
+        )
+    # the crash left a durable snapshot; resume completes bit-identically
+    c1, ys1 = checkpointed_scan(
+        body, init, xs, CheckpointPolicy(directory=d, every=3)
+    )
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(ys0), np.asarray(ys1))
+
+
+def test_checkpoint_policy_validation(tmp_path):
+    with pytest.raises(ValueError):
+        CheckpointPolicy(directory="")
+    with pytest.raises(ValueError):
+        CheckpointPolicy(directory=str(tmp_path), every=0)
+
+
+def _small_filter(ess_threshold=0.5):
+    from repro.pf.filter import ParticleFilter
+    from repro.pf.models import ungm
+
+    spec = spec_for_backend("systematic", "reference")
+    return ParticleFilter(model=ungm(), num_particles=256, resampler=spec,
+                          ess_threshold=ess_threshold)
+
+
+def test_run_filter_kill_and_resume_bit_identical(tmp_path, base_key):
+    """Satellite S4: kill ``run_filter`` at a snapshot boundary mid-scan,
+    resume, and get bit-identical estimates AND telemetry."""
+    from repro.pf.filter import run_filter
+
+    pf = _small_filter()
+    obs = jax.random.normal(jax.random.PRNGKey(21), (12,))
+    est0, tel0 = run_filter(base_key, pf, obs, telemetry=True)
+
+    d = str(tmp_path / "pfck")
+    with pytest.raises(InjectedCrash):
+        run_filter(base_key, pf, obs, telemetry=True,
+                   checkpoint=CheckpointPolicy(directory=d, every=4,
+                                               fail_after=8))
+    est1, tel1 = run_filter(base_key, pf, obs, telemetry=True,
+                            checkpoint=CheckpointPolicy(directory=d, every=4))
+    np.testing.assert_array_equal(np.asarray(est0), np.asarray(est1))
+    for a, b in zip(jax.tree_util.tree_leaves(tel0),
+                    jax.tree_util.tree_leaves(tel1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_smc_sampler_checkpoint_resume(tmp_path, base_key):
+    from repro.ais.sampler import SMCSamplerConfig, run_smc_sampler
+    from repro.ais.targets import isotropic_gaussian
+
+    target = isotropic_gaussian()
+    cfg = SMCSamplerConfig(num_particles=256, num_temps=8,
+                           resampler="systematic")
+    res0 = run_smc_sampler(base_key, target, cfg)
+
+    d = str(tmp_path / "aisck")
+    with pytest.raises(InjectedCrash):
+        run_smc_sampler(base_key, target, cfg,
+                        checkpoint=CheckpointPolicy(directory=d, every=3,
+                                                    fail_after=3))
+    res1 = run_smc_sampler(base_key, target, cfg,
+                           checkpoint=CheckpointPolicy(directory=d, every=3))
+    for k in res0:
+        np.testing.assert_array_equal(np.asarray(res0[k]),
+                                      np.asarray(res1[k]))

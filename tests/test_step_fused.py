@@ -31,6 +31,7 @@ import pytest
 
 from repro.analysis import count_pallas_calls
 from repro.core.metrics import (
+    degenerate_log_weights,
     effective_sample_size,
     log_mean_weight,
     log_weights_from_linear,
@@ -132,7 +133,7 @@ def _composed_step(r, key, log_w, particles, thr):
         max_normalised_weight(log_w),
     ])
     return p_out, ancestors, stats_from_vector(
-        stats4, unique_ancestor_count(ancestors)
+        stats4, unique_ancestor_count(ancestors), degenerate_log_weights(log_w)
     )
 
 
@@ -303,6 +304,53 @@ def _check_degenerate_step(name, backend, case, thr):
 
 
 _DEGEN_FAMILIES = ("megopolis", "metropolis", "rejection", "systematic", "residual")
+
+
+# The §16 COLLAPSED signatures: non-finite max, so the uniform fallback
+# engages (kernel-side deg latch ≡ host normalise_log_weights fallback);
+# the fused step must STILL match the composed oracle bit for bit,
+# including a truthful non-finite evidence increment when the resample
+# fires, and must set StepStats.degenerate.
+def _collapsed_cases(n):
+    return {
+        "all_nan": jnp.full((n,), jnp.nan),
+        "all_neg_inf": jnp.full((n,), -jnp.inf),
+        "pos_inf_entry": jnp.zeros((n,)).at[11].set(jnp.inf),
+    }
+
+
+@pytest.mark.parametrize("case", sorted(_collapsed_cases(4)))
+@pytest.mark.parametrize("thr", (0.5, 2.0))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", _DEGEN_FAMILIES)
+def test_step_collapsed_banks_match_composition(name, backend, thr, case,
+                                                base_key):
+    lw = _collapsed_cases(N)[case]
+    p = jax.random.normal(jax.random.PRNGKey(43), (N, 2))
+    r = _build(name, backend)
+    got = r.step(base_key, lw, p, thr)
+    exp = _composed_step(r, base_key, lw, p, thr)
+    _assert_tree_equal(got, exp)
+    _, anc, stats = got
+    assert bool(jnp.asarray(stats.degenerate))
+    # the fallback bank is uniform: ESS pegs at 1, max weight at 1/N
+    assert float(stats.ess_norm) == 1.0
+    assert float(stats.max_weight) == np.float32(1.0 / N)
+    assert bool(jnp.all((anc >= 0) & (anc < N)))
+
+
+@pytest.mark.parametrize("case", sorted(_collapsed_cases(4)))
+@pytest.mark.parametrize("name", ("megopolis", "systematic"))
+def test_step_collapsed_banks_bf16_plane(name, case, base_key):
+    """The §14 compressed plane composes with the §16 fallback: the
+    substitution precedes the requantise in kernel and host alike."""
+    lw = _collapsed_cases(N)[case]
+    p = jax.random.normal(jax.random.PRNGKey(44), (N, 2))
+    r = _build(name, "pallas_interpret", plane_dtype="bfloat16")
+    got = r.step(base_key, lw, p, 2.0)
+    exp = _composed_step(r, base_key, lw, p, 2.0)
+    _assert_tree_equal(got, exp)
+    assert bool(jnp.asarray(got[2].degenerate))
 
 try:
     from hypothesis import given, settings, strategies as st
